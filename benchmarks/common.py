@@ -1,0 +1,90 @@
+"""Shared benchmark machinery.
+
+Measurement protocol mirrors the paper (§IV-C): streams are warmed up past
+the sparse initial regime; a full WARM PASS over the measured updates
+compiles every static-shape bucket; then an identical fresh stream is
+measured. Reported per-step time is the IGPM elapsed time (the paper's
+reward signal and plotted quantity); clustering time is reported separately.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Tuple, Type
+
+import numpy as np
+
+from repro.config.base import IGPMConfig
+from repro.core.matcher import (AdaptiveMatcher, BatchMatcher,
+                                NaiveIncrementalMatcher, StepStats,
+                                _BaseMatcher)
+from repro.core.query import Query, clique4, square, star5, triangle
+from repro.data.temporal import TemporalGraphSpec, generate_stream, scaled_twin
+
+MATCHERS = {
+    "batch": BatchMatcher,
+    "inc": NaiveIncrementalMatcher,
+    "adaptive": AdaptiveMatcher,
+}
+
+QUERIES = {
+    "triangle": triangle,
+    "square": square,
+    "star5": star5,
+    "clique4": clique4,
+}
+
+# CPU-container scale for the Table III twins (scale=1.0 = published size).
+DEFAULT_SCALE = 0.02
+DEFAULT_STEPS = 8
+
+
+@dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def twin_cfg(spec: TemporalGraphSpec, fast: bool = True) -> IGPMConfig:
+    return IGPMConfig(
+        n_max=spec.n_vertices,
+        e_max=int(2.4 * spec.n_edges) + 4096,
+        rwr_iters=15 if fast else 25,
+        rwr_iters_incremental=4,
+        top_k_patterns=10 if fast else 20,
+        init_community_size=64)
+
+
+def run_matcher(kind: str, spec: TemporalGraphSpec, query: Query,
+                n_steps: int = DEFAULT_STEPS, warm: bool = True,
+                cfg: IGPMConfig | None = None
+                ) -> Tuple[List[StepStats], _BaseMatcher]:
+    cfg = cfg or twin_cfg(spec)
+    cls = MATCHERS[kind]
+    m = cls(query, cfg)
+    if warm:  # compile pass over an identical stream, SAME matcher instance
+        stream = generate_stream(spec, n_measured_steps=n_steps)
+        g = stream.graph
+        for upd in stream.updates:
+            g, _ = m.step(g, upd)
+        m.reset()
+    stream = generate_stream(spec, n_measured_steps=n_steps)
+    g = stream.graph
+    stats = []
+    for upd in stream.updates:
+        g, st = m.step(g, upd)
+        stats.append(st)
+    return stats, m
+
+
+def total_elapsed(stats: List[StepStats]) -> float:
+    return float(sum(s.elapsed for s in stats))
+
+
+def mean_us(stats: List[StepStats]) -> float:
+    return 1e6 * total_elapsed(stats) / max(len(stats), 1)

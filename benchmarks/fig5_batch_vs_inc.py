@@ -1,0 +1,30 @@
+"""Paper Fig. 5: elapsed time + speedup of batch vs naive-incremental IGPM
+with the SQUARE query across the four Table III dataset twins.
+
+Paper claim: incremental is 3.10–9.98× faster (square query)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (BenchRow, DEFAULT_SCALE, DEFAULT_STEPS,
+                               mean_us, run_matcher, total_elapsed)
+from repro.core.query import square
+from repro.data.temporal import DATASET_TWINS, scaled_twin
+
+
+def run(scale: float = DEFAULT_SCALE, steps: int = DEFAULT_STEPS
+        ) -> List[BenchRow]:
+    rows = []
+    q = square()
+    for name in DATASET_TWINS:
+        spec = scaled_twin(name, scale)
+        b_stats, _ = run_matcher("batch", spec, q, steps)
+        i_stats, _ = run_matcher("inc", spec, q, steps)
+        tb, ti = total_elapsed(b_stats), total_elapsed(i_stats)
+        speedup = tb / max(ti, 1e-9)
+        rows.append(BenchRow(f"fig5/{name}/batch", mean_us(b_stats),
+                             f"total_s={tb:.3f}"))
+        rows.append(BenchRow(f"fig5/{name}/inc", mean_us(i_stats),
+                             f"speedup_vs_batch={speedup:.2f}"))
+    return rows

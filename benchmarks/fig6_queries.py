@@ -1,0 +1,27 @@
+"""Paper Fig. 6: batch vs naive-incremental on the friends2008 twin across
+the four query patterns (triangle, square, star5, clique4).
+
+Paper claim: 9.5–10.1× across queries (speedup stable per data graph)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (BenchRow, DEFAULT_SCALE, DEFAULT_STEPS,
+                               QUERIES, mean_us, run_matcher, total_elapsed)
+from repro.data.temporal import scaled_twin
+
+
+def run(scale: float = DEFAULT_SCALE, steps: int = DEFAULT_STEPS
+        ) -> List[BenchRow]:
+    rows = []
+    spec = scaled_twin("friends2008", scale)
+    for qname, qf in QUERIES.items():
+        q = qf()
+        b_stats, _ = run_matcher("batch", spec, q, steps)
+        i_stats, _ = run_matcher("inc", spec, q, steps)
+        speedup = total_elapsed(b_stats) / max(total_elapsed(i_stats), 1e-9)
+        rows.append(BenchRow(f"fig6/{qname}/batch", mean_us(b_stats), ""))
+        rows.append(BenchRow(f"fig6/{qname}/inc", mean_us(i_stats),
+                             f"speedup_vs_batch={speedup:.2f}"))
+    return rows

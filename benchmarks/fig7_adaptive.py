@@ -1,0 +1,54 @@
+"""Paper Fig. 7/8: naive-incremental vs ADAPTIVE (PEM+DQN) incremental.
+
+Fig. 7: square query across the four dataset twins (claim: 1.17–1.96×).
+Fig. 8a/8c slice: per-query on friends2008 + sx-mathoverflow twins.
+
+Protocol: the paper's naive baseline is IGPM with a FIXED community size;
+the adaptive mode's value is tuning that granularity online. Both start
+from the same (deliberately mid-range) c; the adaptive run gets the warm
+pass as extra DQN experience (the paper trains over thousands of stream
+steps — our twins give it tens, so runs are longer here than in fig5/6)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import (BenchRow, DEFAULT_SCALE, DEFAULT_STEPS,
+                               QUERIES, mean_us, run_matcher, total_elapsed,
+                               twin_cfg)
+from repro.core.query import square
+from repro.data.temporal import DATASET_TWINS, scaled_twin
+
+FIXED_C = 192  # the naive mode's fixed community size (both modes start here)
+
+
+def run(scale: float = DEFAULT_SCALE, steps: int = DEFAULT_STEPS
+        ) -> List[BenchRow]:
+    steps = max(steps, 2 * DEFAULT_STEPS)  # DQN needs experience
+    rows = []
+    q = square()
+    for name in DATASET_TWINS:
+        spec = scaled_twin(name, scale)
+        cfg = dataclasses.replace(twin_cfg(spec), init_community_size=FIXED_C)
+        n_stats, _ = run_matcher("inc", spec, q, steps, cfg=cfg)
+        a_stats, am = run_matcher("adaptive", spec, q, steps, cfg=cfg)
+        speedup = total_elapsed(n_stats) / max(total_elapsed(a_stats), 1e-9)
+        c_path = [s.community_size for s in a_stats]
+        rows.append(BenchRow(f"fig7/{name}/naive", mean_us(n_stats), ""))
+        rows.append(BenchRow(
+            f"fig7/{name}/adaptive", mean_us(a_stats),
+            f"speedup_vs_naive={speedup:.2f};c_final={c_path[-1]};"
+            f"clustering_s={am.pem.clustering_time:.2f}"))
+    # Fig. 8 slice: per-query on sx-mathoverflow (the paper's best case)
+    spec = scaled_twin("sx-mathoverflow", scale)
+    cfg = dataclasses.replace(twin_cfg(spec), init_community_size=FIXED_C)
+    for qname, qf in QUERIES.items():
+        q2 = qf()
+        n_stats, _ = run_matcher("inc", spec, q2, steps, cfg=cfg)
+        a_stats, _ = run_matcher("adaptive", spec, q2, steps, cfg=cfg)
+        speedup = total_elapsed(n_stats) / max(total_elapsed(a_stats), 1e-9)
+        rows.append(BenchRow(f"fig8/sx-mathoverflow/{qname}/adaptive",
+                             mean_us(a_stats),
+                             f"speedup_vs_naive={speedup:.2f}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On CPU the interpreted Pallas timings are NOT hardware-meaningful (the
+kernel body runs in Python); the jnp reference timing is the CPU datapoint
+and the kernel's roofline-relevant numbers come from the dry-run. Reported
+here for harness completeness + correctness deltas."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow
+
+
+def _time(fn: Callable, *args, reps: int = 5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(scale: float = 1.0, steps: int = 0) -> List[BenchRow]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # spmv_ell (RWR sweep shape: label-RWR on a 16k-node graph)
+    from repro.kernels.spmv_ell.ref import ell_spmm_ref
+    from repro.sparse.ell import build_ell
+    n, m = 16384, 131072
+    g = build_ell(rng.integers(0, n, m), rng.integers(0, n, m), n, k=16)
+    x = jnp.asarray(rng.standard_normal((n, 4)).astype(np.float32))
+    ref = jax.jit(lambda: ell_spmm_ref(g.cols, g.vals, g.mask, g.row_ids,
+                                       x, n))
+    rows.append(BenchRow("kernel/spmv_ell/jnp_ref", _time(ref),
+                         f"n={n};nnz={m};d=4"))
+
+    # blockwise attention (prefill 2k slice)
+    from repro.models.layers import blockwise_attention
+    q = jnp.asarray(rng.standard_normal((1, 2048, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2048, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2048, 2, 64)).astype(np.float32))
+    att = jax.jit(lambda: blockwise_attention(q, k, v, causal=True))
+    rows.append(BenchRow("kernel/attention/jnp_blockwise", _time(att, reps=3),
+                         "B1xS2048xH8xhd64"))
+
+    # expert gemm
+    from repro.kernels.expert_gemm.ref import expert_gemm_ref
+    xe = jnp.asarray(rng.standard_normal((8, 256, 512)).astype(np.float32))
+    we = jnp.asarray(rng.standard_normal((8, 512, 768)).astype(np.float32))
+    eg = jax.jit(lambda: expert_gemm_ref(xe, we))
+    rows.append(BenchRow("kernel/expert_gemm/jnp_ref", _time(eg),
+                         "E8xC256xd512xf768"))
+    return rows

@@ -1,0 +1,59 @@
+"""Roofline table: reads reports/dryrun/*.json (the compiled dry-run
+artifacts) and emits the per-(arch × shape × mesh) three-term table used in
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import BenchRow
+
+REPORT_DIR = Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+
+
+def load_records(mesh: str = "16x16") -> List[dict]:
+    recs = []
+    for p in sorted(REPORT_DIR.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run(scale: float = 1.0, steps: int = 0) -> List[BenchRow]:
+    rows = []
+    for rec in load_records("16x16"):
+        r = rec.get("roofline", {})
+        if not r:
+            continue
+        rows.append(BenchRow(
+            f"roofline/{rec['arch']}/{rec['shape']}",
+            r["roofline_s"] * 1e6,
+            f"dominant={r['dominant']};compute_s={r['compute_s']:.4g};"
+            f"mem_s={r['memory_s']:.4g};coll_s={r['collective_s']:.4g};"
+            f"frac={r['compute_fraction']:.3f};"
+            f"mfr={rec.get('model_flops_ratio')}"))
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "dominant | roofline frac | model/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh):
+        r = rec.get("roofline", {})
+        if not r:
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['compute_fraction']:.3f} "
+            f"| {rec.get('model_flops_ratio', '—')} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,29 @@
+"""Beyond-paper: incremental-vs-batch speedup as a function of graph scale.
+
+The paper reports a single operating point per dataset; this sweep shows the
+speedup GROWING with twin scale (the recompute set is community-bounded
+while batch cost grows with the full graph) — the extrapolation behind
+EXPERIMENTS.md §Repro's fig5 verdict."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, run_matcher, total_elapsed
+from repro.core.query import square
+from repro.data.temporal import scaled_twin
+
+
+def run(scale: float = 0.0, steps: int = 8) -> List[BenchRow]:
+    rows = []
+    q = square()
+    for sc in (0.005, 0.01, 0.02, 0.04):
+        spec = scaled_twin("friends2008", sc)
+        b_stats, _ = run_matcher("batch", spec, q, steps)
+        i_stats, _ = run_matcher("inc", spec, q, steps)
+        speedup = total_elapsed(b_stats) / max(total_elapsed(i_stats), 1e-9)
+        rows.append(BenchRow(
+            f"scaling/friends2008@{sc:g}", 0.0,
+            f"vertices={spec.n_vertices};edges={spec.n_edges};"
+            f"speedup_inc_vs_batch={speedup:.2f}"))
+    return rows

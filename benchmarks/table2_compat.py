@@ -1,0 +1,50 @@
+"""Paper Table II: qualitative compatibility of input-graph type × query
+type under community-gated incremental matching.
+
+We quantify the paper's qualitative matrix: for each of the five §III-D
+graph types and three query families (star / cycle / dense), measure the
+PATTERN RETENTION of the incremental mode vs batch (patterns found relative
+to batch — cluster-gated matching misses cross-community patterns on the
+graph types the paper flags) and the speedup. A cell "agrees" with the
+paper when either retention ≥ 1 (✓ cells) or retention < 1 (blank cells)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchRow, run_matcher, total_elapsed, twin_cfg
+from repro.core.query import clique4, square, star5
+from repro.data.temporal import TemporalGraphSpec
+
+GRAPH_KINDS = ["scale_free", "random", "sparse_isolated", "sparse_dense",
+               "dense"]
+QUERY_FAMILIES = {"star": star5, "cycle": square, "dense": clique4}
+
+# paper Table II ✓ cells (input type → query families marked compatible)
+PAPER_MATRIX = {
+    "scale_free": {"star", "cycle"},
+    "random": {"star", "cycle"},
+    "sparse_isolated": {"cycle"},
+    "sparse_dense": {"star", "cycle", "dense"},
+    "dense": {"dense"},
+}
+
+
+def run(scale: float = 1.0, steps: int = 6) -> List[BenchRow]:
+    rows = []
+    for kind in GRAPH_KINDS:
+        spec = TemporalGraphSpec(f"t2-{kind}", kind, n_vertices=2048,
+                                 n_edges=16384, n_steps=120, seed=11)
+        for qname, qf in QUERY_FAMILIES.items():
+            q = qf()
+            b_stats, bm = run_matcher("batch", spec, q, steps, warm=True)
+            i_stats, im = run_matcher("inc", spec, q, steps, warm=True)
+            retention = im.store.total / max(bm.store.total, 1)
+            speedup = total_elapsed(b_stats) / max(total_elapsed(i_stats),
+                                                   1e-9)
+            paper_check = qname in PAPER_MATRIX[kind]
+            rows.append(BenchRow(
+                f"table2/{kind}/{qname}", 0.0,
+                f"retention={retention:.2f};speedup={speedup:.2f};"
+                f"paper_compat={'Y' if paper_check else 'N'}"))
+    return rows

@@ -1,0 +1,89 @@
+"""PEM-gated incremental GNN re-embedding on a dynamic graph.
+
+The paper's Partial Execution Manager generalizes beyond pattern matching
+(DESIGN.md §4): on a time-evolving graph served by a GNN encoder, each
+update step only re-encodes the nodes whose Louvain communities were
+touched — the same cluster-gated partial recomputation, applied to
+embeddings instead of matches.
+
+This driver compares, per update step:
+  full      — re-encode every node (the batch baseline)
+  pem       — re-encode only PEM-selected communities; report the recompute
+              fraction and the embedding staleness (max L2 drift vs full)
+
+Run:  PYTHONPATH=src python examples/dynamic_gnn_serving.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import GNNConfig, IGPMConfig
+from repro.core.graph import apply_update, updated_vertices
+from repro.core.pem import PartialExecutionManager
+from repro.data.temporal import TemporalGraphSpec, generate_stream
+from repro.models.gnn.common import GraphInputs
+from repro.models.gnn.meshgraphnet import MeshGraphNet
+
+
+def encode(model, params, g, feats):
+    em = np.asarray(g.edge_mask)
+    s = jnp.asarray(np.asarray(g.senders)[em])
+    r = jnp.asarray(np.asarray(g.receivers)[em])
+    inputs = GraphInputs(node_feat=feats, senders=s, receivers=r,
+                         targets=jnp.zeros((feats.shape[0], 1)))
+    return model.forward(params, inputs)
+
+
+def main() -> None:
+    spec = TemporalGraphSpec("serving", "sparse_dense", n_vertices=2048,
+                             n_edges=16384, n_steps=200, seed=3)
+    stream = generate_stream(spec, n_measured_steps=6)
+    cfg = GNNConfig(kind="meshgraphnet", n_layers=3, d_hidden=32,
+                    mlp_layers=2, d_out=1)
+    model = MeshGraphNet(cfg)
+    d_feat = 16
+    params = model.init(jax.random.PRNGKey(0), d_feat=d_feat, d_edge=4)
+    feats = jax.random.normal(jax.random.PRNGKey(1),
+                              (spec.n_vertices, d_feat))
+
+    pem = PartialExecutionManager(
+        IGPMConfig(n_max=spec.n_vertices, e_max=stream.graph.e_max,
+                   init_community_size=64), adaptive=True, seed=0)
+
+    g = stream.graph
+    emb = encode(model, params, g, feats)
+    print(f"{spec.n_vertices} nodes, {int(np.asarray(g.edge_mask).sum())} "
+          f"live arcs; encoder: meshgraphnet 3L/32")
+
+    for step, upd in enumerate(stream.updates):
+        g = apply_update(g, upd)
+        ids, mask = updated_vertices(g, upd, 4096)
+        upd_ids = np.asarray(jnp.where(mask, ids, -1))
+
+        t0 = time.perf_counter()
+        full = encode(model, params, g, feats)
+        jax.block_until_ready(full)
+        t_full = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rec_mask, frac = pem.recompute_mask(g, upd_ids)
+        partial = encode(model, params, g, feats)  # same program; in a real
+        # deployment the PEM mask gates an induced-subgraph encode (see
+        # core.subgraph) — here we quantify what it MAY skip
+        stale = jnp.where(jnp.asarray(rec_mask)[:, None], partial, emb)
+        jax.block_until_ready(stale)
+        t_pem = time.perf_counter() - t0
+        drift = float(jnp.linalg.norm(full - stale, axis=1).max())
+        emb = stale
+        c, _ = pem.feedback(g, frac, t_pem)
+        print(f"step {step}: recompute {int(rec_mask.sum()):5d}/"
+              f"{spec.n_vertices} nodes ({rec_mask.mean():5.1%}) "
+              f"c={c:3d} staleness(maxL2)={drift:.4f} "
+              f"t_full={t_full*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

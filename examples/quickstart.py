@@ -1,0 +1,70 @@
+"""Quickstart: adaptive incremental graph pattern matching (IGPM-PEM).
+
+Builds a synthetic temporal social graph (a scaled statistical twin of the
+paper's friends2008 stream), then watches the three matchers from the paper
+process the same update stream:
+
+  Batch      — re-run G-Ray from scratch every step
+  Inc        — IGPM on update-touched communities (fixed size)
+  Adaptive   — IGPM-PEM: a DQN adapts the community granularity online
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.config.base import IGPMConfig
+from repro.core.matcher import (AdaptiveMatcher, BatchMatcher,
+                                NaiveIncrementalMatcher)
+from repro.core.query import square
+from repro.data.temporal import generate_stream, scaled_twin
+
+
+def main() -> None:
+    spec = scaled_twin("friends2008", scale=0.01, n_steps=200)
+    cfg = IGPMConfig(n_max=spec.n_vertices,
+                     e_max=int(2.4 * spec.n_edges) + 4096,
+                     rwr_iters=15, rwr_iters_incremental=4,
+                     top_k_patterns=10, init_community_size=64)
+    query = square()
+    print(f"stream: {spec.n_vertices} vertices, {spec.n_edges} edges "
+          f"({spec.kind}); query: {query.name}")
+
+    results = {}
+    for name, cls in [("batch", BatchMatcher),
+                      ("inc", NaiveIncrementalMatcher),
+                      ("adaptive", AdaptiveMatcher)]:
+        # warm pass on an identical stream compiles every bucket shape
+        matcher = cls(query, cfg)
+        stream = generate_stream(spec, n_measured_steps=8)
+        g = stream.graph
+        for upd in stream.updates:
+            g, _ = matcher.step(g, upd)
+        matcher.reset()
+
+        stream = generate_stream(spec, n_measured_steps=8)
+        g = stream.graph
+        t0 = time.time()
+        elapsed = 0.0
+        for upd in stream.updates:
+            g, st = matcher.step(g, upd)
+            elapsed += st.elapsed
+        results[name] = (elapsed, matcher.store.total, matcher.store.exact,
+                         st.n_recompute)
+        print(f"{name:9s} igpm={elapsed:7.3f}s wall={time.time()-t0:6.1f}s "
+              f"patterns={matcher.store.total:4d} "
+              f"(exact={matcher.store.exact}) "
+              f"last-step recompute={st.n_recompute}")
+
+    b, i = results["batch"][0], results["inc"][0]
+    print(f"\nincremental speedup vs batch: {b / max(i, 1e-9):.2f}x "
+          f"(paper: 3.1-10.1x at full scale)")
+    print(f"patterns found: batch={results['batch'][1]} "
+          f"adaptive={results['adaptive'][1]} "
+          f"(paper: incremental finds 25-73% more)")
+
+
+if __name__ == "__main__":
+    main()

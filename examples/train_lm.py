@@ -1,0 +1,76 @@
+"""End-to-end training driver: decoder-only LM on the synthetic corpus with
+the full substrate — AdamW, warmup-cosine, grad clipping, checkpointing +
+restart, straggler monitor.
+
+Presets (this container is a single CPU core — scale accordingly):
+  tiny (default) : 6L/d192 ≈ 8M params, seq 128 — a few minutes
+  smollm         : the REAL smollm-135m config (30L/d576/GQA/tied) at
+                   short seq — "~100M model for a few hundred steps"
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+      PYTHONPATH=src python examples/train_lm.py --preset smollm --steps 200
+Kill it and re-run: it resumes from the last committed checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.config.registry import get_arch
+from repro.data.lm import TokenPipeline
+from repro.models.transformer import TransformerLM
+from repro.train.loop import TrainLoop
+from repro.train.state import make_train_step, new_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["tiny", "smollm"], default="tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_arch("smollm-135m").model
+    if args.preset == "tiny":
+        cfg = dataclasses.replace(cfg, n_layers=6, d_model=192, n_heads=6,
+                                  n_kv_heads=2, d_ff=512, vocab_size=4096,
+                                  dtype="float32", remat="none")
+        args.seq = min(args.seq, 128)
+    else:
+        cfg = dataclasses.replace(cfg, dtype="float32", remat="none")
+        args.seq = min(args.seq, 64)
+        args.batch = min(args.batch, 4)
+
+    model = TransformerLM(cfg)
+    print(f"preset={args.preset}: {cfg.n_layers}L d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    tcfg = TrainConfig(learning_rate=3e-3 if args.preset == "tiny" else 6e-4,
+                       warmup_steps=20, total_steps=args.steps,
+                       checkpoint_every=50, checkpoint_dir=args.ckpt_dir)
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    def batch_fn(step):
+        t, l = pipe.batch_at(step)
+        return jnp.asarray(t), jnp.asarray(l)
+
+    state = new_train_state(model.init(jax.random.PRNGKey(0)))
+    loop = TrainLoop(make_train_step(model.loss, tcfg), state, batch_fn,
+                     tcfg, log_every=10)
+    metrics = loop.run(n_steps=args.steps - loop.start_step)
+
+    first = metrics.losses[0] if metrics.losses else float("nan")
+    last = (sum(metrics.losses[-10:]) / max(len(metrics.losses[-10:]), 1)
+            if metrics.losses else float("nan"))
+    print(f"\nloss: first={first:.4f} last10={last:.4f} "
+          f"(uniform = {jnp.log(cfg.vocab_size):.2f})")
+    print(f"checkpoints in {args.ckpt_dir}: kill + re-run to test restart")
+
+
+if __name__ == "__main__":
+    main()

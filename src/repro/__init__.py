@@ -1,0 +1,8 @@
+"""repro — IGPM-PEM: adaptive incremental graph pattern matching in JAX.
+
+Production-grade reproduction + extension of:
+  Kanezashi et al., "Adaptive Pattern Matching with Reinforcement Learning
+  for Dynamic Graphs" (2018).
+"""
+
+__version__ = "1.0.0"

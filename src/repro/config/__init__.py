@@ -1,0 +1,25 @@
+from repro.config.base import (
+    ArchConfig,
+    BSTConfig,
+    GNNConfig,
+    IGPMConfig,
+    MeshConfig,
+    ShapeSpec,
+    TrainConfig,
+    TransformerConfig,
+)
+from repro.config.registry import get_arch, list_archs, register_arch
+
+__all__ = [
+    "ArchConfig",
+    "BSTConfig",
+    "GNNConfig",
+    "IGPMConfig",
+    "MeshConfig",
+    "ShapeSpec",
+    "TrainConfig",
+    "TransformerConfig",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+]

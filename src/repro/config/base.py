@@ -1,0 +1,269 @@
+"""Dataclass config system.
+
+Every selectable architecture (``--arch <id>``) is an :class:`ArchConfig`
+holding a family-specific model config plus its assigned input-shape set.
+Configs are plain frozen dataclasses so they hash, compare, and print well,
+and so a reduced "smoke" variant is just ``dataclasses.replace``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell assigned to an architecture.
+
+    ``kind`` selects which step function is lowered in the dry-run:
+      - ``train``    → train_step (fwd + bwd + optimizer)
+      - ``prefill``  → prefill forward (no bwd)
+      - ``decode``   → serve_step (1 new token against a KV cache)
+      - ``serve``    → inference forward (GNN / recsys scoring)
+    ``dims`` carries the published numbers verbatim.
+    """
+
+    name: str
+    kind: str
+    dims: Dict[str, int] = field(default_factory=dict)
+
+    def dim(self, key: str, default: Optional[int] = None) -> int:
+        if key in self.dims:
+            return self.dims[key]
+        if default is None:
+            raise KeyError(f"shape {self.name} has no dim {key!r}")
+        return default
+
+
+# ---------------------------------------------------------------------------
+# Family configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    router_jitter: float = 0.0
+    # 'expert' → shard the expert axis over "model" (EP);
+    # 'ffn'    → shard each expert's d_ff over "model" (TP). Hillclimb knob.
+    moe_shard: str = "expert"
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    dtype: str = "bfloat16"
+    # remat: 'none' | 'full' | 'dots' — activation checkpoint policy (hillclimb knob)
+    remat: str = "full"
+    # use the Pallas flash-attention kernel path (TPU); jnp path otherwise
+    use_flash: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + per-layer + head)."""
+        d, h, kv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        per_layer = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d  # qkvo
+        per_layer += 2 * d  # norms
+        if self.moe is None:
+            per_layer += 3 * d * self.d_ff  # gate/up/down (SwiGLU)
+        else:
+            m = self.moe
+            per_layer += d * m.n_experts  # router
+            per_layer += m.n_experts * 3 * d * m.d_ff_expert
+            per_layer += m.n_shared_experts * 3 * d * self.d_ff
+        n = self.n_layers * per_layer
+        n += self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d  # lm head
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        dense = self.param_count() - self.n_layers * m.n_experts * 3 * d * m.d_ff_expert
+        active = self.n_layers * (m.top_k + m.n_shared_experts) * 3 * d * m.d_ff_expert
+        return dense + active
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    kind: str  # schnet | dimenet | graphcast | meshgraphnet
+    n_layers: int
+    d_hidden: int
+    # schnet
+    n_rbf: int = 0
+    cutoff: float = 0.0
+    # dimenet
+    n_bilinear: int = 0
+    n_spherical: int = 0
+    n_radial: int = 0
+    # graphcast
+    mesh_refinement: int = 0
+    n_vars: int = 0
+    aggregator: str = "sum"
+    # meshgraphnet
+    mlp_layers: int = 2
+    d_out: int = 1
+    dtype: str = "float32"
+    # cap on triplets per edge for angular models on generic graphs
+    triplets_per_edge: int = 8
+
+
+@dataclass(frozen=True)
+class BSTConfig:
+    """Behavior Sequence Transformer (Alibaba, arXiv:1905.06874)."""
+
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    n_items: int = 4_194_304  # production-scale sparse item table (2^22)
+    n_cates: int = 16_384
+    n_user_feats: int = 8  # other-feature fields (user profile / context)
+    user_feat_vocab: int = 65_536
+    dtype: str = "float32"
+    leaky_slope: float = 0.01
+
+
+@dataclass(frozen=True)
+class IGPMConfig:
+    """The paper's own system configuration (§III–IV)."""
+
+    # graph capacities (static shapes for jit)
+    n_max: int = 4096
+    e_max: int = 65536
+    ell_width: int = 64  # padded neighbor-list width K
+    n_labels: int = 4
+    # RWR
+    restart_prob: float = 0.15  # c in the paper's RWR
+    rwr_iters: int = 30
+    rwr_iters_incremental: int = 5  # warm-started sweeps
+    # G-Ray
+    max_query_nodes: int = 8
+    bridge_hops: int = 4
+    top_k_patterns: int = 20
+    # PEM
+    init_community_size: int = 64
+    min_community_size: int = 2
+    max_community_size: int = 4096
+    # DQN (paper: 2 hidden layers x 4 units, 2-d obs, 2 actions, eps=0.5)
+    dqn_hidden: Tuple[int, ...] = (4, 4)
+    dqn_obs_dim: int = 2
+    dqn_n_actions: int = 2
+    epsilon: float = 0.5
+    gamma: float = 0.9
+    dqn_lr: float = 1e-2
+    replay_capacity: int = 512
+    replay_batch: int = 16
+    target_update_every: int = 10
+
+
+# ---------------------------------------------------------------------------
+# Arch + run configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    # error-feedback top-k gradient compression ratio (1.0 = off)
+    grad_compression: float = 1.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str  # 'lm' | 'gnn' | 'recsys' | 'igpm'
+    model: Any  # TransformerConfig | GNNConfig | BSTConfig | IGPMConfig
+    shapes: Tuple[ShapeSpec, ...]
+    source: str = ""  # citation tag from the assignment
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"arch {self.arch_id} has no shape {name!r}")
+
+    def replace_model(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, model=dataclasses.replace(self.model, **kw))
+
+
+# Canonical LM shape set (assigned to every LM-family arch).
+LM_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+    ShapeSpec("prefill_32k", "prefill", {"seq_len": 32768, "global_batch": 32}),
+    ShapeSpec("decode_32k", "decode", {"seq_len": 32768, "global_batch": 128}),
+    ShapeSpec("long_500k", "decode", {"seq_len": 524288, "global_batch": 1}),
+)
+
+# Canonical GNN shape set.
+GNN_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("full_graph_sm", "train",
+              {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433}),
+    ShapeSpec("minibatch_lg", "train",
+              {"n_nodes": 232965, "n_edges": 114615892, "batch_nodes": 1024,
+               "fanout1": 15, "fanout2": 10, "d_feat": 602}),
+    ShapeSpec("ogb_products", "train",
+              {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100}),
+    ShapeSpec("molecule", "train",
+              {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 16}),
+)
+
+# Canonical recsys (BST) shape set.
+BST_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_batch", "train", {"batch": 65536}),
+    ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    ShapeSpec("retrieval_cand", "serve", {"batch": 1, "n_candidates": 1000000}),
+)

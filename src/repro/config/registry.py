@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each module in ``repro.configs`` registers one :class:`ArchConfig` factory
+(full published config) and a ``smoke`` factory (reduced same-family config
+for CPU tests). Importing :mod:`repro.configs` populates the registry.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config.base import ArchConfig
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ArchConfig]] = {}
+
+_CONFIG_MODULES = [
+    "qwen2_72b",
+    "deepseek_7b",
+    "smollm_135m",
+    "qwen3_moe_30b_a3b",
+    "dbrx_132b",
+    "dimenet",
+    "schnet",
+    "graphcast",
+    "meshgraphnet",
+    "bst",
+    "igpm_paper",
+]
+
+
+def register_arch(arch_id: str, full: Callable[[], ArchConfig],
+                  smoke: Callable[[], ArchConfig]) -> None:
+    _REGISTRY[arch_id] = full
+    _SMOKE[arch_id] = smoke
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    for mod in _CONFIG_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(arch_id: str, smoke: bool = False) -> ArchConfig:
+    _ensure_loaded()
+    table = _SMOKE if smoke else _REGISTRY
+    if arch_id not in table:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(table)}")
+    return table[arch_id]()
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,20 @@
+"""Architecture configs (``--arch <id>``). Importing this package populates
+the registry with all 10 assigned architectures + the paper's own system."""
+
+from repro.config.registry import get_arch, list_archs
+
+from repro.configs import (  # noqa: F401  (registration side effects)
+    bst,
+    dbrx_132b,
+    deepseek_7b,
+    dimenet,
+    graphcast,
+    igpm_paper,
+    meshgraphnet,
+    qwen2_72b,
+    qwen3_moe_30b_a3b,
+    schnet,
+    smollm_135m,
+)
+
+__all__ = ["get_arch", "list_archs"]

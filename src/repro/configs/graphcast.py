@@ -1,0 +1,25 @@
+"""graphcast [gnn] — n_layers=16 d_hidden=512 mesh_refinement=6
+aggregator=sum n_vars=227; encoder-processor-decoder mesh GNN.
+[arXiv:2212.12794; unverified]"""
+
+from repro.config.base import GNN_SHAPES, ArchConfig, GNNConfig
+from repro.config.registry import register_arch
+
+FULL = GNNConfig(dtype="bfloat16", kind="graphcast", n_layers=16, d_hidden=512,
+                 mesh_refinement=6, n_vars=227, aggregator="sum", d_out=227)
+
+SMOKE = GNNConfig(kind="graphcast", n_layers=2, d_hidden=32,
+                  mesh_refinement=1, n_vars=8, aggregator="sum", d_out=8)
+
+
+def full() -> ArchConfig:
+    return ArchConfig("graphcast", "gnn", FULL, GNN_SHAPES,
+                      source="arXiv:2212.12794; unverified")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig("graphcast", "gnn", SMOKE, GNN_SHAPES,
+                      source="arXiv:2212.12794; unverified")
+
+
+register_arch("graphcast", full, smoke)

@@ -1,0 +1,30 @@
+# The paper's primary contribution: IGPM (incremental G-Ray) + PEM
+# (Louvain clustering gated by a DQN) — see DESIGN.md §1.
+from repro.core.graph import (
+    DynamicGraph,
+    UpdateBatch,
+    add_edges,
+    apply_update,
+    new_graph,
+    remove_edges,
+    set_labels,
+)
+from repro.core.query import Query, clique4, square, star5, triangle
+from repro.core.rwr import label_rwr, rwr
+from repro.core.gray import GRayResult, gray_match
+from repro.core.louvain import louvain, louvain_constrained
+from repro.core.dqn import DQNAgent
+from repro.core.pem import PartialExecutionManager
+from repro.core.matcher import AdaptiveMatcher, BatchMatcher, NaiveIncrementalMatcher
+
+__all__ = [
+    "DynamicGraph", "UpdateBatch", "new_graph", "add_edges", "remove_edges",
+    "set_labels", "apply_update",
+    "Query", "triangle", "square", "star5", "clique4",
+    "rwr", "label_rwr",
+    "GRayResult", "gray_match",
+    "louvain", "louvain_constrained",
+    "DQNAgent",
+    "PartialExecutionManager",
+    "BatchMatcher", "NaiveIncrementalMatcher", "AdaptiveMatcher",
+]

@@ -1,0 +1,143 @@
+"""DQN (Mnih et al. 2015) — PEM's reinforcement-learning sub-component.
+
+Exactly the paper's shape (§III-C-3): 2-d observation (graph density,
+fraction of affected communities), two fully-connected hidden layers of four
+units, 2-action output (increment / decrement the minimum community size),
+ε-greedy with ε = 0.5 (§IV-C). Pure JAX: the network, TD loss, Adam, and the
+target network are all in-repo (no keras-rl / TF).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import IGPMConfig
+
+
+def _init_mlp(key, sizes) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k1 = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b)) * jnp.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def _mlp(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+         n_layers: int) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+class Transition(NamedTuple):
+    obs: np.ndarray
+    action: int
+    reward: float
+    next_obs: np.ndarray
+    done: bool
+
+
+class ReplayBuffer:
+    """Host-side ring buffer (data pipeline component, not device state)."""
+
+    def __init__(self, capacity: int, obs_dim: int, seed: int = 0):
+        self.capacity = capacity
+        self.obs = np.zeros((capacity, obs_dim), np.float32)
+        self.next_obs = np.zeros((capacity, obs_dim), np.float32)
+        self.actions = np.zeros(capacity, np.int32)
+        self.rewards = np.zeros(capacity, np.float32)
+        self.dones = np.zeros(capacity, bool)
+        self.size = 0
+        self.cursor = 0
+        self._rng = np.random.default_rng(seed)
+
+    def push(self, t: Transition) -> None:
+        i = self.cursor
+        self.obs[i] = t.obs
+        self.next_obs[i] = t.next_obs
+        self.actions[i] = t.action
+        self.rewards[i] = t.reward
+        self.dones[i] = t.done
+        self.cursor = (i + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch: int):
+        idx = self._rng.integers(0, self.size, size=batch)
+        return (self.obs[idx], self.actions[idx], self.rewards[idx],
+                self.next_obs[idx], self.dones[idx])
+
+
+@partial(jax.jit, static_argnames=("n_layers", "gamma"))
+def _td_loss_and_grad(params, target_params, obs, actions, rewards, next_obs,
+                      dones, n_layers: int, gamma: float):
+    def loss_fn(p):
+        q = _mlp(p, obs, n_layers)                       # (B, A)
+        q_sel = jnp.take_along_axis(q, actions[:, None], axis=1)[:, 0]
+        q_next = _mlp(target_params, next_obs, n_layers).max(axis=1)
+        tgt = rewards + gamma * q_next * (1.0 - dones.astype(jnp.float32))
+        return jnp.mean((q_sel - jax.lax.stop_gradient(tgt)) ** 2)
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+@jax.jit
+def _adam_update(params, grads, m, v, t, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    new_v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1 ** t), new_m)
+    vh = jax.tree.map(lambda a: a / (1 - b2 ** t), new_v)
+    new_p = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                         params, mh, vh)
+    return new_p, new_m, new_v
+
+
+class DQNAgent:
+    def __init__(self, cfg: IGPMConfig, seed: int = 0):
+        self.cfg = cfg
+        sizes = (cfg.dqn_obs_dim,) + tuple(cfg.dqn_hidden) + (cfg.dqn_n_actions,)
+        self.n_layers = len(sizes) - 1
+        key = jax.random.PRNGKey(seed)
+        self.params = _init_mlp(key, sizes)
+        self.target_params = jax.tree.map(jnp.copy, self.params)
+        self.m = jax.tree.map(jnp.zeros_like, self.params)
+        self.v = jax.tree.map(jnp.zeros_like, self.params)
+        self.t = 0
+        self.replay = ReplayBuffer(cfg.replay_capacity, cfg.dqn_obs_dim,
+                                   seed=seed)
+        self._rng = np.random.default_rng(seed + 1)
+        self._q = jax.jit(lambda p, o: _mlp(p, o, self.n_layers))
+
+    def q_values(self, obs: np.ndarray) -> np.ndarray:
+        return np.asarray(self._q(self.params, jnp.asarray(obs, jnp.float32)))
+
+    def act(self, obs: np.ndarray) -> int:
+        """ε-greedy (paper §IV-C: ε = 0.5)."""
+        if self._rng.random() < self.cfg.epsilon:
+            return int(self._rng.integers(self.cfg.dqn_n_actions))
+        return int(np.argmax(self.q_values(obs[None])[0]))
+
+    def observe(self, t: Transition) -> float:
+        """Push a transition and do one learning step. Returns TD loss."""
+        self.replay.push(t)
+        if self.replay.size < self.cfg.replay_batch:
+            return 0.0
+        obs, act, rew, nxt, done = self.replay.sample(self.cfg.replay_batch)
+        loss, grads = _td_loss_and_grad(
+            self.params, self.target_params, jnp.asarray(obs),
+            jnp.asarray(act), jnp.asarray(rew), jnp.asarray(nxt),
+            jnp.asarray(done), n_layers=self.n_layers, gamma=self.cfg.gamma)
+        self.t += 1
+        self.params, self.m, self.v = _adam_update(
+            self.params, grads, self.m, self.v, self.t, self.cfg.dqn_lr)
+        if self.t % self.cfg.target_update_every == 0:
+            self.target_params = jax.tree.map(jnp.copy, self.params)
+        return float(loss)

@@ -1,0 +1,193 @@
+"""Dynamic attributed graph with static (jit-able) shapes.
+
+The paper's input is a stream of timestamped updates over an attributed
+graph: edge additions, edge removals, vertex label changes (§III-B). We keep
+preallocated COO buffers (capacity ``e_max``) + masks so every update and
+every RWR sweep is a fixed-shape jitted program; the edge cursor and the
+degree vector are maintained incrementally.
+
+Graphs are stored *directed*; undirected inputs insert both arcs. All arrays
+live on device; builders accept numpy.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DynamicGraph(NamedTuple):
+    senders: jnp.ndarray    # int32[e_max]
+    receivers: jnp.ndarray  # int32[e_max]
+    edge_mask: jnp.ndarray  # bool[e_max]
+    labels: jnp.ndarray     # int32[n_max]
+    node_mask: jnp.ndarray  # bool[n_max]
+    degree: jnp.ndarray     # f32[n_max]  (out-degree over live edges)
+    n_edges: jnp.ndarray    # int32 scalar — edge cursor (monotone)
+
+    @property
+    def n_max(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def e_max(self) -> int:
+        return self.senders.shape[0]
+
+
+class UpdateBatch(NamedTuple):
+    """One timestep of graph updates, padded to static widths.
+
+    add_*:   endpoints of added arcs (u_max wide, masked)
+    rem_*:   endpoints of removed arcs
+    lab_ids/lab_vals: vertex label changes
+    """
+
+    add_src: jnp.ndarray
+    add_dst: jnp.ndarray
+    add_mask: jnp.ndarray
+    rem_src: jnp.ndarray
+    rem_dst: jnp.ndarray
+    rem_mask: jnp.ndarray
+    lab_ids: jnp.ndarray
+    lab_vals: jnp.ndarray
+    lab_mask: jnp.ndarray
+
+    @staticmethod
+    def empty(u_max: int) -> "UpdateBatch":
+        z = jnp.zeros((u_max,), jnp.int32)
+        f = jnp.zeros((u_max,), bool)
+        return UpdateBatch(z, z, f, z, z, f, z, z, f)
+
+    @staticmethod
+    def additions(src: np.ndarray, dst: np.ndarray, u_max: int,
+                  undirected: bool = True) -> "UpdateBatch":
+        """Host helper: pack an edge-addition batch (optionally both arcs)."""
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        if undirected:
+            src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
+        k = len(src)
+        if k > u_max:
+            raise ValueError(f"update batch {k} exceeds u_max {u_max}")
+        pad = u_max - k
+        b = UpdateBatch.empty(u_max)
+        return b._replace(
+            add_src=jnp.asarray(np.pad(src, (0, pad))),
+            add_dst=jnp.asarray(np.pad(dst, (0, pad))),
+            add_mask=jnp.asarray(np.arange(u_max) < k),
+        )
+
+
+def new_graph(n_max: int, e_max: int, labels: Optional[np.ndarray] = None,
+              senders: Optional[np.ndarray] = None,
+              receivers: Optional[np.ndarray] = None,
+              n_nodes: Optional[int] = None) -> DynamicGraph:
+    """Allocate a graph with capacity (n_max, e_max), optionally pre-filled."""
+    lab = np.zeros(n_max, np.int32)
+    nm = np.zeros(n_max, bool)
+    if labels is not None:
+        lab[: len(labels)] = labels
+        nm[: len(labels)] = True
+    elif n_nodes is not None:
+        nm[:n_nodes] = True
+    s = np.zeros(e_max, np.int32)
+    r = np.zeros(e_max, np.int32)
+    em = np.zeros(e_max, bool)
+    ne = 0
+    if senders is not None:
+        assert receivers is not None
+        ne = len(senders)
+        if ne > e_max:
+            raise ValueError(f"{ne} initial edges exceed e_max {e_max}")
+        s[:ne] = senders
+        r[:ne] = receivers
+        em[:ne] = True
+    deg = np.zeros(n_max, np.float32)
+    if ne:
+        np.add.at(deg, s[:ne], 1.0)
+    return DynamicGraph(jnp.asarray(s), jnp.asarray(r), jnp.asarray(em),
+                        jnp.asarray(lab), jnp.asarray(nm), jnp.asarray(deg),
+                        jnp.asarray(ne, jnp.int32))
+
+
+def add_edges(g: DynamicGraph, src: jnp.ndarray, dst: jnp.ndarray,
+              mask: jnp.ndarray) -> DynamicGraph:
+    """Append masked arc batch at the cursor (jit-able, fixed batch width)."""
+    u = src.shape[0]
+    k = mask.astype(jnp.int32)
+    # pack live entries contiguously so the cursor advances by popcount(mask)
+    pos = jnp.cumsum(k) - k  # slot offset of each live entry
+    slots = jnp.where(mask, g.n_edges + pos, g.e_max)  # dead → OOB (dropped)
+    senders = g.senders.at[slots].set(src, mode="drop")
+    receivers = g.receivers.at[slots].set(dst, mode="drop")
+    edge_mask = g.edge_mask.at[slots].set(mask, mode="drop")
+    deg = g.degree.at[jnp.where(mask, src, g.n_max)].add(
+        mask.astype(g.degree.dtype), mode="drop")
+    node_mask = g.node_mask.at[jnp.where(mask, src, g.n_max)].set(True, mode="drop")
+    node_mask = node_mask.at[jnp.where(mask, dst, g.n_max)].set(True, mode="drop")
+    return g._replace(senders=senders, receivers=receivers,
+                      edge_mask=edge_mask, degree=deg, node_mask=node_mask,
+                      n_edges=g.n_edges + k.sum())
+
+
+def remove_edges(g: DynamicGraph, src: jnp.ndarray, dst: jnp.ndarray,
+                 mask: jnp.ndarray) -> DynamicGraph:
+    """Remove arcs by endpoint match (first live occurrence each)."""
+    def body(i, carry):
+        em, deg = carry
+        hit = (g.senders == src[i]) & (g.receivers == dst[i]) & em & mask[i]
+        first = jnp.argmax(hit)  # 0 if no hit — guarded by any_hit
+        any_hit = hit.any()
+        em = em.at[first].set(jnp.where(any_hit, False, em[first]))
+        deg = deg.at[src[i]].add(jnp.where(any_hit, -1.0, 0.0))
+        return em, deg
+
+    em, deg = jax.lax.fori_loop(0, src.shape[0], body,
+                                (g.edge_mask, g.degree))
+    return g._replace(edge_mask=em, degree=deg)
+
+
+def set_labels(g: DynamicGraph, ids: jnp.ndarray, vals: jnp.ndarray,
+               mask: jnp.ndarray) -> DynamicGraph:
+    idx = jnp.where(mask, ids, g.n_max)
+    return g._replace(labels=g.labels.at[idx].set(vals, mode="drop"))
+
+
+def apply_update(g: DynamicGraph, upd: UpdateBatch) -> DynamicGraph:
+    g = add_edges(g, upd.add_src, upd.add_dst, upd.add_mask)
+    g = remove_edges(g, upd.rem_src, upd.rem_dst, upd.rem_mask)
+    g = set_labels(g, upd.lab_ids, upd.lab_vals, upd.lab_mask)
+    return g
+
+
+def updated_vertices(g: DynamicGraph, upd: UpdateBatch,
+                     v_max: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """V_l of the paper: endpoints of updated arcs + relabelled vertices.
+
+    Returns (ids int32[v_max], mask bool[v_max]) — duplicates permitted
+    (consumers operate on the implied boolean vertex mask).
+    """
+    ids = jnp.concatenate([upd.add_src, upd.add_dst, upd.rem_src,
+                           upd.rem_dst, upd.lab_ids])
+    mk = jnp.concatenate([upd.add_mask, upd.add_mask, upd.rem_mask,
+                          upd.rem_mask, upd.lab_mask])
+    if ids.shape[0] > v_max:
+        raise ValueError(f"v_max {v_max} < update width {ids.shape[0]}")
+    pad = v_max - ids.shape[0]
+    return (jnp.pad(ids, (0, pad)), jnp.pad(mk, (0, pad)))
+
+
+def vertex_mask(ids: jnp.ndarray, mask: jnp.ndarray, n_max: int) -> jnp.ndarray:
+    """Boolean vertex mask from a padded id list."""
+    out = jnp.zeros((n_max + 1,), bool)
+    return out.at[jnp.where(mask, ids, n_max)].set(True)[:n_max]
+
+
+def transition_weights(g: DynamicGraph) -> jnp.ndarray:
+    """Per-arc random-walk weight 1/deg(sender), 0 for dead arcs."""
+    safe = jnp.maximum(g.degree, 1.0)
+    w = 1.0 / safe[g.senders]
+    return jnp.where(g.edge_mask, w, 0.0)

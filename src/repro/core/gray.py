@@ -1,0 +1,212 @@
+"""G-Ray: best-effort approximate subgraph isomorphism (Tong et al. KDD'07),
+vectorized for TPU — the base matcher the paper extends (§III-A).
+
+The three core functions map onto dense array ops:
+
+  seed-finder        → masked top-k over the label-conditioned RWR goodness
+  neighbor-expander  → argmax of single-source RWR among label-compatible,
+                       unused candidates (k seeds expand in one (n,k) batch)
+  bridge             → bounded-hop BFS reachability sweep (hop count of the
+                       best connecting path; direct edge ⇒ hop 1 ⇒ exact)
+
+The query expansion schedule is host-static (Query.order_*), so we *unroll*
+it and memoize the RWR/bridge tables per query-source vertex: a star-5 query
+runs ONE RWR for all four expansions instead of four (a beyond-paper
+optimization recorded in EXPERIMENTS.md §Perf; the paper recomputes per
+function call).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import DynamicGraph, transition_weights
+from repro.core.query import Query
+from repro.core.rwr import label_rwr, rwr
+
+_EPS = 1e-12
+
+
+class GRayResult(NamedTuple):
+    matched: jnp.ndarray   # int32[k, q_max] — data vertex per query vertex
+    goodness: jnp.ndarray  # f32[k] — Σ log proximity over schedule edges
+    hops: jnp.ndarray      # int32[k, qe_max] — best-path hops per query edge
+    exact: jnp.ndarray     # bool[k] — every query edge realized by a data edge
+    valid: jnp.ndarray     # bool[k] — seed live and all expansions found
+
+
+def find_seeds(g: DynamicGraph, query: Query, r_lab: jnp.ndarray, k: int,
+               seed_filter: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Seed-finder: top-k anchor candidates by label-goodness.
+
+    score(v) = Σ_q log r_lab[v, label(q)]  over live query vertices,
+    restricted to v with the anchor's label (and the PEM recompute mask,
+    when given — that's the paper's partial execution hook).
+    """
+    q_lab = query.labels
+    logp = jnp.log(r_lab + _EPS)                      # (n, L)
+    score = (logp[:, q_lab] * query.mask[None, :]).sum(axis=1)  # (n,)
+    anchor_lab = q_lab[query.anchor]
+    ok = (g.labels == anchor_lab) & g.node_mask & (g.degree > 0)
+    if seed_filter is not None:
+        ok = ok & seed_filter
+    score = jnp.where(ok, score, -jnp.inf)
+    vals, ids = jax.lax.top_k(score, k)
+    return ids.astype(jnp.int32), jnp.isfinite(vals)
+
+
+def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int
+                    ) -> jnp.ndarray:
+    """hops[k_idx, v] = min #edges from sources[k_idx] to v (≤ max_hops),
+    else max_hops+1. Batched bounded BFS via edge-gather/segment-max sweeps —
+    the bridge function's path-length oracle."""
+    k = sources.shape[0]
+    reached = jax.nn.one_hot(sources, g.n_max, dtype=jnp.float32).T  # (n,k)
+    hops = jnp.where(reached.T > 0, 0, max_hops + 1).astype(jnp.int32)
+
+    live = g.edge_mask.astype(jnp.float32)[:, None]
+
+    def body(carry, h):
+        reached, hops = carry
+        msg = reached[g.senders] * live                      # (E, k)
+        nxt = jax.ops.segment_max(msg, g.receivers, num_segments=g.n_max)
+        nxt = jnp.maximum(nxt, reached)
+        newly = (nxt > 0) & (reached <= 0)
+        hops = jnp.where(newly.T, h, hops)
+        return (nxt, hops), None
+
+    (_, hops), _ = jax.lax.scan(body, (reached, hops),
+                                jnp.arange(1, max_hops + 1))
+    return hops  # (k, n)
+
+
+class GRayMatcher:
+    """Jitted G-Ray for one query shape. Reused across steps/seeds."""
+
+    def __init__(self, query: Query, n_labels: int, k: int,
+                 rwr_iters: int = 25, restart: float = 0.15,
+                 bridge_hops: int = 4):
+        self.query = query
+        self.n_labels = n_labels
+        self.k = k
+        self.rwr_iters = rwr_iters
+        self.restart = restart
+        self.bridge_hops = bridge_hops
+        # host-static expansion schedule
+        import numpy as np
+        om = np.asarray(query.order_mask)
+        self.schedule: Tuple[Tuple[int, int, bool], ...] = tuple(
+            (int(a), int(b), bool(t))
+            for a, b, t, m in zip(np.asarray(query.order_src),
+                                  np.asarray(query.order_dst),
+                                  np.asarray(query.order_tree), om) if m)
+        self._match = jax.jit(self._match_impl)
+        # close over the (tiny, host-static) query so jit sees only arrays
+        self._seeds = jax.jit(
+            lambda g, r_lab, seed_filter=None: find_seeds(
+                g, self.query, r_lab, self.k, seed_filter=seed_filter))
+
+    # -- public API ---------------------------------------------------------
+
+    def label_table(self, g: DynamicGraph,
+                    r0: Optional[jnp.ndarray] = None,
+                    iters: Optional[int] = None) -> jnp.ndarray:
+        return label_rwr(g, self.n_labels,
+                         iters=iters or self.rwr_iters, c=self.restart, r0=r0)
+
+    def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
+              seed_filter: Optional[jnp.ndarray] = None) -> GRayResult:
+        seed_ids, seed_mask = self._seeds(g, r_lab, seed_filter)
+        return self.match_from_seeds(g, r_lab, seed_ids, seed_mask)
+
+    def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
+                         seed_ids: jnp.ndarray,
+                         seed_mask: jnp.ndarray) -> GRayResult:
+        return self._match(g, r_lab, seed_ids, seed_mask)
+
+    # -- implementation ------------------------------------------------------
+
+    def _match_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
+                    seed_ids: jnp.ndarray,
+                    seed_mask: jnp.ndarray) -> GRayResult:
+        query, k = self.query, self.k
+        q_max, qe_max = query.q_max, query.order_src.shape[0]
+        n = g.n_max
+
+        matched = jnp.full((k, q_max), -1, jnp.int32)
+        anchor = query.anchor
+        matched = matched.at[:, anchor].set(seed_ids)
+        used = jnp.zeros((k, n), bool)
+        used = used.at[jnp.arange(k), seed_ids].set(True)
+
+        # seed goodness (same quantity the seed-finder ranked by)
+        logp = jnp.log(r_lab + _EPS)
+        goodness = (logp[seed_ids][:, query.labels] * query.mask[None, :]
+                    ).sum(axis=1)
+        hops = jnp.zeros((k, qe_max), jnp.int32)
+        valid = seed_mask
+
+        # memoized per-source tables (sound: matched[qa] is final once set)
+        rwr_memo: Dict[int, jnp.ndarray] = {}
+        reach_memo: Dict[int, jnp.ndarray] = {}
+
+        def source_tables(qa: int):
+            if qa not in rwr_memo:
+                src = matched[:, qa]                            # (k,)
+                e = jax.nn.one_hot(src, n, dtype=jnp.float32).T  # (n, k)
+                rwr_memo[qa] = rwr(g, e, iters=self.rwr_iters,
+                                   c=self.restart)              # (n, k)
+                reach_memo[qa] = _bfs_reach_hops(g, src, self.bridge_hops)
+            return rwr_memo[qa], reach_memo[qa]
+
+        for ei, (qa, qb, is_tree) in enumerate(self.schedule):
+            r_a, reach_a = source_tables(qa)
+            if is_tree:
+                # neighbor-expander: best label-compatible unused candidate
+                lab_b = query.labels[qb]
+                cand_ok = (g.labels == lab_b) & g.node_mask & ~used
+                score = jnp.where(cand_ok, r_a.T, -jnp.inf)     # (k, n)
+                best = jnp.argmax(score, axis=1).astype(jnp.int32)
+                found = jnp.isfinite(jnp.max(score, axis=1))
+                matched = matched.at[:, qb].set(
+                    jnp.where(found, best, -1))
+                used = used.at[jnp.arange(k), best].set(
+                    used[jnp.arange(k), best] | found)
+                prox = r_a[best, jnp.arange(k)]
+                goodness = goodness + jnp.where(
+                    found, jnp.log(prox + _EPS), 0.0)
+                valid = valid & found
+                m_b = best
+            else:
+                # both endpoints matched — score + bridge the chord
+                m_b = matched[:, qb]
+                prox = r_a[jnp.clip(m_b, 0, n - 1), jnp.arange(k)]
+                goodness = goodness + jnp.log(prox + _EPS)
+            # bridge: hop count of best path (1 ⇒ exact edge)
+            h = reach_a[jnp.arange(k), jnp.clip(m_b, 0, n - 1)]
+            hops = hops.at[:, ei].set(h)
+
+        n_edges_sched = len(self.schedule)
+        edge_mask = jnp.arange(qe_max) < n_edges_sched
+        exact = jnp.where(edge_mask[None, :], hops == 1, True).all(axis=1)
+        reachable = jnp.where(edge_mask[None, :],
+                              hops <= self.bridge_hops, True).all(axis=1)
+        valid = valid & reachable
+        return GRayResult(matched, goodness, hops, exact & valid, valid)
+
+
+def gray_match(g: DynamicGraph, query: Query, n_labels: int, k: int = 20,
+               rwr_iters: int = 25, restart: float = 0.15,
+               bridge_hops: int = 4,
+               seed_filter: Optional[jnp.ndarray] = None,
+               r_lab: Optional[jnp.ndarray] = None) -> GRayResult:
+    """One-shot batch G-Ray (builds a matcher; prefer GRayMatcher in loops)."""
+    m = GRayMatcher(query, n_labels, k, rwr_iters, restart, bridge_hops)
+    if r_lab is None:
+        r_lab = m.label_table(g)
+    return m.match(g, r_lab, seed_filter=seed_filter)

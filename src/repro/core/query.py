@@ -1,0 +1,115 @@
+"""Query pattern graphs (paper §IV-C): triangle, square, star-5, clique-4.
+
+A query is padded to ``q_max`` vertices. The G-Ray expansion order is a
+host-precomputed BFS spanning tree from the anchor vertex (highest-degree
+query vertex — the paper notes hubs make the best seeds), followed by the
+non-tree edges which are verified/bridged between already-matched vertices.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Query(NamedTuple):
+    labels: jnp.ndarray      # int32[q_max]
+    mask: jnp.ndarray        # bool[q_max]
+    # expansion schedule: rows (qa, qb, is_tree); padded rows masked
+    order_src: jnp.ndarray   # int32[qe_max]
+    order_dst: jnp.ndarray   # int32[qe_max]
+    order_tree: jnp.ndarray  # bool[qe_max]
+    order_mask: jnp.ndarray  # bool[qe_max]
+    anchor: jnp.ndarray      # int32 scalar — seed query vertex
+    name: str = "query"
+
+    @property
+    def q_max(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return int(np.asarray(self.mask).sum())
+
+    @property
+    def n_edges(self) -> int:
+        return int(np.asarray(self.order_mask).sum())
+
+
+def build_query(edges: List[Tuple[int, int]], labels: List[int],
+                q_max: int = 8, qe_max: int = 16, name: str = "query") -> Query:
+    """Host-side query compiler: BFS schedule from the highest-degree vertex."""
+    q = len(labels)
+    assert q <= q_max
+    deg = np.zeros(q, np.int64)
+    adj = [[] for _ in range(q)]
+    eset = set()
+    for a, b in edges:
+        if (a, b) in eset or (b, a) in eset:
+            continue
+        eset.add((a, b))
+        adj[a].append(b)
+        adj[b].append(a)
+        deg[a] += 1
+        deg[b] += 1
+    anchor = int(np.argmax(deg))
+    # BFS spanning tree
+    seen = {anchor}
+    frontier = [anchor]
+    tree: List[Tuple[int, int]] = []
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in sorted(adj[u]):
+                if v not in seen:
+                    seen.add(v)
+                    tree.append((u, v))
+                    nxt.append(v)
+        frontier = nxt
+    assert len(seen) == q, "query must be connected"
+    tree_set = {frozenset(e) for e in tree}
+    rest = [e for e in eset if frozenset(e) not in tree_set]
+    sched = [(a, b, True) for a, b in tree] + [(a, b, False) for a, b in rest]
+    assert len(sched) <= qe_max
+
+    lab = np.zeros(q_max, np.int32)
+    lab[:q] = labels
+    mask = np.arange(q_max) < q
+    osrc = np.zeros(qe_max, np.int32)
+    odst = np.zeros(qe_max, np.int32)
+    otree = np.zeros(qe_max, bool)
+    omask = np.zeros(qe_max, bool)
+    for i, (a, b, t) in enumerate(sched):
+        osrc[i], odst[i], otree[i], omask[i] = a, b, t, True
+    return Query(jnp.asarray(lab), jnp.asarray(mask), jnp.asarray(osrc),
+                 jnp.asarray(odst), jnp.asarray(otree), jnp.asarray(omask),
+                 jnp.asarray(anchor, jnp.int32), name)
+
+
+def triangle(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:
+    return build_query([(0, 1), (1, 2), (2, 0)], list(labels),
+                       name="triangle", **kw)
+
+
+def square(labels: Tuple[int, int, int, int] = (0, 0, 0, 0), **kw) -> Query:
+    return build_query([(0, 1), (1, 2), (2, 3), (3, 0)], list(labels),
+                       name="square", **kw)
+
+
+def star5(labels: Tuple[int, ...] = (0, 0, 0, 0, 0), **kw) -> Query:
+    assert len(labels) == 5
+    return build_query([(0, 1), (0, 2), (0, 3), (0, 4)], list(labels),
+                       name="star5", **kw)
+
+
+def clique4(labels: Tuple[int, int, int, int] = (0, 0, 0, 0), **kw) -> Query:
+    return build_query(
+        [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)], list(labels),
+        name="clique4", **kw)
+
+
+def line3(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:
+    """Line query — excluded from the paper's experiments (§V) but supported."""
+    return build_query([(0, 1), (1, 2)], list(labels), name="line3", **kw)

@@ -1,0 +1,16 @@
+from repro.data.temporal import (
+    DATASET_TWINS,
+    TemporalGraphSpec,
+    TemporalStream,
+    generate_stream,
+)
+from repro.data.lm import TokenPipeline, synthetic_token_batches
+
+__all__ = [
+    "TemporalGraphSpec",
+    "TemporalStream",
+    "generate_stream",
+    "DATASET_TWINS",
+    "TokenPipeline",
+    "synthetic_token_batches",
+]

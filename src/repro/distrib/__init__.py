@@ -1,0 +1,15 @@
+from repro.distrib.sharding import (
+    batch_axes,
+    bst_param_specs,
+    gnn_param_specs,
+    lm_param_specs,
+    state_specs_like,
+)
+
+__all__ = [
+    "batch_axes",
+    "lm_param_specs",
+    "gnn_param_specs",
+    "bst_param_specs",
+    "state_specs_like",
+]

@@ -1,0 +1,226 @@
+"""Sharding rules per model family (GSPMD PartitionSpec pytrees).
+
+Posture (DESIGN.md §5):
+  LM     — 2-D ("fully sharded") parameters: every big matrix shards over
+           BOTH "data" (ZeRO/FSDP axis) and "model" (Megatron TP axis);
+           optimizer moments inherit the spec. Activations shard batch over
+           ("pod","data"). The "pod" axis is NOT used for parameters —
+           parameters replicate across pods (pure cross-pod DP), so the only
+           cross-pod collective is the gradient reduction.
+  MoE    — expert weights shard the expert axis over "model" (EP) or the
+           d_ff axis (TP) per MoEConfig.moe_shard.
+  GNN    — parameters replicated (≤25M); edge/triplet arrays shard over
+           ("pod","data"); node tables replicated (scatter partial-sums
+           become psums).
+  BST    — embedding tables row-shard over "model"; batch over ("pod","data").
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import BSTConfig, TransformerConfig
+
+
+def batch_axes(multi_pod: bool):
+    """Mesh axes the global batch shards over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+# production mesh axis sizes (launch.mesh.make_production_mesh)
+_AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axes_size(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return _AXIS_SIZE[entry]
+    n = 1
+    for a in entry:
+        n *= _AXIS_SIZE[a]
+    return n
+
+
+def fit_spec(shape: Tuple[int, ...], spec: P) -> P:
+    """Degrade a PartitionSpec until every dim divides its shard count.
+
+    Published model dims are not all 256-divisible (e.g. qwen3 vocab
+    151936, qwen2 d_ff 29568, smollm kv width 192): per dim, try the
+    requested axes, then each single axis, then replicate."""
+    fitted = []
+    for i, entry in enumerate(spec):
+        if entry is None or shape[i] % _axes_size(entry) == 0:
+            fitted.append(entry)
+            continue
+        candidates = list(entry) if not isinstance(entry, str) else [entry]
+        # prefer the largest single axis that divides
+        candidates.sort(key=_AXIS_SIZE.get, reverse=True)
+        for c in candidates:
+            if shape[i] % _AXIS_SIZE[c] == 0:
+                fitted.append(c)
+                break
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+# -- LM ------------------------------------------------------------------------
+
+def lm_param_specs(params_shape: Any, cfg: TransformerConfig,
+                   policy: str = "tp2d") -> Any:
+    """PartitionSpec pytree matching TransformerLM.init's structure.
+
+    policy="tp2d": Megatron TP over "model" × ZeRO over "data" (decode/
+    prefill default — TP keeps per-token latency down).
+    policy="fsdp": pure ZeRO-3 — every large matrix shards over BOTH axes,
+    weights are all-gathered per layer and activations never cross chips
+    (train-cell default for dense LMs; §Perf hillclimb #3: swaps the
+    per-layer activation all-reduce floor for a ~2×params/chip gather
+    stream, which is smaller for B_loc·S·d ≫ params/256).
+    """
+    if policy == "fsdp":
+        return _lm_param_specs_fsdp(params_shape, cfg)
+    moe_shard = cfg.moe.moe_shard if cfg.moe else "ffn"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name == "embed":               # (V, d)
+            return P("model", "data")
+        if name == "head":                # (d, V) — vocab-parallel loss head:
+            # contraction dim unsharded, V over BOTH axes ⇒ logits shard V
+            # 256-way and only softmax statistics cross chips (hillclimb #2)
+            return P(None, ("data", "model"))
+        if name == "ln_f":
+            return P(None)
+        # stacked layer params: leading L axis
+        if re.search(r"layers/(wq|wk|wv|wg|wu)$", name):   # (L, d, f*)
+            return P(None, "data", "model")
+        if re.search(r"layers/(wo|wd)$", name):            # (L, f*, d)
+            return P(None, "model", "data")
+        if re.search(r"layers/(bq|bk|bv)$", name):         # (L, H*hd)
+            return P(None, "model")
+        if re.search(r"layers/ln\d$", name):
+            return P(None, None)
+        if name.endswith("moe/router"):                    # (L, d, E)
+            return P(None, "data", None)
+        if re.search(r"moe/(wg|wu)$", name):               # (L, E, d, f)
+            if moe_shard == "expert":
+                # EP: experts over "model", weights contraction-local so the
+                # per-expert GEMM runs without cross-chip partial sums
+                return P(None, "model", None, None)
+            return P(None, None, None, "model")
+        if name.endswith("moe/wd"):                        # (L, E, f, d)
+            if moe_shard == "expert":
+                return P(None, "model", None, None)
+            return P(None, None, "model", None)
+        if re.search(r"layers/(sg|su)$", name):            # shared experts
+            return P(None, "data", "model")
+        if name.endswith("layers/sd"):
+            return P(None, "model", "data")
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: fit_spec(leaf.shape, rule(p, leaf)), params_shape)
+
+
+def _lm_param_specs_fsdp(params_shape: Any, cfg: TransformerConfig) -> Any:
+    both = ("data", "model")
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name == "embed":                                # (V, d)
+            return P(both, None)
+        if name == "head":                                 # (d, V)
+            return P(None, both)
+        if re.search(r"layers/(wq|wk|wv|wg|wu|sg|su)$", name):  # (L, d, f)
+            return P(None, None, both)
+        if re.search(r"layers/(wo|wd|sd)$", name):         # (L, f, d)
+            return P(None, both, None)
+        if re.search(r"layers/(bq|bk|bv)$", name):         # (L, f)
+            return P(None, both)
+        if name.endswith("moe/router"):                    # (L, d, E)
+            return P(None, None, None)
+        if re.search(r"moe/(wg|wu|wd)$", name):            # (L, E, ·, ·)
+            # EP over "model", contraction-local (same as tp2d): expert
+            # GEMMs stay shard-local while the DENSE blocks go ZeRO
+            return P(None, "model", None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: fit_spec(leaf.shape, rule(p, leaf)), params_shape)
+
+
+def lm_cache_specs(multi_pod: bool, batch: int) -> P:
+    """KV cache (L, B, S, KV, hd): shard B over the batch axes when it can
+    be divided, otherwise shard the sequence axis; 'model' always takes a
+    slice of S (flash-decoding layout — KV-head counts are too small for a
+    16-way head shard)."""
+    ba = batch_axes(multi_pod)
+    n_batch_shards = 32 if multi_pod else 16
+    if batch >= n_batch_shards:
+        return P(None, ba, "model", None, None)
+    return P(None, None, (*ba, "model"), None, None)
+
+
+# -- GNN -----------------------------------------------------------------------
+
+def gnn_param_specs(params_shape: Any) -> Any:
+    return jax.tree.map(lambda leaf: P(*([None] * len(leaf.shape))),
+                        params_shape)
+
+
+# -- BST -----------------------------------------------------------------------
+
+def bst_param_specs(params_shape: Any, cfg: BSTConfig,
+                    serve: bool = False) -> Any:
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name == "item_emb":            # (n_items, e) — the huge table
+            # Serving replicates the table (537 MB bf16-able): lookups are
+            # then gather-local and the scoring dot has zero collectives.
+            # Training keeps 16-way row sharding — a replicated table would
+            # all-reduce 537 MB of gradients per step.
+            # NOTE §Perf (refuted hypothesis): 256-way ("model","data") row
+            # sharding was tried to spread lookup gathers — it INCREASED
+            # operand bytes 1.6-13× (GSPMD resorts to larger resharding
+            # collectives when gather indices span more shards).
+            return P(None, None) if serve else P("model", None)
+        if name == "user_emb":            # (F, V, e)
+            return P(None, "model", None)
+        if name == "mlp_w0":              # widest MLP matrix
+            return P(None, "model")
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: fit_spec(leaf.shape, rule(p, leaf)), params_shape)
+
+
+# -- generic -------------------------------------------------------------------
+
+def state_specs_like(param_specs: Any) -> Any:
+    """TrainState(params, AdamWState(step, m, v)) spec pytree."""
+    from repro.optim.adamw import AdamWState
+    from repro.train.state import TrainState
+    return TrainState(
+        params=param_specs,
+        opt=AdamWState(step=P(),
+                       m=jax.tree.map(lambda s: s, param_specs),
+                       v=jax.tree.map(lambda s: s, param_specs)))

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots (see DESIGN.md §2).
+# Each kernel package: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+# ops.py (jit'd wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+#
+#   spmv_ell        — ELL-padded SpMM: the RWR power-iteration sweep (the
+#                     paper's hot loop) and GNN message-passing aggregation
+#   flash_attention — blockwise causal GQA attention (LM train/prefill)
+#   expert_gemm     — grouped per-expert GEMM for the MoE dispatch path

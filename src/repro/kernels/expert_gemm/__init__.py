@@ -1,0 +1,3 @@
+from repro.kernels.expert_gemm.ops import expert_gemm
+
+__all__ = ["expert_gemm"]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: grouped per-expert GEMM (the MoE dispatch matmul).
+
+Y[e] = X[e] @ W[e] for X: (E, C, d), W: (E, d, f) → (E, C, f).
+
+Grid: (E, C/BC, f/BF, d/BD) with the contraction axis d as the minor
+(sequential) dimension; an f32 VMEM scratch accumulates partial products
+across d-steps (MXU-aligned BC/BF/BD multiples of 128 — the capacity C is
+already padded to lane multiples by ``moe_capacity``).
+
+This is the kernel regime MegaBlocks [arXiv:2211.15841] targets on GPU;
+TPU-side we express it as a dense batched GEMM over the capacity-packed
+dispatch buffer (DESIGN.md §2 — block-sparsity becomes static capacity).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, y_ref, acc_ref):
+    d_idx = pl.program_id(3)
+    n_d = pl.num_programs(3)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                # (BC, BD)
+    w = w_ref[0]                                # (BD, BF)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(d_idx == n_d - 1)
+    def _flush():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def expert_gemm_raw(x: jnp.ndarray, w: jnp.ndarray, block_c: int = 128,
+                    block_f: int = 128, block_d: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    e, c, d = x.shape
+    f = w.shape[2]
+    pc, pd, pf = (-c) % block_c, (-d) % block_d, (-f) % block_f
+    xp = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    wp = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    C, D, F = c + pc, d + pd, f + pf
+    grid = (e, C // block_c, F // block_f, D // block_d)
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return y[:, :c, :f]

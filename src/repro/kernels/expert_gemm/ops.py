@@ -1,0 +1,22 @@
+"""Public wrapper for the grouped expert GEMM kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expert_gemm.expert_gemm import expert_gemm_raw
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def expert_gemm(x: jnp.ndarray, w: jnp.ndarray, block_c: int = 128,
+                block_f: int = 128, block_d: int = 128) -> jnp.ndarray:
+    """(E, C, d) × (E, d, f) → (E, C, f); MoE dispatch-buffer matmul."""
+    return expert_gemm_raw(x, w, block_c=block_c, block_f=block_f,
+                           block_d=block_d, interpret=_on_cpu())

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+
+import jax.numpy as jnp
+
+
+def expert_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, d) × (E, d, f) → (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", x, w)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Grid: (batch·kv_heads·q_per_kv, Sq/BQ, Sk/BK) — the KV axis is the minor
+(sequential) grid dimension, so the online-softmax state (running max m,
+denominator l, accumulator acc) lives in VMEM scratch carried across KV
+steps of one (head, q-block) program instance.
+
+BlockSpec tiling:
+  q   (1, BQ, hd)   per (head, q-block), revisited for every KV step
+  k,v (1, BK, hd)   streamed along the KV grid axis
+  o   (1, BQ, hd)   written once on the last KV step
+
+Causal skipping: whole KV blocks strictly above the diagonal are skipped via
+``pl.when`` (no FLOPs, no VMEM traffic); the diagonal block applies the
+triangular mask in-register. MXU alignment: BQ, BK multiples of 128, hd
+padded to 128 lanes by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            kv_len: int):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (q_idx + 1) * block_q > kv_idx * block_k if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                       # (BQ, BK)
+        k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        valid = k_pos < kv_len                            # ragged-S padding
+        if causal:
+            q_pos = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            valid = valid & (k_pos <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale",
+                     "kv_len"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False,
+                        scale: float = 0.0, kv_len: int = 0) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k, v: (BH, Sk, hd) — heads pre-flattened/broadcast
+    by the wrapper (GQA: q heads grouped onto their kv head). ``scale``
+    must be 1/√(true head dim) when hd is lane-padded; ``kv_len`` masks
+    block-padded keys (0 → Sk, i.e. no padding)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0
+    scale = scale or 1.0 / (hd ** 0.5)
+    kv_len = kv_len or sk
+    grid = (bh, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, causal=causal, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # denominator l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,56 @@
+"""Public GQA wrapper for the flash-attention Pallas kernel.
+
+Accepts model-layout tensors q: (B, S, H, hd), k/v: (B, S, KV, hd); flattens
+(batch, kv_head, group) onto the kernel's leading grid axis, pads hd to the
+128-lane boundary and S to the block size, and restores layout. Interpreted
+on CPU; Mosaic on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+
+    hd_pad = (-hd) % 128
+    sq_pad = (-S) % block_q
+    sk_pad = (-S) % block_k
+    # causal masking keys beyond the true length is automatic (k_pos > q_pos
+    # only matters for padded q rows, which are discarded)
+    qf = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, hd_pad)))
+    kf = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, hd_pad)))
+    vf = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, hd_pad)))
+
+    Sq, Sk, hdp = qf.shape[1], kf.shape[1], qf.shape[3]
+    # (B, Sq, KV, G, hd) → (B·KV·G, Sq, hd)
+    qh = qf.reshape(B, Sq, KV, G, hdp).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV * G, Sq, hdp)
+    kh = jnp.repeat(
+        kf.transpose(0, 2, 1, 3).reshape(B * KV, 1, Sk, hdp), G,
+        axis=1).reshape(B * KV * G, Sk, hdp)
+    vh = jnp.repeat(
+        vf.transpose(0, 2, 1, 3).reshape(B * KV, 1, Sk, hdp), G,
+        axis=1).reshape(B * KV * G, Sk, hdp)
+
+    o = flash_attention_fwd(qh, kh, vh, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=_on_cpu(),
+                            scale=1.0 / (hd ** 0.5), kv_len=S)
+    o = o.reshape(B, KV, G, Sq, hdp).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, Sq, H, hdp)
+    return o[:, :S, :, :hd]

@@ -1,0 +1,3 @@
+from repro.kernels.spmv_ell.ops import ell_spmm_kernel
+
+__all__ = ["ell_spmm_kernel"]

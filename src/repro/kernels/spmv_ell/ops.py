@@ -1,0 +1,48 @@
+"""Public wrapper for the ELL SpMM Pallas kernel.
+
+On CPU (this container) the kernel body executes under ``interpret=True``;
+on TPU the same call lowers to Mosaic. The wrapper finishes the two-phase
+reduction (segment-sum over split-row ids) and shards wide RHS batches so
+the VMEM residency bound on X holds.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_ell.spmv_ell import ell_row_partials
+from repro.sparse.ell import EllGraph
+
+_MAX_D_RESIDENT = 32
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("n", "block_rows"))
+def ell_spmm_kernel(cols: jnp.ndarray, vals: jnp.ndarray, mask: jnp.ndarray,
+                    row_ids: jnp.ndarray, x: jnp.ndarray, n: int,
+                    block_rows: int = 256) -> jnp.ndarray:
+    """y = A_ell @ x; x: (n, d) → y: (n, d)."""
+    interpret = _on_cpu()
+    d = x.shape[1]
+    if d <= _MAX_D_RESIDENT:
+        partial_rows = ell_row_partials(cols, vals, mask, x,
+                                        block_rows=block_rows,
+                                        interpret=interpret)
+    else:  # shard the RHS batch to respect the VMEM bound on X
+        chunks = []
+        for lo in range(0, d, _MAX_D_RESIDENT):
+            chunks.append(ell_row_partials(
+                cols, vals, mask, x[:, lo:lo + _MAX_D_RESIDENT],
+                block_rows=block_rows, interpret=interpret))
+        partial_rows = jnp.concatenate(chunks, axis=1)
+    return jax.ops.segment_sum(partial_rows, row_ids, num_segments=n)
+
+
+def ell_spmm_graph(g: EllGraph, x: jnp.ndarray) -> jnp.ndarray:
+    return ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, g.n)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the ELL SpMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_row_partials_ref(cols: jnp.ndarray, vals: jnp.ndarray,
+                         mask: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    w = jnp.where(mask, vals, 0.0)
+    gathered = x[cols]                       # (R, K, d)
+    return jnp.einsum("rk,rkd->rd", w.astype(x.dtype), gathered)
+
+
+def ell_spmm_ref(cols, vals, mask, row_ids, x, n: int) -> jnp.ndarray:
+    partial = ell_row_partials_ref(cols, vals, mask, x)
+    return jax.ops.segment_sum(partial, row_ids, num_segments=n)

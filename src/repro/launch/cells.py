@@ -1,0 +1,403 @@
+"""Cell builder: one (architecture × input-shape) pair → lowered-able step.
+
+A :class:`Cell` bundles everything the dry-run, the smoke tests, and the
+benchmarks need for one of the 40 assigned cells:
+
+  * ``step_fn(state, *inputs)`` — the jittable program (train / prefill /
+    decode / serve, per the shape's ``kind``),
+  * ``args`` — argument pytree; ``ShapeDtypeStruct`` stand-ins when
+    ``concrete=False`` (dry-run: no allocation), real host arrays when
+    ``concrete=True`` (smoke tests),
+  * ``in_shardings`` — NamedSharding pytree for the production mesh
+    (None when built without a mesh).
+
+Smoke tests call ``build_cell(..., smoke=True, concrete=True)``: same code
+path, reduced dims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import (ArchConfig, BSTConfig, GNNConfig, ShapeSpec,
+                               TrainConfig, TransformerConfig)
+from repro.distrib.sharding import (batch_axes, bst_param_specs,
+                                    gnn_param_specs, lm_cache_specs,
+                                    lm_param_specs, state_specs_like)
+from repro.models.gnn.common import GraphInputs, make_model
+from repro.models.gnn.graphcast import mesh_sizes
+from repro.models.recsys.bst import BST, BSTInputs
+from repro.models.transformer import TransformerLM
+from repro.optim.adamw import AdamWState
+from repro.train.state import TrainState, make_train_step, new_train_state
+
+
+class Cell(NamedTuple):
+    arch_id: str
+    shape_name: str
+    kind: str
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Optional[Tuple[Any, ...]]
+    donate: Tuple[int, ...]
+    meta: dict
+
+
+SDS = jax.ShapeDtypeStruct
+TCFG = TrainConfig()
+
+
+def _named(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _make_array(rng: np.random.Generator, shape, dtype, high: int = 2):
+    if np.issubdtype(dtype, np.integer):
+        return jnp.asarray(rng.integers(0, max(high, 1), size=shape)
+                           .astype(dtype))
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+class _ArgFactory:
+    """Builds either ShapeDtypeStructs (dry-run) or concrete arrays (smoke)."""
+
+    def __init__(self, concrete: bool, seed: int = 0):
+        self.concrete = concrete
+        self.rng = np.random.default_rng(seed)
+
+    def __call__(self, shape, dtype, high: int = 2):
+        dtype = np.dtype(dtype)
+        if self.concrete:
+            return _make_array(self.rng, shape, dtype, high)
+        return SDS(shape, dtype)
+
+    def state(self, init_fn, serve_dtype=None):
+        """Params/TrainState via eval_shape (dry-run) or real init (smoke)."""
+        if self.concrete:
+            tree = init_fn(jax.random.PRNGKey(0))
+        else:
+            tree = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+        if serve_dtype is not None:
+            cast = (lambda x: x.astype(serve_dtype)) if self.concrete else \
+                (lambda x: SDS(x.shape, serve_dtype))
+            tree = jax.tree.map(
+                lambda x: cast(x) if np.issubdtype(x.dtype, np.floating)
+                else x, tree)
+        return tree
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+_LM_SMOKE_DIMS = {
+    "train_4k": {"seq_len": 32, "global_batch": 2},
+    "prefill_32k": {"seq_len": 64, "global_batch": 1},
+    "decode_32k": {"seq_len": 64, "global_batch": 2},
+    "long_500k": {"seq_len": 128, "global_batch": 1},
+}
+
+
+def _lm_cell(arch: ArchConfig, shape: ShapeSpec, mesh, multi_pod: bool,
+             concrete: bool, smoke: bool) -> Cell:
+    cfg: TransformerConfig = arch.model
+    dims = _LM_SMOKE_DIMS[shape.name] if smoke else shape.dims
+    B, S = dims["global_batch"], dims["seq_len"]
+    ba = batch_axes(multi_pod)
+    n_batch_shards = (2 * 16) if multi_pod else 16
+    bspec = P(ba, None) if (B >= n_batch_shards or mesh is None) else P(None, None)
+
+    act_spec = P(ba, None, None) if (mesh is not None
+                                     and B >= n_batch_shards) else None
+    model = TransformerLM(cfg, moe_group_size=min(4096, max(64, B * S // 8)),
+                          act_spec=act_spec)
+    fac = _ArgFactory(concrete)
+
+    if shape.kind == "train":
+        state = fac.state(model.init)
+        state = TrainState(state, AdamWState(
+            fac((), np.int32),
+            *(jax.tree.map(lambda x: fac(x.shape, np.float32), state),) * 2)) \
+            if not concrete else new_train_state(state)
+        step = make_train_step(model.loss, TCFG)
+        tokens = fac((B, S), np.int32, cfg.vocab_size)
+        labels = fac((B, S), np.int32, cfg.vocab_size)
+        # sharding policy (§Perf hillclimb #3): LM train → FSDP for the
+        # dense blocks (no per-layer activation all-reduce); MoE experts
+        # stay EP over "model" under either policy.
+        policy = os.environ.get("REPRO_LM_POLICY", "fsdp")
+        pspec = lm_param_specs(state.params, cfg, policy=policy)
+        in_sh = _named(mesh, (state_specs_like(pspec), bspec, bspec))
+        return Cell(arch.arch_id, shape.name, "train", step,
+                    (state, tokens, labels), in_sh, (0,),
+                    {"tokens_per_step": B * S})
+
+    if shape.kind == "prefill":
+        params = fac.state(model.init, serve_dtype=np.dtype("bfloat16"))
+        tokens = fac((B, S), np.int32, cfg.vocab_size)
+        # prefill is throughput-bound like training → FSDP (decode keeps TP:
+        # per-token param gathers would destroy latency)
+        policy = os.environ.get("REPRO_LM_PREFILL_POLICY", "fsdp")
+        pspec = lm_param_specs(params, cfg, policy=policy)
+        in_sh = _named(mesh, (pspec, bspec))
+        return Cell(arch.arch_id, shape.name, "prefill", model.prefill,
+                    (params, tokens), in_sh, (), {"tokens_per_step": B * S})
+
+    # decode (decode_32k / long_500k): one token against an S-long cache
+    params = fac.state(model.init, serve_dtype=np.dtype("bfloat16"))
+    token = fac((B, 1), np.int32, cfg.vocab_size)
+    cache_shape = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+    cache = (fac(cache_shape, np.dtype("bfloat16")),
+             fac(cache_shape, np.dtype("bfloat16")))
+    cache_len = (jnp.asarray(S // 2, jnp.int32) if concrete
+                 else SDS((), np.int32))
+    pspec = lm_param_specs(params, cfg)
+    cspec = lm_cache_specs(multi_pod, B if mesh is not None else 0)
+    in_sh = _named(mesh, (pspec, bspec, (cspec, cspec), P()))
+    return Cell(arch.arch_id, shape.name, "decode", model.decode_step,
+                (params, token, cache, cache_len), in_sh, (2,),
+                {"tokens_per_step": B, "kv_tokens": B * S})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_SMOKE_DIMS = {
+    "full_graph_sm": {"n_nodes": 64, "n_edges": 256, "d_feat": 32},
+    "minibatch_lg": {"n_nodes": 80, "n_edges": 72, "batch_nodes": 8,
+                     "fanout1": 3, "fanout2": 2, "d_feat": 16},
+    "ogb_products": {"n_nodes": 128, "n_edges": 512, "d_feat": 16},
+    "molecule": {"n_nodes": 8, "n_edges": 12, "batch": 4, "d_feat": 8},
+}
+
+
+def _pad512(x: int) -> int:
+    """Round up to a multiple of 512 (= 2×16×16 mesh shards). Sharded index
+    arrays must divide evenly across devices; pad entries carry the
+    out-of-bounds index n, whose gathers clip and whose scatters are dropped
+    by ``segment_sum(num_segments=n)`` — aggregation-neutral."""
+    return -(-x // 512) * 512
+
+
+def gnn_cell_sizes(shape_name: str, dims: dict,
+                   padded: bool = False) -> Tuple[int, int]:
+    """(N, E) of the tensor program for one GNN shape (block vs full graph)."""
+    if shape_name == "minibatch_lg":
+        b, f1, f2 = dims["batch_nodes"], dims["fanout1"], dims["fanout2"]
+        n = b * (1 + f1 + f1 * f2)
+        e = b * f1 + b * f1 * f2
+    elif shape_name == "molecule":
+        b = dims["batch"]
+        n, e = b * dims["n_nodes"], 2 * b * dims["n_edges"]
+    else:
+        n, e = dims["n_nodes"], dims["n_edges"]
+    return n, (_pad512(e) if padded else e)
+
+
+def _gnn_cell(arch: ArchConfig, shape: ShapeSpec, mesh, multi_pod: bool,
+              concrete: bool, smoke: bool) -> Cell:
+    cfg: GNNConfig = arch.model
+    dims = _GNN_SMOKE_DIMS[shape.name] if smoke else shape.dims
+    N, E = gnn_cell_sizes(shape.name, dims, padded=not smoke)
+    d_feat = dims["d_feat"]
+    ba = batch_axes(multi_pod)
+    fac = _ArgFactory(concrete)
+    model = make_model(cfg)
+
+    fields = {
+        "node_feat": (fac((N, d_feat), np.float32), P(None, None)),
+        "senders": (fac((E,), np.int32, N), P(ba)),
+        "receivers": (fac((E,), np.int32, N), P(ba)),
+        "targets": (fac((N, cfg.d_out), np.float32), P(None, None)),
+        "positions": (None, None),
+        "trip_kj": (None, None),
+        "trip_ji": (None, None),
+        "edge_feat": (None, None),
+    }
+    if cfg.kind in ("schnet", "dimenet"):
+        fields["positions"] = (fac((N, 3), np.float32), P(None, None))
+    if cfg.kind == "dimenet":
+        T = E * cfg.triplets_per_edge
+        fields["trip_kj"] = (fac((T,), np.int32, E), P(ba))
+        fields["trip_ji"] = (fac((T,), np.int32, E), P(ba))
+    if cfg.kind == "graphcast":
+        msz = mesh_sizes(cfg.mesh_refinement)
+        # mesh arcs replace the data-graph arcs as senders/receivers;
+        # grid↔mesh maps are length-tied to n_grid in the model → replicated
+        ma, mn = msz["mesh_arcs"], msz["mesh_nodes"]
+        fields["senders"] = (fac((ma,), np.int32, mn), P(ba))
+        fields["receivers"] = (fac((ma,), np.int32, mn), P(ba))
+        fields["trip_kj"] = (fac((N * model.G2M,), np.int32, mn), P(None))
+        fields["trip_ji"] = (fac((N * model.M2G,), np.int32, mn), P(None))
+
+    inputs = GraphInputs(**{k: v[0] for k, v in fields.items()})
+    ispecs = GraphInputs(**{k: v[1] for k, v in fields.items()})
+
+    init = partial(model.init, d_feat=d_feat)
+    if concrete:
+        state = new_train_state(init(jax.random.PRNGKey(0)))
+    else:
+        params = fac.state(init)
+        zf32 = jax.tree.map(lambda x: fac(x.shape, np.float32), params)
+        state = TrainState(params, AdamWState(fac((), np.int32), zf32,
+                                              jax.tree.map(lambda x: x, zf32)))
+    step = make_train_step(model.loss, TCFG)
+    pspec = gnn_param_specs(state.params)
+    in_sh = _named(mesh, (state_specs_like(pspec), ispecs))
+    return Cell(arch.arch_id, shape.name, "train", step, (state, inputs),
+                in_sh, (0,), {"n_nodes": N, "n_edges": E})
+
+
+# ---------------------------------------------------------------------------
+# BST (recsys) cells
+# ---------------------------------------------------------------------------
+
+_BST_SMOKE_DIMS = {
+    "train_batch": {"batch": 8},
+    "serve_p99": {"batch": 4},
+    "serve_bulk": {"batch": 16},
+    "retrieval_cand": {"batch": 1, "n_candidates": 128},
+}
+
+
+def _bst_cell(arch: ArchConfig, shape: ShapeSpec, mesh, multi_pod: bool,
+              concrete: bool, smoke: bool) -> Cell:
+    cfg: BSTConfig = arch.model
+    dims = _BST_SMOKE_DIMS[shape.name] if smoke else shape.dims
+    B = dims["batch"]
+    ba = batch_axes(multi_pod)
+    n_batch_shards = (2 * 16) if multi_pod else 16
+    b1 = P(ba) if (B >= n_batch_shards or mesh is None) else P(None)
+    b2 = P(ba, None) if (B >= n_batch_shards or mesh is None) else P(None, None)
+    fac = _ArgFactory(concrete)
+    model = BST(cfg)
+
+    inputs = BSTInputs(
+        item_hist=fac((B, cfg.seq_len), np.int32, cfg.n_items),
+        cate_hist=fac((B, cfg.seq_len), np.int32, cfg.n_cates),
+        target_item=fac((B,), np.int32, cfg.n_items),
+        target_cate=fac((B,), np.int32, cfg.n_cates),
+        user_feats=fac((B, cfg.n_user_feats), np.int32, cfg.user_feat_vocab),
+        labels=fac((B,), np.float32))
+    ispecs = BSTInputs(b2, b2, b1, b1, b2, b1)
+
+    if shape.name == "train_batch":
+        if concrete:
+            state = new_train_state(model.init(jax.random.PRNGKey(0)))
+        else:
+            params = fac.state(model.init)
+            zf32 = jax.tree.map(lambda x: fac(x.shape, np.float32), params)
+            state = TrainState(params, AdamWState(fac((), np.int32), zf32,
+                                                  jax.tree.map(lambda x: x,
+                                                               zf32)))
+        step = make_train_step(model.loss, TCFG)
+        pspec = bst_param_specs(state.params, cfg)
+        in_sh = _named(mesh, (state_specs_like(pspec), ispecs))
+        return Cell(arch.arch_id, shape.name, "train", step, (state, inputs),
+                    in_sh, (0,), {"batch": B})
+
+    params = fac.state(model.init)
+    pspec = bst_param_specs(params, cfg, serve=True)
+    if shape.name == "retrieval_cand":
+        C = dims["n_candidates"] if smoke else _pad512(dims["n_candidates"])
+        cand_i = fac((C,), np.int32, cfg.n_items)
+        cand_c = fac((C,), np.int32, cfg.n_cates)
+        cspec = P(ba) if mesh is not None else P(None)
+        in_sh = _named(mesh, (pspec, ispecs, cspec, cspec))
+        return Cell(arch.arch_id, shape.name, "serve", model.retrieval_scores,
+                    (params, inputs, cand_i, cand_c), in_sh, (),
+                    {"batch": B, "candidates": C})
+
+    def serve(params, inputs):
+        return jax.nn.sigmoid(model.forward(params, inputs))
+
+    in_sh = _named(mesh, (pspec, ispecs))
+    return Cell(arch.arch_id, shape.name, "serve", serve, (params, inputs),
+                in_sh, (), {"batch": B})
+
+
+# ---------------------------------------------------------------------------
+# IGPM (the paper's own system) — distributed RWR at published dataset scale
+# ---------------------------------------------------------------------------
+
+_IGPM_SMOKE_DIMS = {"n_vertices": 64, "n_edges": 256}
+
+
+def _igpm_cell(arch: ArchConfig, shape: ShapeSpec, mesh, multi_pod: bool,
+               concrete: bool, smoke: bool) -> Cell:
+    """Lower the incremental label-RWR refresh (IGPM's data-plane hot loop)
+    on the production mesh, at the PUBLISHED Table III sizes: arcs shard
+    over ("pod","data"); the (n, L) frontier is replicated and each sweep's
+    segment-sum becomes a psum across arc shards — distributed IGPM."""
+    from repro.core.graph import DynamicGraph
+    from repro.core.rwr import label_rwr
+
+    cfg = arch.model  # IGPMConfig
+    dims = _IGPM_SMOKE_DIMS if smoke else shape.dims
+    n = dims["n_vertices"]
+    e = 2 * dims["n_edges"]
+    e = e if smoke else _pad512(e)
+    ba = batch_axes(multi_pod)
+    fac = _ArgFactory(concrete)
+
+    graph = DynamicGraph(
+        senders=fac((e,), np.int32, n),
+        receivers=fac((e,), np.int32, n),
+        edge_mask=(jnp.ones((e,), bool) if concrete else SDS((e,), np.bool_)),
+        labels=fac((n,), np.int32, cfg.n_labels),
+        node_mask=(jnp.ones((n,), bool) if concrete else SDS((n,), np.bool_)),
+        degree=fac((n,), np.float32),
+        n_edges=fac((), np.int32))
+    r0 = fac((n, cfg.n_labels), np.float32)
+
+    def rwr_refresh(g, r0):
+        return label_rwr(g, cfg.n_labels, iters=cfg.rwr_iters_incremental,
+                         c=cfg.restart_prob, r0=r0)
+
+    gspec = DynamicGraph(P(ba), P(ba), P(ba), P(None), P(None), P(None), P())
+    in_sh = _named(mesh, (gspec, P(None, None)))
+    return Cell(arch.arch_id, shape.name, "stream", rwr_refresh,
+                (graph, r0), in_sh, (),
+                {"n_nodes": n, "n_edges": e, "rwr_iters":
+                 cfg.rwr_iters_incremental, "n_labels": cfg.n_labels})
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchConfig, shape_name: str, mesh=None,
+               multi_pod: bool = False, concrete: bool = False,
+               smoke: bool = False) -> Cell:
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, mesh, multi_pod, concrete, smoke)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape, mesh, multi_pod, concrete, smoke)
+    if arch.family == "recsys":
+        return _bst_cell(arch, shape, mesh, multi_pod, concrete, smoke)
+    if arch.family == "igpm":
+        return _igpm_cell(arch, shape, mesh, multi_pod, concrete, smoke)
+    raise ValueError(f"no tensor cells for family {arch.family!r}")
+
+
+def input_specs(arch: ArchConfig, shape_name: str, mesh=None,
+                multi_pod: bool = False) -> Tuple[Any, ...]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (the dry-run contract from the assignment)."""
+    return build_cell(arch, shape_name, mesh=mesh, multi_pod=multi_pod,
+                      concrete=False).args

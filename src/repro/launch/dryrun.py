@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory / cost / collective analysis.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init (assignment step 0).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results are cached as JSON under reports/dryrun/ (one file per cell × mesh)
+so the roofline table and EXPERIMENTS.md are reproducible without
+recompiling all 80 artifacts.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.config.registry import get_arch, list_archs
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (analytic_memory_bytes,
+                                   analytic_model_flops, collective_bytes,
+                                   remat_multiplier, roofline_terms)
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             save_hlo: bool = False) -> dict:
+    """Lower + compile one cell; return the §Dry-run/§Roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arch = get_arch(arch_id)
+    cell = build_cell(arch, shape_name, mesh=mesh, multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                          donate_argnums=cell.donate).lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "meta": cell.meta,
+    }
+
+    try:
+        ms = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ms.argument_size_in_bytes),
+            "output_bytes": int(ms.output_size_in_bytes),
+            "temp_bytes": int(ms.temp_size_in_bytes),
+            "alias_bytes": int(ms.alias_size_in_bytes),
+            "peak_per_chip_gb": round(
+                (ms.argument_size_in_bytes + ms.temp_size_in_bytes
+                 + ms.output_size_in_bytes - ms.alias_size_in_bytes)
+                / 1e9, 3),
+        }
+    except Exception as e:  # CPU backend may not support it
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        rec["cost"] = {"flops_per_chip": flops, "bytes_per_chip": byts}
+    except Exception as e:
+        flops = byts = 0.0
+        rec["cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll_raw = collective_bytes(hlo)
+    coll = collective_bytes(hlo, tpu_wire=True)
+    coll_total = float(sum(coll.values()))
+    rec["collectives"] = coll
+    rec["collective_bytes_per_chip_cpu_f32"] = float(sum(coll_raw.values()))
+    rec["collective_bytes_per_chip"] = coll_total
+    mem_an = analytic_memory_bytes(arch, arch.shape(shape_name), cell.meta)
+    rec["analytic_memory_bytes_total"] = mem_an
+    mf = analytic_model_flops(arch, arch.shape(shape_name), cell.meta)
+    exec_flops = (mf * remat_multiplier(arch, cell.kind)) if mf else None
+    rec["roofline"] = roofline_terms(
+        flops, byts, coll_total,
+        analytic_mem_per_chip=(mem_an / n_chips) if mem_an else None,
+        analytic_flops_per_chip=(exec_flops / n_chips) if exec_flops else None)
+
+    if mf:
+        rec["model_flops_total"] = mf
+        # useful fraction of EXECUTED compute (remat/recompute waste shows
+        # up here; HLO flops kept for reference despite loop undercounting)
+        rec["model_flops_ratio"] = round(mf / exec_flops, 4)
+        rec["hlo_flops_total"] = flops * n_chips
+
+    if save_hlo:
+        hdir = REPORT_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch_id}_{shape_name}_{rec['mesh']}.txt").write_text(hlo)
+    return rec
+
+
+def cell_list():
+    """The 40 assigned cells + 4 bonus cells lowering the paper's own
+    RWR data-plane at published Table III sizes (arch igpm-pem)."""
+    cells = []
+    for arch_id in list_archs():
+        arch = get_arch(arch_id)
+        for s in arch.shapes:
+            cells.append((arch_id, s.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    todo = cell_list() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch_id, shape_name in todo:
+        for mp in meshes:
+            tag = f"{arch_id}_{shape_name}_{'2x16x16' if mp else '16x16'}"
+            out = REPORT_DIR / f"{tag}.json"
+            if out.exists() and not args.force:
+                print(f"[cached] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch_id, shape_name, multi_pod=mp,
+                               save_hlo=args.save_hlo)
+                out.write_text(json.dumps(rec, indent=1))
+                r = rec["roofline"]
+                print(f"  ok compile={rec['compile_s']}s "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+                      f" dominant={r['dominant']}", flush=True)
+            except Exception as e:
+                failures.append((tag, str(e)))
+                print(f"  FAIL {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

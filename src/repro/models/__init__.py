@@ -1,0 +1,4 @@
+from repro.models import layers
+from repro.models.transformer import TransformerLM
+
+__all__ = ["layers", "TransformerLM"]

@@ -1,0 +1,3 @@
+from repro.models.gnn.common import GraphInputs, make_model
+
+__all__ = ["GraphInputs", "make_model"]

@@ -1,0 +1,90 @@
+"""GraphCast (Lam et al., arXiv:2212.12794) — encoder-processor-decoder
+mesh GNN.
+
+Assigned config: n_layers=16, d_hidden=512, mesh_refinement=6,
+aggregator=sum, n_vars=227. The assigned graph shape is the GRID; the
+icosahedral multimesh at refinement r has 10·4^r+2 nodes and 30·4^r
+undirected edges (r=6 → 40,962 nodes / 122,880 edges → 245,760 arcs).
+grid2mesh connects each grid node to 4 mesh nodes; mesh2grid connects each
+grid node to 3 (containing-triangle) mesh nodes — both are input index
+arrays so the data pipeline (or input_specs) owns the geometry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import GNNConfig
+from repro.models.gnn.common import GNNBase, GraphInputs, init_mlp, mlp
+
+
+def mesh_sizes(refinement: int) -> Dict[str, int]:
+    nodes = 10 * 4 ** refinement + 2
+    arcs = 2 * 30 * 4 ** refinement
+    return {"mesh_nodes": nodes, "mesh_arcs": arcs}
+
+
+class GraphCast(GNNBase):
+    """inputs.senders/receivers carry the MESH arcs; grid2mesh / mesh2grid
+    assignments ride in inputs.trip_kj / trip_ji (reused index slots):
+      trip_kj: (N_grid·4,) mesh node per grid→mesh arc (grid node = i//4)
+      trip_ji: (N_grid·3,) mesh node per mesh→grid arc (grid node = i//3)
+    """
+
+    G2M, M2G = 4, 3
+
+    def init(self, key, d_feat: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_hidden
+        key, k1, k2, k3, k4, k5 = jax.random.split(key, 6)
+        p: Dict[str, Any] = {
+            "enc_grid": init_mlp(k1, [d_feat, d, d]),
+            "g2m": init_mlp(k2, [2 * d, d, d]),
+            "m2g": init_mlp(k4, [2 * d, d, d]),
+            "dec": init_mlp(k5, [2 * d, d, cfg.d_out]),
+            "mesh0": init_mlp(k3, [d, d]),
+        }
+        for i in range(cfg.n_layers):
+            key, ke, kn = jax.random.split(key, 3)
+            p[f"proc{i}"] = {
+                "edge": init_mlp(ke, [2 * d, d, d]),
+                "node": init_mlp(kn, [2 * d, d, d]),
+            }
+        return p
+
+    def forward(self, params, inputs: GraphInputs) -> jnp.ndarray:
+        cfg = self.cfg
+        d = cfg.d_hidden
+        n_grid = inputs.n_nodes
+        n_mesh = mesh_sizes(cfg.mesh_refinement)["mesh_nodes"]
+        ms, mr = inputs.senders, inputs.receivers          # mesh arcs
+        g2m = inputs.trip_kj                               # (n_grid·4,)
+        m2g = inputs.trip_ji                               # (n_grid·3,)
+
+        # encoder: grid features → latent; grid2mesh aggregation
+        xg = mlp(params["enc_grid"],
+                 inputs.node_feat.astype(self.compute_dtype), 2)
+        src_grid = jnp.repeat(jnp.arange(n_grid), self.G2M)
+        msg = mlp(params["g2m"],
+                  jnp.concatenate([xg[src_grid],
+                                   jnp.zeros_like(xg[src_grid])], -1), 2)
+        xm = jax.ops.segment_sum(msg, g2m, num_segments=n_mesh)
+        xm = mlp(params["mesh0"], xm, 1)
+
+        # processor: interaction network on the multimesh
+        for i in range(cfg.n_layers):
+            pp = params[f"proc{i}"]
+            e = mlp(pp["edge"], jnp.concatenate([xm[ms], xm[mr]], -1), 2)
+            agg = jax.ops.segment_sum(e, mr, num_segments=n_mesh)
+            xm = xm + mlp(pp["node"], jnp.concatenate([xm, agg], -1), 2)
+
+        # decoder: mesh2grid
+        dst_grid = jnp.repeat(jnp.arange(n_grid), self.M2G)
+        back = mlp(params["m2g"],
+                   jnp.concatenate([xm[m2g],
+                                    xg[dst_grid]], -1), 2)
+        xg_out = jax.ops.segment_sum(back, dst_grid, num_segments=n_grid)
+        return mlp(params["dec"], jnp.concatenate([xg, xg_out], -1), 2)

@@ -1,0 +1,208 @@
+"""Transformer building blocks — pure-JAX, GSPMD-friendly.
+
+Everything here is a plain function over parameter pytrees (no flax/optax
+offline). Attention is *blockwise* (online-softmax scan over KV chunks) so
+the 32k/500k dry-run cells never materialize an (S, S) score matrix — the
+jnp mirror of the Pallas flash kernel in ``repro.kernels.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, block: int = 1024,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention, O(block·S) memory.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H = KV·G (GQA).
+    Scans over KV blocks keeping running (max, denom, acc) — numerically
+    identical to full softmax attention (allclose-tested vs the dense ref).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = (q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * scale)
+
+    n_blocks = -(-Sk // block)
+    pad = n_blocks * block - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(B, n_blocks, block, KV, hd)
+    vb = vp.reshape(B, n_blocks, block, KV, hd)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, blk = inp
+        kf = kc.astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)           # (B,KV,G,Sq,blk)
+        kv_pos = blk * block + jnp.arange(block)
+        valid = kv_pos < Sk
+        if causal:
+            valid = valid[None, :] & (kv_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        else:
+            s = jnp.where(valid[None, None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, KV * G, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, q_offset: int = 0) -> jnp.ndarray:
+    """Reference full-materialization attention (tests / tiny shapes)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = jnp.arange(Sk)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4) \
+              .reshape(B, Sq, KV * G, hd).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray,
+                     cache_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-token decode vs a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd). Written as plain reductions so
+    GSPMD turns the softmax statistics into cross-shard collectives when the
+    cache's S axis is sharded (flash-decoding partial softmax).
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    if cache_len is not None:
+        valid = jnp.arange(S)[None] < cache_len[:, None]       # (B, S)
+        s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = x @ w_gate.astype(x.dtype)
+    u = x @ w_up.astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ w_down.astype(x.dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def softmax_xent_sharded(hidden: jnp.ndarray, head_w: jnp.ndarray,
+                         labels: jnp.ndarray) -> jnp.ndarray:
+    """Vocab-parallel cross entropy (Megatron-style), GSPMD-friendly.
+
+    ``head_w``: (d, V) with V sharded across the mesh ⇒ logits (B, S, V)
+    shard V; the only cross-chip traffic is the (B, S) softmax statistics.
+    The target logit is contracted with a one-hot (built shard-locally from
+    iota) instead of take_along_axis, whose scatter-backward would
+    materialize and all-reduce the full-vocab gradient (EXPERIMENTS.md
+    §Perf hillclimb #2)."""
+    logits = (hidden @ head_w.astype(hidden.dtype)).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)        # psum over V
+    V = logits.shape[-1]
+    onehot = (labels[..., None] == jnp.arange(V)[None, None, :])
+    tgt = jnp.einsum("bsv,bsv->bs", logits,
+                     onehot.astype(jnp.float32))              # shard-local
+    valid = labels >= 0
+    tot = jnp.where(valid, lse - tgt, 0.0).sum()
+    return tot / jnp.maximum(valid.sum(), 1)
+
+
+def softmax_xent_chunked(logits_fn, x: jnp.ndarray, labels: jnp.ndarray,
+                         chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy over a huge vocab without materializing full logits.
+
+    ``logits_fn(x_chunk) -> (B, chunk, V)``; scans over sequence chunks.
+    """
+    B, S, _ = x.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = xp.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    lc = lp.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        logits = logits_fn(xb).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = lb >= 0
+        tot = tot + jnp.where(valid, lse - tgt, 0.0).sum()
+        cnt = cnt + valid.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1)

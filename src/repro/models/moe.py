@@ -1,0 +1,132 @@
+"""Mixture-of-Experts block — grouped sort-based capacity dispatch.
+
+Tokens are split into groups (aligned with the data-parallel shards); within
+each group, (token, expert) slots are sorted by expert id, truncated to a
+static per-expert capacity, and run through a batched per-expert GEMM
+(`egcd,edf->egcf`). This keeps compiled FLOPs equal to *active* FLOPs
+(top_k/E of dense — no one-hot dispatch einsum blowup) and gives GSPMD a
+clean layout: groups shard over ("pod","data"); expert weights shard over
+"model" on the expert axis (EP) or the d_ff axis (TP) per
+``MoEConfig.moe_shard`` — a §Perf hillclimb knob.
+
+Overflow tokens beyond capacity are dropped (standard GShard/Switch
+semantics); the Switch-style load-balance aux loss is returned for training.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import MoEConfig
+
+
+def moe_capacity(group_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float = 1.25) -> int:
+    c = int(group_tokens * top_k * capacity_factor / n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for TPU lane alignment
+
+
+def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray],
+              cfg: MoEConfig, n_groups: int,
+              capacity_factor: float = 1.25,
+              exp_spec=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (T, d) → (y: (T, d), aux_loss scalar).
+
+    params: router (d, E); wg/wu/wd (E, d, f) / (E, f, d for wd).
+    ``exp_spec``: PartitionSpec for the (G, E, C, d) dispatch buffer —
+    pinning E to the expert-parallel axis makes the dispatch scatter an
+    all-to-all and keeps the per-expert GEMM shard-local (§Perf hillclimb:
+    MoE cell).
+    """
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = n_groups if T % n_groups == 0 else 1
+    S = T // G
+    C = moe_capacity(S, E, k, capacity_factor)
+
+    xg = x.reshape(G, S, d)
+    logits = (xg @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    # Switch aux loss: E * mean(fraction routed to e) * mean(router prob e)
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = jax.nn.one_hot(expert_idx, E).sum(axis=(0, 1, 2)) / (G * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    # -- per-group sort-based dispatch ---------------------------------------
+    N = S * k
+    e_flat = expert_idx.reshape(G, N)
+    g_flat = gate_vals.reshape(G, N)
+    tok_flat = jnp.repeat(jnp.arange(S)[None, :], G, 0).reshape(G, S, 1)
+    tok_flat = jnp.broadcast_to(tok_flat, (G, S, k)).reshape(G, N)
+
+    perm = jnp.argsort(e_flat, axis=1)
+    se = jnp.take_along_axis(e_flat, perm, axis=1)
+    st = jnp.take_along_axis(tok_flat, perm, axis=1)
+    sg = jnp.take_along_axis(g_flat, perm, axis=1)
+
+    ar = jnp.arange(N)[None, :]
+    is_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(is_start, ar, 0), axis=1)
+    pos = ar - run_start                                      # rank within expert
+    keep = pos < C
+    rows = jnp.where(keep, se * C + pos, E * C)               # OOB → dropped
+
+    def dispatch(xs, rows_g, toks_g):
+        buf = jnp.zeros((E * C, d), xs.dtype)
+        return buf.at[rows_g].set(xs[toks_g], mode="drop")
+
+    x_exp = jax.vmap(dispatch)(xg, rows, st)                  # (G, E*C, d)
+    x_exp = x_exp.reshape(G, E, C, d)
+    if exp_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        group_axes = exp_spec[0]
+        local_spec = _P(group_axes, None, None, None)
+        # 1) keep the dispatch scatter GROUP-LOCAL (pinning E here would
+        #    back-propagate into the scatter and replicate every update
+        #    across the EP axis — measured at +200 GB/chip, §Perf);
+        # 2) then reshard E onto the EP axis — replicated→sharded is a free
+        #    local slice — so the per-expert GEMM runs shard-local.
+        x_exp = jax.lax.with_sharding_constraint(x_exp, local_spec)
+        x_exp = jax.lax.with_sharding_constraint(x_exp, exp_spec)
+
+    wg = params["wg"].astype(x.dtype)                         # (E, d, f)
+    wu = params["wu"].astype(x.dtype)
+    wd = params["wd"].astype(x.dtype)                         # (E, f, d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_exp, wg)) \
+        * jnp.einsum("gecd,edf->gecf", x_exp, wu)
+    y_exp = jnp.einsum("gecf,efd->gecd", h, wd)               # (G, E, C, d)
+    if exp_spec is not None:
+        # combine: E-sharded → group-local via an explicit all-gather over
+        # the EP axis (the combine gather then runs shard-local)
+        y_exp = jax.lax.with_sharding_constraint(y_exp, exp_spec)
+        y_exp = jax.lax.with_sharding_constraint(y_exp, local_spec)
+    y_exp = y_exp.reshape(G, E * C, d)
+
+    def combine(ys, rows_g, toks_g, gates_g, keep_g):
+        picked = ys[jnp.minimum(rows_g, E * C - 1)]
+        picked = picked * (gates_g * keep_g)[:, None].astype(ys.dtype)
+        return jnp.zeros((S, d), ys.dtype).at[toks_g].add(picked)
+
+    y = jax.vmap(combine)(y_exp, rows, st, sg, keep)          # (G, S, d)
+    return y.reshape(T, d), aux.astype(jnp.float32)
+
+
+def init_moe_params(key, cfg: MoEConfig, d_model: int,
+                    dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, f = cfg.n_experts, cfg.d_ff_expert
+    s_in = (2.0 / (d_model + f)) ** 0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, E)) * 0.02).astype(dtype),
+        "wg": (jax.random.normal(k2, (E, d_model, f)) * s_in).astype(dtype),
+        "wu": (jax.random.normal(k3, (E, d_model, f)) * s_in).astype(dtype),
+        "wd": (jax.random.normal(k4, (E, f, d_model)) * s_in).astype(dtype),
+    }

@@ -1,0 +1,3 @@
+from repro.models.recsys.bst import BST, BSTInputs
+
+__all__ = ["BST", "BSTInputs"]

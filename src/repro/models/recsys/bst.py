@@ -1,0 +1,144 @@
+"""BST — Behavior Sequence Transformer (Chen et al., arXiv:1905.06874).
+
+Assigned config: embed_dim=32, seq_len=20, 1 transformer block, 8 heads,
+MLP 1024-512-256, leaky-ReLU. The hot path is the sparse embedding lookup
+into the item table (4.2M rows here — row-sharded over "model" in the
+dry-run; EmbeddingBag-style gathers are the `repro.sparse`/Pallas kernel
+substrate). The user behavior sequence (item+category embeddings + learned
+position) and the target item run through the transformer block; the output
+concats with user-profile feature embeddings into the scoring MLP.
+
+``retrieval_scores`` is the retrieval_cand path: one user embedding dotted
+against 10⁶ candidate embeddings (batched dot, candidates sharded over
+"data" — no loop).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import BSTConfig
+from repro.models import layers as L
+
+
+class BSTInputs(NamedTuple):
+    item_hist: jnp.ndarray   # int32 (B, S)
+    cate_hist: jnp.ndarray   # int32 (B, S)
+    target_item: jnp.ndarray  # int32 (B,)
+    target_cate: jnp.ndarray  # int32 (B,)
+    user_feats: jnp.ndarray  # int32 (B, F)
+    labels: jnp.ndarray      # f32 (B,) click labels
+
+
+class BST:
+    def __init__(self, cfg: BSTConfig):
+        self.cfg = cfg
+        self.d_model = 2 * cfg.embed_dim  # item ⊕ category per position
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = self.d_model
+        e = cfg.embed_dim
+        ks = jax.random.split(key, 12)
+        hd = d // cfg.n_heads
+        p: Dict[str, Any] = {
+            "item_emb": jax.random.normal(ks[0], (cfg.n_items, e)) * 0.02,
+            "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, e)) * 0.02,
+            "pos_emb": jax.random.normal(ks[2], (cfg.seq_len + 1, d)) * 0.02,
+            "user_emb": jax.random.normal(
+                ks[3], (cfg.n_user_feats, cfg.user_feat_vocab, e)) * 0.02,
+            "ln1": jnp.ones((d,)),
+            "ln2": jnp.ones((d,)),
+        }
+        for i in range(self.cfg.n_blocks):
+            kb = jax.random.split(ks[4 + i], 7)
+            p[f"blk{i}"] = {
+                "wq": L.init_linear(kb[0], d, d),
+                "wk": L.init_linear(kb[1], d, d),
+                "wv": L.init_linear(kb[2], d, d),
+                "wo": L.init_linear(kb[3], d, d),
+                "w1": L.init_linear(kb[4], d, 4 * d),
+                "w2": L.init_linear(kb[5], 4 * d, d),
+            }
+        mlp_in = (cfg.seq_len + 1) * d + cfg.n_user_feats * e
+        dims = (mlp_in,) + tuple(cfg.mlp_dims) + (1,)
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            p[f"mlp_w{i}"] = L.init_linear(ks[8], a, b)
+            p[f"mlp_b{i}"] = jnp.zeros((b,))
+        return p
+
+    # -- backbone -------------------------------------------------------------
+
+    def _seq_repr(self, params, item_hist, cate_hist, target_item,
+                  target_cate) -> jnp.ndarray:
+        """(B, S+1, d) transformer output over [history ; target]."""
+        cfg = self.cfg
+        it = jnp.concatenate([item_hist, target_item[:, None]], axis=1)
+        ct = jnp.concatenate([cate_hist, target_cate[:, None]], axis=1)
+        x = jnp.concatenate([jnp.take(params["item_emb"], it, axis=0),
+                             jnp.take(params["cate_emb"], ct, axis=0)],
+                            axis=-1)
+        x = x + params["pos_emb"][None]
+        B, S1, d = x.shape
+        H = cfg.n_heads
+        hd = d // H
+        for i in range(cfg.n_blocks):
+            bp = params[f"blk{i}"]
+            h = L.rms_norm(x, params["ln1"])
+            q = (h @ bp["wq"]).reshape(B, S1, H, hd)
+            k = (h @ bp["wk"]).reshape(B, S1, H, hd)
+            v = (h @ bp["wv"]).reshape(B, S1, H, hd)
+            o = L.dense_attention(q, k, v, causal=False)
+            x = x + o.reshape(B, S1, d) @ bp["wo"]
+            h = L.rms_norm(x, params["ln2"])
+            x = x + jax.nn.leaky_relu(h @ bp["w1"],
+                                      cfg.leaky_slope) @ bp["w2"]
+        return x
+
+    def _user_feat_emb(self, params, user_feats) -> jnp.ndarray:
+        """(B, F) ids → (B, F·e): per-field embedding tables."""
+        gathered = jnp.take_along_axis(
+            params["user_emb"][None],                         # (1, F, V, e)
+            user_feats[:, :, None, None],                     # (B, F, 1, 1)
+            axis=2)[:, :, 0]                                  # (B, F, e)
+        return gathered.reshape(user_feats.shape[0], -1)
+
+    def forward(self, params, inputs: BSTInputs) -> jnp.ndarray:
+        """Click logits (B,)."""
+        seq = self._seq_repr(params, inputs.item_hist, inputs.cate_hist,
+                             inputs.target_item, inputs.target_cate)
+        B = seq.shape[0]
+        feats = jnp.concatenate(
+            [seq.reshape(B, -1), self._user_feat_emb(params,
+                                                     inputs.user_feats)],
+            axis=-1)
+        x = feats
+        n_mlp = len(self.cfg.mlp_dims) + 1
+        for i in range(n_mlp):
+            x = x @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"]
+            if i < n_mlp - 1:
+                x = jax.nn.leaky_relu(x, self.cfg.leaky_slope)
+        return x[:, 0]
+
+    def loss(self, params, inputs: BSTInputs) -> jnp.ndarray:
+        logits = self.forward(params, inputs)
+        y = inputs.labels.astype(jnp.float32)
+        return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    # -- retrieval (retrieval_cand shape) --------------------------------------
+
+    def retrieval_scores(self, params, inputs: BSTInputs,
+                         cand_items: jnp.ndarray,
+                         cand_cates: jnp.ndarray) -> jnp.ndarray:
+        """Score 10⁶ candidates against one user: (B, C) batched dot."""
+        seq = self._seq_repr(params, inputs.item_hist, inputs.cate_hist,
+                             inputs.target_item, inputs.target_cate)
+        user = seq.mean(axis=1)                               # (B, d)
+        cand = jnp.concatenate(
+            [jnp.take(params["item_emb"], cand_items, axis=0),
+             jnp.take(params["cate_emb"], cand_cates, axis=0)], axis=-1)
+        return user @ cand.T                                  # (B, C)

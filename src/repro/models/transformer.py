@@ -1,0 +1,272 @@
+"""Decoder-only transformer LM (dense + MoE) with scan-over-layers.
+
+Covers the five assigned LM archs: GQA (+ optional QKV bias, qwen2), RoPE,
+RMSNorm, SwiGLU, MoE (qwen3-moe / dbrx). Parameters are stacked along a
+leading layer axis and the forward pass is a ``lax.scan`` so the 72B/132B
+dry-run cells compile with a bounded HLO. Activation checkpointing policy is
+``TransformerConfig.remat``; attention is blockwise (online softmax).
+
+Entry points used by the launcher / dry-run:
+  init(key)                          → params
+  forward(params, tokens)            → (hidden, aux)
+  loss(params, tokens, labels)       → scalar
+  prefill(params, tokens)            → (logits_last, kv_cache)
+  decode_step(params, token, cache, cache_len) → (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TransformerConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe_params, moe_block
+
+
+class TransformerLM:
+    """``act_spec`` (a PartitionSpec like P(("pod","data"), None, None)) pins
+    token activations to the batch axes between blocks. Without it GSPMD is
+    free to consume the "data" axis as a weight-contraction dimension and
+    replicate activations — the full-batch per-layer all-reduce pathology
+    the roofline analysis caught (EXPERIMENTS.md §Perf, hillclimb #1)."""
+
+    def __init__(self, cfg: TransformerConfig, moe_group_size: int = 4096,
+                 act_spec=None):
+        self.cfg = cfg
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.moe_group_size = moe_group_size
+        self.act_spec = act_spec
+
+    def _pin(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Constrain (B, S, d) activations to the batch axes."""
+        if self.act_spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.act_spec)
+
+    # -- init -----------------------------------------------------------------
+
+    def init_layer(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.head_dim
+        H, KV = cfg.n_heads, cfg.n_kv_heads
+        ks = jax.random.split(key, 12)
+        p: Dict[str, Any] = {
+            "ln1": jnp.ones((d,)),
+            "ln2": jnp.ones((d,)),
+            "wq": L.init_linear(ks[0], d, H * hd),
+            "wk": L.init_linear(ks[1], d, KV * hd),
+            "wv": L.init_linear(ks[2], d, KV * hd),
+            "wo": L.init_linear(ks[3], H * hd, d),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((H * hd,))
+            p["bk"] = jnp.zeros((KV * hd,))
+            p["bv"] = jnp.zeros((KV * hd,))
+        if cfg.moe is None:
+            p["wg"] = L.init_linear(ks[4], d, cfg.d_ff)
+            p["wu"] = L.init_linear(ks[5], d, cfg.d_ff)
+            p["wd"] = L.init_linear(ks[6], cfg.d_ff, d)
+        else:
+            p["moe"] = init_moe_params(ks[7], cfg.moe, d)
+            if cfg.moe.n_shared_experts:
+                f = cfg.moe.n_shared_experts * cfg.moe.d_ff_expert
+                p["sg"] = L.init_linear(ks[8], d, f)
+                p["su"] = L.init_linear(ks[9], d, f)
+                p["sd"] = L.init_linear(ks[10], f, d)
+        return p
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_head, k_layers = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        stacked = jax.vmap(self.init_layer)(layer_keys)
+        params = {
+            "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                      * 0.02),
+            "ln_f": jnp.ones((cfg.d_model,)),
+            "layers": stacked,
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = L.init_linear(k_head, cfg.d_model, cfg.vocab_size)
+        return params
+
+    # -- layer body -------------------------------------------------------------
+
+    def _attn(self, p, x, positions, kv=None, cache_len=None):
+        """kv: optional (k_cache, v_cache) for decode."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        cd = self.compute_dtype
+        h = L.rms_norm(x, p["ln1"].astype(cd), cfg.rms_eps)
+        q = h @ p["wq"].astype(cd)
+        k = h @ p["wk"].astype(cd)
+        v = h @ p["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, KV, hd)
+        v = v.reshape(B, S, KV, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if kv is None:
+            o = L.blockwise_attention(q, k, v, causal=True)
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache = kv
+            # insert the new token at cache_len (decode: S == 1)
+            idx = cache_len  # (,) int32
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, idx, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, idx, 0, 0))
+            o = L.decode_attention(
+                q, k_cache.astype(cd), v_cache.astype(cd),
+                cache_len=jnp.full((B,), idx + 1, jnp.int32))
+            new_kv = (k_cache, v_cache)
+        o = o.reshape(B, S, H * hd) @ p["wo"].astype(cd)
+        return x + o, new_kv
+
+    def _mlp(self, p, x):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        B, S, d = x.shape
+        h = L.rms_norm(x, p["ln2"].astype(cd), cfg.rms_eps)
+        if cfg.moe is None:
+            y = L.swiglu(h, p["wg"], p["wu"], p["wd"])
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            T = B * S
+            n_groups = max(1, T // self.moe_group_size)
+            exp_spec = None
+            if self.act_spec is not None and cfg.moe.moe_shard == "expert":
+                from jax.sharding import PartitionSpec as _P
+                batch_axes = self.act_spec[0]
+                exp_spec = _P(batch_axes, "model", None, None)
+            y2d, aux = moe_block(h.reshape(T, d), p["moe"], cfg.moe, n_groups,
+                                 exp_spec=exp_spec)
+            y = y2d.reshape(B, S, d)
+            if cfg.moe.n_shared_experts:
+                y = y + L.swiglu(h, p["sg"], p["su"], p["sd"])
+        return x + y, aux
+
+    def _layer(self, p, x, positions):
+        x, _ = self._attn(p, x, positions)
+        x = self._pin(x)
+        x, aux = self._mlp(p, x)
+        return self._pin(x), aux
+
+    # -- forward ---------------------------------------------------------------
+
+    def forward(self, params, tokens: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        cd = self.compute_dtype
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._pin(params["embed"].astype(cd)[tokens])
+
+        layer_fn = self._layer
+        if cfg.remat == "full":
+            layer_fn = jax.checkpoint(layer_fn)
+        elif cfg.remat == "dots":
+            layer_fn = jax.checkpoint(
+                layer_fn,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = layer_fn(lp, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        x = L.rms_norm(x, params["ln_f"].astype(cd), cfg.rms_eps)
+        return x, aux
+
+    def _head_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def logits(self, params, hidden: jnp.ndarray) -> jnp.ndarray:
+        return hidden @ self._head_w(params).astype(hidden.dtype)
+
+    def loss(self, params, tokens: jnp.ndarray, labels: jnp.ndarray,
+             aux_coef: float = 0.01) -> jnp.ndarray:
+        hidden, aux = self.forward(params, tokens)
+        w = self._head_w(params)
+        if self.act_spec is not None:
+            # vocab-parallel head: full logits are only V/256 per chip —
+            # no chunk scan, single deferred head-grad reduction
+            xent = L.softmax_xent_sharded(hidden, w, labels)
+        else:
+            xent = L.softmax_xent_chunked(
+                lambda xc: xc @ w.astype(xc.dtype), hidden, labels)
+        return xent + aux_coef * aux / max(self.cfg.n_layers, 1)
+
+    # -- serving ----------------------------------------------------------------
+
+    def prefill(self, params, tokens: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Full-sequence forward returning last-position logits + KV cache.
+
+        Cache layout: (L, B, S, KV, hd) ×2, bf16.
+        """
+        cfg = self.cfg
+        cd = self.compute_dtype
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = self._pin(params["embed"].astype(cd)[tokens])
+
+        def body(carry, lp):
+            x, aux = carry
+            # attention with cache emission
+            x, (k, v) = self._attn(lp, x, positions)
+            x, a = self._mlp(lp, self._pin(x))
+            return (self._pin(x), aux + a), (k.astype(jnp.bfloat16),
+                                             v.astype(jnp.bfloat16))
+
+        (x, _), (ks, vs) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        x = L.rms_norm(x, params["ln_f"].astype(cd), cfg.rms_eps)
+        logits = self.logits(params, x[:, -1:])
+        return logits, (ks, vs)
+
+    def decode_step(self, params, token: jnp.ndarray,
+                    cache: Tuple[jnp.ndarray, jnp.ndarray],
+                    cache_len: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """One-token decode. token: (B, 1); cache: (L, B, S, KV, hd) ×2."""
+        cfg = self.cfg
+        cd = self.compute_dtype
+        B = token.shape[0]
+        positions = jnp.broadcast_to(cache_len[None, None], (B, 1))
+        x = params["embed"].astype(cd)[token]
+        ks, vs = cache
+
+        def body(x, inp):
+            lp, k_c, v_c = inp
+            x, (k_c, v_c) = self._attn(lp, x, positions, kv=(k_c, v_c),
+                                       cache_len=cache_len)
+            x, _ = self._mlp(lp, x)
+            return x, (k_c, v_c)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], ks, vs))
+        x = L.rms_norm(x, params["ln_f"].astype(cd), cfg.rms_eps)
+        return self.logits(params, x), (ks, vs)
+
+    def make_cache(self, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+        return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

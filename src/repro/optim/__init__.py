@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compression import CompressionState, compress_grads, compression_init
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "global_norm",
+    "warmup_cosine",
+    "CompressionState", "compress_grads", "compression_init",
+]

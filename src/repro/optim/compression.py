@@ -1,0 +1,56 @@
+"""Error-feedback top-k gradient compression (Stich et al. / DGC-style).
+
+Distributed-optimization trick for the 1000+-node posture: before the
+cross-pod gradient all-reduce, each leaf keeps only its top ``ratio``
+fraction of entries by magnitude; the residual is carried into the next
+step's gradient (error feedback), which preserves convergence. Sparsifying
+before the 'pod'-axis reduction cuts the slowest-link collective bytes by
+~1/ratio. Applied leaf-wise with static k (= ratio·size) so shapes stay
+fixed under jit; the compressed tensor is re-densified (scatter) because
+GSPMD collectives are dense — the win on real hardware comes from chunked
+allreduce of the (values, indices) pairs, which ships in
+``distrib.collectives.sparse_allreduce``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # same structure/shapes as grads
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    flat = jnp.abs(x).reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.abs(x) >= thresh
+
+
+def compress_grads(grads, state: CompressionState,
+                   ratio: float) -> Tuple[Any, CompressionState]:
+    """Returns (sparsified grads, new residual state)."""
+    if ratio >= 1.0:
+        return grads, state
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = _topk_mask(acc, ratio)
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, CompressionState(resid)

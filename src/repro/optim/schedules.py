@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of the step index)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup_steps: int, total_steps: int,
+                  min_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * step / max(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,20 @@
+from repro.sparse.segment import segment_max, segment_mean, segment_softmax, segment_sum
+from repro.sparse.ell import EllGraph, build_ell, ell_spmm, ell_spmv
+from repro.sparse.coo import coo_spmm, scatter_add
+from repro.sparse.embedding_bag import embedding_bag
+from repro.sparse.sampler import NeighborSampler
+
+__all__ = [
+    "segment_sum",
+    "segment_max",
+    "segment_mean",
+    "segment_softmax",
+    "EllGraph",
+    "build_ell",
+    "ell_spmv",
+    "ell_spmm",
+    "coo_spmm",
+    "scatter_add",
+    "embedding_bag",
+    "NeighborSampler",
+]

@@ -1,0 +1,31 @@
+"""COO (edge-list) sparse ops — the shardable message-passing layout.
+
+Under pjit, edges shard over the ("pod","data") mesh axes and the
+``segment_sum`` scatter becomes a psum across edge shards (GSPMD inserts the
+all-reduce). Used by the GNN models and by distributed RWR.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_add(messages: jnp.ndarray, receivers: jnp.ndarray,
+                n_nodes: int) -> jnp.ndarray:
+    """Aggregate per-edge messages into per-node sums: (E, d) → (N, d)."""
+    return jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+
+
+def coo_spmm(senders: jnp.ndarray, receivers: jnp.ndarray,
+             weights: jnp.ndarray, x: jnp.ndarray, n_nodes: int,
+             edge_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y[v] = sum_{(u→v) in E} w_uv * x[u]; padded edges masked out."""
+    msg = x[senders] * weights[:, None].astype(x.dtype)
+    if edge_mask is not None:
+        msg = jnp.where(edge_mask[:, None], msg, 0.0)
+        # route masked edges to a dump row to keep scatter well-formed
+        receivers = jnp.where(edge_mask, receivers, n_nodes)
+        return jax.ops.segment_sum(msg, receivers,
+                                   num_segments=n_nodes + 1)[:n_nodes]
+    return jax.ops.segment_sum(msg, receivers, num_segments=n_nodes)

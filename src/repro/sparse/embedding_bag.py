@@ -1,0 +1,45 @@
+"""EmbeddingBag — gather + segment-reduce (JAX has no native one).
+
+The recsys hot path: multi-hot categorical fields → ragged lookup into a huge
+row-sharded table → per-bag reduce. Implemented as ``jnp.take`` +
+``jax.ops.segment_sum`` per the assignment; the Pallas fused version lives in
+``repro.kernels.embedding_bag``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  offsets: jnp.ndarray | None = None,
+                  bag_ids: jnp.ndarray | None = None,
+                  n_bags: int | None = None,
+                  mode: str = "sum",
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Ragged bag-reduce over embedding rows.
+
+    Either ``offsets`` (torch-style, bag b = indices[offsets[b]:offsets[b+1]])
+    or explicit ``bag_ids`` per index may be given.
+    """
+    if bag_ids is None:
+        assert offsets is not None
+        n_bags = offsets.shape[0]
+        positions = jnp.arange(indices.shape[0])
+        # bag_ids[i] = number of offsets <= i  - 1
+        bag_ids = jnp.searchsorted(offsets, positions, side="right") - 1
+    assert n_bags is not None
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        tot = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(bag_ids, rows.dtype), bag_ids,
+                                  num_segments=n_bags)
+        return tot / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,44 @@
+"""Segment reductions — the GNN/RWR message-passing primitive.
+
+JAX has no native EmbeddingBag / CSR; per the assignment, message passing is
+implemented as edge-index gathers + ``jax.ops.segment_*`` scatters. These thin
+wrappers pin ``num_segments`` (static shapes) and add a masked softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                 num_segments: int) -> jnp.ndarray:
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], data.dtype), segment_ids,
+                      num_segments)
+    cnt = jnp.maximum(cnt, 1)
+    if data.ndim > 1:
+        cnt = cnt.reshape((-1,) + (1,) * (data.ndim - 1))
+    return tot / cnt
+
+
+def segment_softmax(logits: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Numerically-stable softmax within each segment (edge-softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    # empty segments produce -inf max; gather is safe because those ids never
+    # appear in segment_ids
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    denom = segment_sum(expd, segment_ids, num_segments)
+    return expd / jnp.maximum(denom[segment_ids], 1e-30)

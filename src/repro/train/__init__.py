@@ -1,0 +1,3 @@
+from repro.train.state import TrainState, make_train_step, new_train_state
+
+__all__ = ["TrainState", "make_train_step", "new_train_state"]

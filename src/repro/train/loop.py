@@ -1,0 +1,91 @@
+"""Training loop with checkpoint/restart, straggler monitoring, and metrics.
+
+Drives any family's train step (LM used by examples/train_lm.py). Designed
+so a SIGTERM/crash at any point resumes from the last committed checkpoint
+(restore-on-start), which is the fault-tolerance drill tests exercise.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config.base import TrainConfig
+from repro.distrib.fault import StragglerMonitor
+from repro.train.state import TrainState
+
+
+@dataclass
+class LoopMetrics:
+    steps: List[int] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+
+    def log(self, step: int, loss: float, dt: float) -> None:
+        self.steps.append(step)
+        self.losses.append(loss)
+        self.step_times.append(dt)
+
+
+class TrainLoop:
+    def __init__(self, step_fn: Callable, state: TrainState,
+                 batch_fn: Callable[[int], tuple], tcfg: TrainConfig,
+                 log_every: int = 10, print_fn=print):
+        self.tcfg = tcfg
+        self.batch_fn = batch_fn
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        self.ckpt = Checkpointer(tcfg.checkpoint_dir,
+                                 keep=tcfg.keep_checkpoints)
+        self.metrics = LoopMetrics()
+        self.monitor = StragglerMonitor()
+        self.log_every = log_every
+        self.print = print_fn
+        self._stop = False
+
+        # restore-on-start (fault tolerance drill)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, step = self.ckpt.restore(state)
+            self.start_step = step + 1
+            self.print(f"[loop] restored checkpoint step {step}")
+        else:
+            self.start_step = 0
+        self.state = state
+
+    def request_stop(self, *_):
+        self._stop = True
+
+    def run(self, n_steps: Optional[int] = None) -> LoopMetrics:
+        total = n_steps if n_steps is not None else self.tcfg.total_steps
+        end = self.start_step + total
+        prev = signal.signal(signal.SIGTERM, self.request_stop)
+        try:
+            for step in range(self.start_step, end):
+                if self._stop:
+                    self.print(f"[loop] SIGTERM — checkpointing at {step}")
+                    break
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                self.state, m = self.step_fn(self.state, *batch)
+                loss = float(m["loss"])
+                dt = time.perf_counter() - t0
+                self.metrics.log(step, loss, dt)
+                self.monitor.record(0, dt)
+                if step % self.log_every == 0:
+                    self.print(f"[loop] step {step} loss {loss:.4f} "
+                               f"({dt*1e3:.0f} ms)")
+                if (step + 1) % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save(step, self.state)
+            else:
+                step = end - 1
+            self.ckpt.save(step, self.state)
+            self.ckpt.wait()
+        finally:
+            signal.signal(signal.SIGTERM, prev)
+        return self.metrics

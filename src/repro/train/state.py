@@ -1,0 +1,63 @@
+"""TrainState + generic train-step builder (fwd + bwd + AdamW) with optional
+gradient-accumulation microbatching."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def new_train_state(params) -> TrainState:
+    return TrainState(params, adamw_init(params))
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig,
+                    microbatches: int = 1) -> Callable:
+    """loss_fn(params, *batch) → scalar. Batch leaves have a leading
+    global-batch axis; with microbatches > 1 they are split and gradients
+    accumulated in f32 (scan keeps the HLO bounded)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, *batch)
+
+    def step(state: TrainState, *batch) -> Tuple[TrainState, dict]:
+        if microbatches > 1:
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                loss, g = grads_of(state.params, mb)
+                return (acc[0] + loss,
+                        jax.tree.map(lambda a, b:
+                                     a + b.astype(jnp.float32), acc[1], g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params))
+            (loss, grads), _ = jax.lax.scan(body, zero, split)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        lr = warmup_cosine(state.opt.step, tcfg.learning_rate,
+                           tcfg.warmup_steps, tcfg.total_steps)
+        params, opt, gnorm = adamw_update(
+            grads, state.opt, state.params, lr,
+            b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm,
+                                         "lr": lr}
+
+    return step

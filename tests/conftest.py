@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device; only launch/dryrun.py forces the 512-device host platform."""
+
+import numpy as np
+import pytest
+
+from repro.config.base import IGPMConfig
+from repro.data.temporal import TemporalGraphSpec, generate_stream
+
+
+@pytest.fixture(scope="session")
+def toy_stream():
+    spec = TemporalGraphSpec("toy", "sparse_dense", n_vertices=512,
+                             n_edges=4096, n_steps=40, seed=7)
+    return generate_stream(spec, n_measured_steps=4, u_max=128)
+
+
+@pytest.fixture(scope="session")
+def toy_cfg():
+    return IGPMConfig(n_max=512, e_max=16384, rwr_iters=12,
+                      rwr_iters_incremental=4, top_k_patterns=8,
+                      init_community_size=32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,88 @@
+"""Cell-builder contract: the dry-run's ShapeDtypeStruct args must agree
+with the concrete smoke args (same tree structure / dtypes), shardings must
+cover every arg, and published dims must round-trip."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config.registry import get_arch
+from repro.launch.cells import _pad512, build_cell, gnn_cell_sizes, input_specs
+from repro.launch.mesh import make_host_mesh
+
+
+def test_pad512_contract():
+    assert _pad512(512) == 512
+    assert _pad512(513) == 1024
+    assert _pad512(61859140) == 61859328
+    assert _pad512(61859140) % 512 == 0
+
+
+def test_gnn_cell_sizes_published():
+    arch = get_arch("meshgraphnet")
+    dims = arch.shape("minibatch_lg").dims
+    n, e = gnn_cell_sizes("minibatch_lg", dims)
+    assert n == 1024 * (1 + 15 + 15 * 10)
+    assert e == 1024 * 15 + 1024 * 15 * 10
+    n, e = gnn_cell_sizes("molecule", arch.shape("molecule").dims)
+    assert n == 128 * 30 and e == 2 * 128 * 64
+
+
+@pytest.mark.parametrize("arch_id,shape", [
+    ("smollm-135m", "train_4k"),
+    ("smollm-135m", "decode_32k"),
+    ("schnet", "molecule"),
+    ("bst", "serve_p99"),
+])
+def test_sds_and_concrete_trees_agree(arch_id, shape):
+    arch = get_arch(arch_id, smoke=True)
+    sds_cell = build_cell(arch, shape, smoke=True, concrete=False)
+    con_cell = build_cell(arch, shape, smoke=True, concrete=True)
+    t1 = jax.tree_util.tree_structure(sds_cell.args)
+    t2 = jax.tree_util.tree_structure(con_cell.args)
+    assert t1 == t2
+    for a, b in zip(jax.tree.leaves(sds_cell.args),
+                    jax.tree.leaves(con_cell.args)):
+        assert a.shape == b.shape, (a.shape, b.shape)
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+
+
+def test_full_specs_no_allocation():
+    """input_specs of the 72B config must be pure ShapeDtypeStructs."""
+    arch = get_arch("qwen2-72b")
+    args = input_specs(arch, "train_4k")
+    for leaf in jax.tree.leaves(args):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    # published shape numbers round-trip
+    state, tokens, labels = args
+    assert tokens.shape == (256, 4096)
+    emb = state.params["embed"]
+    assert emb.shape == (152064, 8192)
+
+
+def test_shardings_cover_args_on_mesh():
+    mesh = make_host_mesh()
+    arch = get_arch("smollm-135m", smoke=True)
+    cell = build_cell(arch, "train_4k", mesh=mesh, smoke=True)
+    s1 = jax.tree_util.tree_structure(cell.args)
+    s2 = jax.tree_util.tree_structure(
+        cell.in_shardings,
+        is_leaf=lambda x: hasattr(x, "spec"))
+    assert s1 == s2
+
+
+def test_decode_cache_published_geometry():
+    arch = get_arch("qwen2-72b")
+    args = input_specs(arch, "long_500k")
+    _, token, (k_cache, v_cache), cache_len = args
+    assert token.shape == (1, 1)
+    assert k_cache.shape == (80, 1, 524288, 8, 128)
+    assert k_cache.dtype == np.dtype("bfloat16")
+
+
+def test_igpm_cell_published_scale():
+    arch = get_arch("igpm-pem")
+    cell = build_cell(arch, "friends2008")
+    g, r0 = cell.args
+    assert g.senders.shape[0] == _pad512(2 * 3_871_909)
+    assert r0.shape == (224_879, 4)

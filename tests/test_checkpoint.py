@@ -1,0 +1,70 @@
+"""Checkpointing: round trip, atomic commit, keep-N, async, restart drill."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.train.state import TrainState, new_train_state
+
+
+def _state():
+    params = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))}
+    return new_train_state(params)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    st = _state()
+    ck.save(7, st)
+    like = jax.tree.map(jnp.zeros_like, st)
+    restored, step = ck.restore(like)
+    assert step == 7
+    np.testing.assert_array_equal(restored.params["w"], st.params["w"])
+    assert int(restored.opt.step) == 0
+
+
+def test_half_written_checkpoint_ignored(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    st = _state()
+    ck.save(1, st)
+    # simulate a crash mid-save of step 2: .tmp dir left behind
+    os.makedirs(tmp_path / "step_000000000002.tmp")
+    assert ck.latest_step() == 1
+    _, step = ck.restore(jax.tree.map(jnp.zeros_like, st))
+    assert step == 1
+
+
+def test_keep_n_garbage_collection(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_save=False)
+    st = _state()
+    for s in (1, 2, 3, 4):
+        ck.save(s, st)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_async_save_is_joined(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=True)
+    st = _state()
+    ck.save(5, st)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_state())
+
+
+def test_dtype_preserved_on_restore(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    st = {"p": jnp.ones((2,), jnp.bfloat16), "q": jnp.ones((2,), jnp.int32)}
+    ck.save(0, st)
+    restored, _ = ck.restore(jax.tree.map(jnp.zeros_like, st))
+    assert restored["p"].dtype == jnp.bfloat16
+    assert restored["q"].dtype == jnp.int32

@@ -1,0 +1,91 @@
+"""Data pipelines: temporal stream twins + LM token pipeline + sampler."""
+
+import numpy as np
+import pytest
+
+from repro.data.lm import TokenPipeline
+from repro.data.temporal import (DATASET_TWINS, TemporalGraphSpec,
+                                 generate_stream, scaled_twin)
+from repro.sparse.sampler import NeighborSampler
+
+
+def test_twins_match_table_iii():
+    t = DATASET_TWINS["friends2008"]
+    assert (t.n_vertices, t.n_edges, t.n_steps) == (224_879, 3_871_909, 6_893)
+    assert set(DATASET_TWINS) == {"friends2008", "transactions",
+                                  "sx-askubuntu", "sx-mathoverflow"}
+
+
+def test_scaled_twin_scales():
+    t = scaled_twin("sx-mathoverflow", 0.1, n_steps=50)
+    assert t.n_vertices == 2481
+    assert t.n_steps == 50
+
+
+@pytest.mark.parametrize("kind", ["scale_free", "random", "sparse_isolated",
+                                  "sparse_dense", "dense"])
+def test_all_graph_kinds_generate(kind):
+    spec = TemporalGraphSpec("t", kind, 256, 2048, 20, seed=1)
+    stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+    assert len(stream.updates) == 3
+    g = stream.graph
+    assert int(np.asarray(g.edge_mask).sum()) > 0
+    for upd in stream.updates:
+        assert int(np.asarray(upd.add_mask).sum()) > 0
+
+
+def test_stream_updates_within_capacity():
+    spec = TemporalGraphSpec("t", "random", 128, 1024, 10, seed=2)
+    stream = generate_stream(spec, n_measured_steps=4, u_max=64)
+    for upd in stream.updates:
+        assert upd.add_src.shape == (64,)
+
+
+def test_lm_pipeline_deterministic_and_sharded():
+    pipe = TokenPipeline(vocab_size=512, batch=8, seq_len=16, seed=3)
+    t1, l1 = pipe.batch_at(5)
+    t2, l2 = pipe.batch_at(5)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(t1[:, 1:], l1[:, :-1])
+    s0, _ = pipe.shard_at(5, rank=0, world=4)
+    s1, _ = pipe.shard_at(5, rank=1, world=4)
+    np.testing.assert_array_equal(s0, t1[:2])
+    np.testing.assert_array_equal(s1, t1[2:4])
+    assert t1.max() < 512
+
+
+def test_lm_pipeline_has_learnable_structure():
+    pipe = TokenPipeline(vocab_size=512, batch=4, seq_len=256, seed=0)
+    toks, labs = pipe.batch_at(0)
+    # bigram structure: conditional entropy must be far below uniform
+    from collections import Counter, defaultdict
+    trans = defaultdict(Counter)
+    for row_t, row_l in zip(toks, labs):
+        for a, b in zip(row_t, row_l):
+            trans[int(a)][int(b)] += 1
+    top1 = sum(c.most_common(1)[0][1] for c in trans.values())
+    total = sum(sum(c.values()) for c in trans.values())
+    assert top1 / total > 0.2  # >20% of transitions are the modal next-token
+
+
+def test_neighbor_sampler_block_shapes():
+    rng = np.random.default_rng(0)
+    n, m = 100, 600
+    s = rng.integers(0, n, m)
+    r = rng.integers(0, n, m)
+    samp = NeighborSampler(s, r, n, seed=1)
+    block = samp.sample_block(np.arange(8), fanout1=5, fanout2=3)
+    assert block.hop1.shape == (8, 5)
+    assert block.hop2.shape == (8, 5, 3)
+    se, re = block.flatten_edges()
+    assert len(se) == 8 * 5 + 8 * 5 * 3
+    assert block.hop1.max() < n
+
+
+def test_neighbor_sampler_isolated_nodes_self_loop():
+    # node 3 isolated
+    s = np.array([0, 1])
+    r = np.array([1, 0])
+    samp = NeighborSampler(s, r, 4, seed=0)
+    h = samp.sample_neighbors(np.array([3]), fanout=4)
+    assert (h == 3).all()

@@ -1,0 +1,81 @@
+"""Dynamic graph substrate: updates, degrees, masks."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (UpdateBatch, add_edges, apply_update, new_graph,
+                              remove_edges, set_labels, transition_weights,
+                              updated_vertices, vertex_mask)
+
+
+def _toy():
+    return new_graph(8, 32, labels=np.array([0, 1, 0, 1, 0, 1, 0, 1]))
+
+
+def test_add_edges_updates_degree_and_cursor():
+    g = _toy()
+    src = jnp.array([0, 1, 2, 0], jnp.int32)
+    dst = jnp.array([1, 2, 3, 5], jnp.int32)
+    mask = jnp.array([True, True, False, True])
+    g = add_edges(g, src, dst, mask)
+    assert int(g.n_edges) == 3
+    assert float(g.degree[0]) == 2.0
+    assert float(g.degree[2]) == 0.0  # masked-out edge ignored
+    live = np.asarray(g.edge_mask)
+    assert live.sum() == 3
+
+
+def test_add_edges_packs_contiguously():
+    g = _toy()
+    mask = jnp.array([False, True, False, True])
+    g = add_edges(g, jnp.array([0, 1, 2, 3], jnp.int32),
+                  jnp.array([4, 5, 6, 7], jnp.int32), mask)
+    s = np.asarray(g.senders)[:2]
+    assert set(s.tolist()) == {1, 3}
+
+
+def test_remove_edges_first_occurrence():
+    g = _toy()
+    ones = jnp.ones(3, bool)
+    g = add_edges(g, jnp.array([0, 0, 1], jnp.int32),
+                  jnp.array([1, 1, 2], jnp.int32), ones)
+    g = remove_edges(g, jnp.array([0], jnp.int32), jnp.array([1], jnp.int32),
+                     jnp.array([True]))
+    assert int(np.asarray(g.edge_mask).sum()) == 2  # one of the two (0,1)s
+    assert float(g.degree[0]) == 1.0
+
+
+def test_set_labels_and_masking():
+    g = _toy()
+    g = set_labels(g, jnp.array([2, 3], jnp.int32), jnp.array([3, 3], jnp.int32),
+                   jnp.array([True, False]))
+    assert int(g.labels[2]) == 3
+    assert int(g.labels[3]) == 1  # masked write dropped
+
+
+def test_transition_weights_normalized():
+    g = _toy()
+    ones = jnp.ones(3, bool)
+    g = add_edges(g, jnp.array([0, 0, 1], jnp.int32),
+                  jnp.array([1, 2, 0], jnp.int32), ones)
+    w = np.asarray(transition_weights(g))
+    # vertex 0 has out-degree 2 → each arc weight 0.5
+    assert np.isclose(w[:2], 0.5).all()
+    assert np.isclose(w[2], 1.0)
+    assert (w[3:] == 0).all()
+
+
+def test_updated_vertices_and_mask():
+    g = _toy()
+    upd = UpdateBatch.additions(np.array([1]), np.array([4]), u_max=8)
+    ids, mk = updated_vertices(g, upd, v_max=48)
+    vm = np.asarray(vertex_mask(ids, mk, g.n_max))
+    assert vm[1] and vm[4]
+    assert vm.sum() == 2
+
+
+def test_apply_update_roundtrip():
+    g = _toy()
+    upd = UpdateBatch.additions(np.array([0, 2]), np.array([1, 3]), u_max=8)
+    g = apply_update(g, upd)
+    assert int(np.asarray(g.edge_mask).sum()) == 4  # 2 undirected = 4 arcs

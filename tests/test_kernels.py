@@ -1,0 +1,128 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode).
+
+Sweeps shapes and dtypes per the assignment; tolerances follow
+kernel_taxonomy §E (bf16 long-reduction → 2e-2, f32 → 1e-5)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.expert_gemm.ops import expert_gemm
+from repro.kernels.expert_gemm.ref import expert_gemm_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmv_ell.ops import ell_spmm_kernel
+from repro.kernels.spmv_ell.ref import ell_spmm_ref
+from repro.sparse.ell import build_ell, dense_adj
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.dtype("bfloat16") \
+        else dict(rtol=1e-4, atol=1e-5)
+
+
+# -- spmv_ell -------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,k,d", [
+    (50, 200, 8, 1),     # RWR single source
+    (300, 2000, 16, 4),  # label-RWR batch
+    (128, 500, 4, 33),   # d > VMEM-resident bound → chunked wrapper
+    (64, 0, 8, 2),       # empty graph
+])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_spmv_ell_matches_ref(n, m, k, d, dtype, rng):
+    s = rng.integers(0, n, m)
+    r = rng.integers(0, n, m)
+    g = build_ell(s, r, n, k=k)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(dtype))
+    got = ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, n)
+    want = ell_spmm_ref(g.cols, g.vals, g.mask, g.row_ids, x, n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(np.dtype(dtype)))
+
+
+def test_spmv_ell_matches_dense_adjacency(rng):
+    n, m = 60, 300
+    s = rng.integers(0, n, m)
+    r = rng.integers(0, n, m)
+    g = build_ell(s, r, n, k=8)
+    x = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+    got = ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, n)
+    want = dense_adj(g) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_spmv_ell_row_splitting_high_degree(rng):
+    # one hub with degree 100 >> k=8 → row-split correctness
+    n = 40
+    s = np.concatenate([np.zeros(100, np.int64), rng.integers(1, n, 50)])
+    r = np.concatenate([rng.integers(1, n, 100), rng.integers(0, n, 50)])
+    g = build_ell(s, r, n, k=8)
+    x = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    got = ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, n)
+    want = dense_adj(g) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# -- flash attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,KV,hd", [
+    (128, 4, 4, 64),    # MHA
+    (256, 4, 2, 64),    # GQA
+    (200, 8, 1, 32),    # MQA + ragged S + small hd (lane padding)
+    (384, 4, 2, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention_matches_ref(S, H, KV, hd, causal, dtype, rng):
+    B = 2
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dt)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dt)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dt)
+    got = flash_attention(q, k, v, causal=causal)
+    G = H // KV
+    qh = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV * G, S, hd)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * KV, 1, S, hd), G,
+                    axis=1).reshape(B * KV * G, S, hd)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * KV, 1, S, hd), G,
+                    axis=1).reshape(B * KV * G, S, hd)
+    want = attention_ref(qh, kh, vh, causal=causal) \
+        .reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(np.dtype(dtype)))
+
+
+def test_flash_matches_model_blockwise_path(rng):
+    from repro.models.layers import blockwise_attention
+    B, S, H, KV, hd = 1, 160, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    np.testing.assert_allclose(flash_attention(q, k, v, causal=True),
+                               blockwise_attention(q, k, v, causal=True,
+                                                   block=64),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- expert gemm -----------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 96, 200, 72),     # unaligned everything
+    (8, 128, 128, 128),   # aligned
+    (2, 320, 64, 768),    # qwen3-moe-ish expert
+    (1, 8, 8, 8),         # tiny
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_expert_gemm_matches_ref(e, c, d, f, dtype, rng):
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    x = jnp.asarray(rng.standard_normal((e, c, d)), dt)
+    w = jnp.asarray(rng.standard_normal((e, d, f)), dt)
+    got = expert_gemm(x, w)
+    want = expert_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **_tol(np.dtype(dtype)))

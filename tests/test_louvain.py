@@ -1,0 +1,83 @@
+"""Louvain vs networkx oracle; constrained splitting; dendrogram cuts."""
+
+import numpy as np
+import pytest
+
+from repro.core.louvain import (Dendrogram, build_dendrogram, louvain,
+                                louvain_constrained, modularity)
+
+
+def _planted(n_comm=4, size=32, p_in=0.3, p_out=0.01, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_comm * size
+    src, dst = [], []
+    for i in range(n):
+        for j in range(i + 1, n):
+            p = p_in if i // size == j // size else p_out
+            if rng.random() < p:
+                src += [i, j]
+                dst += [j, i]
+    return np.array(src), np.array(dst), n
+
+
+def test_louvain_recovers_planted_communities():
+    s, d, n = _planted()
+    comm = louvain(s, d, n, seed=1)
+    # communities should align with the planted blocks (allow minor noise)
+    purity = 0
+    for b in range(4):
+        block = comm[b * 32:(b + 1) * 32]
+        purity += np.bincount(block).max()
+    assert purity / n > 0.9
+
+
+def test_modularity_beats_random_partition():
+    s, d, n = _planted()
+    comm = louvain(s, d, n, seed=1)
+    q_louvain = modularity(s, d, n, comm)
+    rng = np.random.default_rng(0)
+    q_rand = modularity(s, d, n, rng.integers(0, 4, n))
+    assert q_louvain > q_rand + 0.2
+
+
+def test_matches_networkx_quality():
+    nx = pytest.importorskip("networkx")
+    s, d, n = _planted(seed=3)
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from(zip(s.tolist(), d.tolist()))
+    nx_comms = nx.community.louvain_communities(g, seed=0)
+    nx_q = nx.community.modularity(g, nx_comms)
+    ours = louvain(s, d, n, seed=1)
+    our_q = modularity(s, d, n, ours)
+    assert our_q > nx_q - 0.05  # within 0.05 modularity of the oracle
+
+
+def test_constrained_respects_max_size():
+    s, d, n = _planted()
+    for c in (8, 16, 50):
+        comm = louvain_constrained(s, d, n, max_size=c)
+        sizes = np.bincount(comm)
+        assert sizes.max() <= c
+
+
+def test_dendrogram_cut_sizes_and_monotonicity():
+    s, d, n = _planted()
+    dg = build_dendrogram(s, d, n, min_size=2)
+    prev_n = None
+    for c in (4, 8, 16, 64, 128):
+        comm = dg.cut(c)
+        sizes = np.bincount(comm)
+        assert sizes.max() <= max(c, 2)
+        n_comm = comm.max() + 1
+        if prev_n is not None:
+            assert n_comm <= prev_n  # coarser threshold → fewer communities
+        prev_n = n_comm
+
+
+def test_dendrogram_cut_is_partition():
+    s, d, n = _planted(seed=5)
+    dg = build_dendrogram(s, d, n)
+    comm = dg.cut(16)
+    assert comm.shape == (n,)
+    assert (comm >= 0).all()

@@ -1,0 +1,76 @@
+"""PEM: community-gated recompute sets + DQN feedback loop."""
+
+import numpy as np
+
+from repro.config.base import IGPMConfig
+from repro.core.graph import new_graph
+from repro.core.pem import PartialExecutionManager
+
+
+def _two_cliques():
+    """Two 8-cliques joined by one edge — unambiguous communities."""
+    edges = []
+    for base in (0, 8):
+        for i in range(8):
+            for j in range(i + 1, 8):
+                edges.append((base + i, base + j))
+    edges.append((0, 8))
+    s = np.array([e[0] for e in edges] + [e[1] for e in edges])
+    r = np.array([e[1] for e in edges] + [e[0] for e in edges])
+    return new_graph(16, 256, labels=np.zeros(16, np.int32), senders=s,
+                     receivers=r)
+
+
+def test_recompute_mask_covers_touched_community():
+    g = _two_cliques()
+    cfg = IGPMConfig(n_max=16, e_max=256, init_community_size=8,
+                     min_community_size=2)
+    pem = PartialExecutionManager(cfg, adaptive=False)
+    mask, frac = pem.recompute_mask(g, np.array([3]))
+    assert mask[3]
+    # the whole first clique is in; the second untouched clique mostly out
+    assert mask[:8].sum() >= 6
+    assert mask[8:].sum() <= 2
+    assert 0.0 < frac <= 0.6
+
+
+def test_recompute_mask_empty_update():
+    g = _two_cliques()
+    cfg = IGPMConfig(n_max=16, e_max=256, init_community_size=8)
+    pem = PartialExecutionManager(cfg, adaptive=False)
+    mask, frac = pem.recompute_mask(g, np.array([], np.int64))
+    assert mask.sum() == 0 and frac == 0.0
+
+
+def test_feedback_adjusts_c_within_bounds():
+    g = _two_cliques()
+    cfg = IGPMConfig(n_max=16, e_max=256, init_community_size=4,
+                     min_community_size=2, max_community_size=8, epsilon=1.0)
+    pem = PartialExecutionManager(cfg, adaptive=True, seed=0)
+    cs = []
+    for _ in range(20):
+        _, frac = pem.recompute_mask(g, np.array([1]))
+        c, _ = pem.feedback(g, frac, elapsed=0.01)
+        cs.append(c)
+        assert cfg.min_community_size <= c <= cfg.max_community_size
+    assert len(set(cs)) > 1  # ±1 actions actually move the threshold
+
+
+def test_naive_mode_keeps_c_fixed():
+    g = _two_cliques()
+    cfg = IGPMConfig(n_max=16, e_max=256, init_community_size=4)
+    pem = PartialExecutionManager(cfg, adaptive=False)
+    for _ in range(5):
+        _, frac = pem.recompute_mask(g, np.array([1]))
+        c, loss = pem.feedback(g, frac, elapsed=0.01)
+        assert c == 4 and loss == 0.0
+
+
+def test_dendrogram_cut_cached_per_c():
+    g = _two_cliques()
+    cfg = IGPMConfig(n_max=16, e_max=256, init_community_size=4)
+    pem = PartialExecutionManager(cfg, adaptive=False)
+    pem.recompute_mask(g, np.array([1]))
+    n_reclusters = pem.recluster_count
+    pem.recompute_mask(g, np.array([9]))
+    assert pem.recluster_count == n_reclusters  # cache hit, no rebuild

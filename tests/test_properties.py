@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import add_edges, new_graph, transition_weights
+from repro.core.louvain import louvain_constrained
+from repro.core.rwr import rwr
+from repro.kernels.spmv_ell.ops import ell_spmm_kernel
+from repro.sparse.ell import build_ell, dense_adj
+from repro.sparse.embedding_bag import embedding_bag
+
+_small = st.integers(min_value=2, max_value=24)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=_small, m=st.integers(1, 60), seed=st.integers(0, 2**31 - 1))
+def test_degree_invariant_after_adds(n, m, seed):
+    """degree[v] == live out-arc count of v, for any update sequence."""
+    rng = np.random.default_rng(seed)
+    g = new_graph(n, 4 * m, labels=np.zeros(n, np.int32))
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    mask = rng.random(m) < 0.7
+    g = add_edges(g, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(mask))
+    s = np.asarray(g.senders)
+    em = np.asarray(g.edge_mask)
+    want = np.bincount(s[em], minlength=n)
+    np.testing.assert_array_equal(np.asarray(g.degree), want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 16), m=st.integers(3, 48), seed=st.integers(0, 999))
+def test_rwr_mass_bounded(n, m, seed):
+    """RWR column mass stays in (0, 1] (dangling vertices may leak mass)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = new_graph(n, 4 * m, labels=np.zeros(n, np.int32),
+                  senders=src, receivers=dst)
+    e = jnp.zeros((n, 1)).at[int(src[0]), 0].set(1.0)
+    r = np.asarray(rwr(g, e, iters=30))
+    assert r.min() >= 0
+    assert r.sum() <= 1.0 + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(6, 40), m=st.integers(10, 120),
+       c=st.integers(2, 10), seed=st.integers(0, 999))
+def test_louvain_constrained_partition_invariants(n, m, c, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    s = np.concatenate([src[keep], dst[keep]])
+    d = np.concatenate([dst[keep], src[keep]])
+    comm = louvain_constrained(s, d, n, max_size=c, seed=seed)
+    assert comm.shape == (n,)
+    assert np.bincount(comm).max() <= c
+    # dense labels
+    assert set(np.unique(comm)) == set(range(comm.max() + 1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 32), m=st.integers(0, 100), k=st.integers(2, 9),
+       seed=st.integers(0, 999))
+def test_ell_spmm_equals_dense(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n, m)
+    r = rng.integers(0, n, m)
+    g = build_ell(s, r, n, k=k)
+    x = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    got = ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, n)
+    want = dense_adj(g) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(v=st.integers(3, 50), nb=st.integers(1, 8), li=st.integers(1, 12),
+       seed=st.integers(0, 999))
+def test_embedding_bag_matches_loop(v, nb, li, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((v, 4)).astype(np.float32))
+    idx = rng.integers(0, v, nb * li)
+    bag_ids = np.repeat(np.arange(nb), li)
+    got = embedding_bag(table, jnp.asarray(idx), bag_ids=jnp.asarray(bag_ids),
+                        n_bags=nb)
+    want = np.stack([np.asarray(table)[idx[bag_ids == b]].sum(0)
+                     for b in range(nb)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,121 @@
+"""Roofline methodology unit tests: the HLO collective parser (the §Roofline
+measurement instrument) against hand-constructed HLO snippets."""
+
+import numpy as np
+import pytest
+
+from repro.config.registry import get_arch
+from repro.launch.roofline import (_computation_multipliers, collective_bytes,
+                                   analytic_model_flops, analytic_memory_bytes,
+                                   lm_model_flops, remat_multiplier,
+                                   roofline_terms)
+
+HLO = """\
+HloModule jit_step
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+%add.2_promoted (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+%wide.body.7 (arg: (f32[16,128])) -> (f32[16,128]) {
+  %x = f32[16,128]{1,0} get-tuple-element(%arg), index=0
+  %all-reduce.5 = f32[16,128]{1,0} all-reduce(%x), channel_id=7, replica_groups={{0,1,2,3}}, to_apply=%add.1
+  ROOT %t = (f32[16,128]) tuple(%all-reduce.5)
+}
+
+ENTRY %main.1 (p0: f32[64,256], p1: f32[64,256]) -> f32[64,256] {
+  %all-reduce.1 = f32[64,256]{1,0} all-reduce(%p0), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add.1
+  %all-gather.2 = f32[64,256]{1,0} all-gather(%p1), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %reduce-scatter.3 = f32[16,256]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[2,4]<=[8], to_apply=%add.1
+  %all-reduce.4 = bf16[64,256]{1,0} all-reduce(%p1), channel_id=4, replica_groups={{0,1}}, to_apply=%add.2_promoted
+  %while.9 = (f32[16,128]) while(%tup), condition=%cond.8, body=%wide.body.7, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[64,256]{1,0} copy(%all-reduce.1)
+}
+"""
+
+
+def test_collective_bytes_semantics():
+    out = collective_bytes(HLO)
+    ar_flat = 64 * 256 * 4                  # all-reduce.1 operand == output
+    ag = 64 * 256 * 4 // 4                  # all-gather: output / group(4)
+    rs = 16 * 256 * 4 * 4                   # reduce-scatter: output × group
+    ar_bf16 = 64 * 256 * 2                  # bf16 all-reduce.4
+    loop_ar = 16 * 128 * 4 * 12             # inside ×12 while body
+    assert out["all-gather"] == ag
+    assert out["reduce-scatter"] == rs
+    assert out["all-reduce"] == ar_flat + ar_bf16 + loop_ar
+
+
+def test_collective_bytes_tpu_wire_halves_promoted():
+    raw = collective_bytes(HLO)
+    adj = collective_bytes(HLO, tpu_wire=True)
+    # only all-reduce.4 (promoted reduction) halves
+    assert raw["all-reduce"] - adj["all-reduce"] == (64 * 256 * 2) // 2
+    assert raw["all-gather"] == adj["all-gather"]
+
+
+def test_trip_count_multipliers():
+    mults = _computation_multipliers(HLO)
+    assert mults["%main.1"] == 1
+    assert mults["%wide.body.7"] == 12
+
+
+def test_nested_while_multiplies():
+    nested = HLO.replace(
+        "  %x = f32[16,128]{1,0} get-tuple-element(%arg), index=0",
+        "  %x = f32[16,128]{1,0} get-tuple-element(%arg), index=0\n"
+        "  %while.inner = (f32[4]) while(%q), condition=%c, "
+        "body=%inner.body.3, backend_config={\"known_trip_count\":{\"n\":\"5\"}}")
+    nested += """
+%inner.body.3 (arg: (f32[4])) -> (f32[4]) {
+  %y = f32[4]{0} get-tuple-element(%arg), index=0
+  ROOT %t2 = (f32[4]) tuple(%y)
+}
+"""
+    mults = _computation_multipliers(nested)
+    assert mults["%inner.body.3"] == 12 * 5
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops_per_chip=197e12, bytes_per_chip=0,
+                       coll_bytes_per_chip=0)
+    assert t["dominant"] == "compute" and abs(t["compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(0, 0, coll_bytes_per_chip=50e9)
+    assert t["dominant"] == "collective" and abs(t["collective_s"] - 1.0) < 1e-9
+    t = roofline_terms(0, 819e9, 0)
+    assert t["dominant"] == "memory"
+
+
+def test_roofline_analytic_floor():
+    # analytic flops floor kicks in when HLO undercounts (scan bodies)
+    t = roofline_terms(flops_per_chip=1.0, bytes_per_chip=0,
+                       coll_bytes_per_chip=0, analytic_flops_per_chip=197e12)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["compute_s_hlo"] < 1e-9
+
+
+def test_lm_model_flops_train_matches_6nd():
+    arch = get_arch("deepseek-7b")
+    f = lm_model_flops(arch.model, "train", batch=256, seq=4096)
+    n, d = arch.model.param_count(), 256 * 4096
+    assert f >= 6.0 * n * d           # attention term adds on top
+    assert f < 6.5 * n * d
+
+
+def test_remat_multiplier_values():
+    arch = get_arch("qwen2-72b")      # remat=full
+    assert abs(remat_multiplier(arch, "train") - 4 / 3) < 1e-9
+    assert remat_multiplier(arch, "decode") == 1.0
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-72b", "dimenet", "bst"])
+def test_analytic_models_positive(arch_id):
+    arch = get_arch(arch_id)
+    shape = arch.shapes[0]
+    meta = {"n_nodes": 1000, "n_edges": 5000, "rwr_iters": 5, "n_labels": 4}
+    assert analytic_model_flops(arch, shape, meta) > 0
+    assert analytic_memory_bytes(arch, shape, meta) > 0
