@@ -1,0 +1,27 @@
+# Repo verification entry points. `make verify` is what CI runs: the tier-1
+# suite (must collect with zero errors — hypothesis is optional) plus the
+# COO-vs-ELL backend equivalence tests that pin the production sweep path.
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: verify test fast bench-kernels bench-backends
+
+# tier-1 command; testpaths covers tests/ including the backend-equivalence
+# suite (tests/test_backends.py) that pins the production ELL sweep path
+verify:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+fast:
+	$(PY) -m pytest -q -m fast
+
+bench-kernels:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import kernels_bench; \
+	    [print(r.csv()) for r in kernels_bench.run()]"
+
+bench-backends:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import fig_backends; \
+	    [print(r.csv()) for r in fig_backends.run()]"

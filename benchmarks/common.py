@@ -9,6 +9,8 @@ reward signal and plotted quantity); clustering time is reported separately.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import List, Tuple, Type
@@ -88,3 +90,17 @@ def total_elapsed(stats: List[StepStats]) -> float:
 
 def mean_us(stats: List[StepStats]) -> float:
     return 1e6 * total_elapsed(stats) / max(len(stats), 1)
+
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+
+def write_json(rows: List[BenchRow], name: str) -> str:
+    """Record a suite's rows as ``benchmarks/out/<name>.json`` (the
+    machine-readable twin of the printed CSV)."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump([{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                    "derived": r.derived} for r in rows], f, indent=1)
+    return path

@@ -1,0 +1,45 @@
+"""COO vs ELL backend step time on the paper's query mix (beyond-paper).
+
+Runs the incremental matcher over one dataset twin with each sparse-sweep
+backend and the four §IV queries, using the standard warm/measure protocol.
+Reported per-step time is the matcher's ``elapsed`` (the paper's plotted
+quantity); the ELL mirror's refresh cost is reported as its own row so the
+comparison stays honest — it is paid outside the matching region. Results
+also land in ``benchmarks/out/fig_backends.json``.
+
+On CPU the Pallas kernels run under ``interpret=True``, so the absolute
+ELL numbers are NOT hardware-meaningful (see kernels_bench.py); the suite
+exists to pin the wiring and the measurement harness for TPU runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import (DEFAULT_SCALE, DEFAULT_STEPS, QUERIES,
+                               BenchRow, mean_us, run_matcher, twin_cfg,
+                               write_json)
+from repro.data.temporal import scaled_twin
+
+
+def run(scale: float = DEFAULT_SCALE, steps: int = DEFAULT_STEPS,
+        twin: str = "sx-mathoverflow") -> List[BenchRow]:
+    spec = scaled_twin(twin, scale)
+    rows = []
+    for qname, qfn in QUERIES.items():
+        for backend in ("coo", "ell"):
+            cfg = dataclasses.replace(twin_cfg(spec), backend=backend,
+                                      ell_width=16)
+            stats, _ = run_matcher("inc", spec, qfn(), n_steps=steps,
+                                   cfg=cfg)
+            derived = f"{twin}@{scale:g};steps={steps};backend={backend}"
+            rows.append(BenchRow(f"fig_backends/{qname}/{backend}",
+                                 mean_us(stats), derived))
+            if backend == "ell":
+                refresh = 1e6 * sum(s.ell_refresh_s for s in stats) \
+                    / max(len(stats), 1)
+                rows.append(BenchRow(
+                    f"fig_backends/{qname}/ell_refresh", refresh, derived))
+    write_json(rows, "fig_backends")
+    return rows

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchRow
+from benchmarks.common import BenchRow, write_json
 
 
 def _time(fn: Callable, *args, reps: int = 5) -> float:
@@ -31,16 +31,41 @@ def run(scale: float = 1.0, steps: int = 0) -> List[BenchRow]:
     rng = np.random.default_rng(0)
     rows = []
 
-    # spmv_ell (RWR sweep shape: label-RWR on a 16k-node graph)
+    # spmv_ell (RWR sweep shape: label-RWR on a 16k-node graph), measured
+    # against the COO gather/segment-sum sweep it replaces in the matcher
+    # hot path — the backend comparison recorded in the JSON output.
+    from repro.core.graph import ell_from_graph, new_graph
+    from repro.core.rwr import rwr
+    from repro.kernels.spmv_ell.ops import ell_spmm_kernel
     from repro.kernels.spmv_ell.ref import ell_spmm_ref
     from repro.sparse.ell import build_ell
     n, m = 16384, 131072
-    g = build_ell(rng.integers(0, n, m), rng.integers(0, n, m), n, k=16)
+    s_np, r_np = rng.integers(0, n, m), rng.integers(0, n, m)
+    g = build_ell(s_np, r_np, n, k=16)
     x = jnp.asarray(rng.standard_normal((n, 4)).astype(np.float32))
     ref = jax.jit(lambda: ell_spmm_ref(g.cols, g.vals, g.mask, g.row_ids,
                                        x, n))
     rows.append(BenchRow("kernel/spmv_ell/jnp_ref", _time(ref),
                          f"n={n};nnz={m};d=4"))
+    pallas = lambda xx: ell_spmm_kernel(g.cols, g.vals, g.mask,  # noqa: E731
+                                        g.row_ids, xx, n)
+    rows.append(BenchRow("kernel/spmv_ell/pallas", _time(pallas, x),
+                         f"n={n};nnz={m};d=4;interpret={jax.default_backend() == 'cpu'}"))
+
+    # full RWR sweep, COO backend vs ELL backend (10 warm-start iterations —
+    # the paper's incremental regime, on the same live edge set)
+    dg = new_graph(n, m, n_nodes=n, senders=s_np.astype(np.int32),
+                   receivers=r_np.astype(np.int32))
+    ell = ell_from_graph(dg, k=16)
+    e0 = jnp.zeros((n, 4), jnp.float32).at[0, :].set(1.0)
+    rows.append(BenchRow(
+        "sweep/rwr10/coo",
+        _time(lambda gg, ee: rwr(gg, ee, iters=10), dg, e0),
+        f"n={n};nnz={m};S=4"))
+    rows.append(BenchRow(
+        "sweep/rwr10/ell",
+        _time(lambda gg, ee, el: rwr(gg, ee, iters=10, ell=el), dg, e0, ell),
+        f"n={n};nnz={m};S=4;k=16"))
 
     # blockwise attention (prefill 2k slice)
     from repro.models.layers import blockwise_attention
@@ -58,4 +83,5 @@ def run(scale: float = 1.0, steps: int = 0) -> List[BenchRow]:
     eg = jax.jit(lambda: expert_gemm_ref(xe, we))
     rows.append(BenchRow("kernel/expert_gemm/jnp_ref", _time(eg),
                          "E8xC256xd512xf768"))
+    write_json(rows, "kernels_bench")
     return rows

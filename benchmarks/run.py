@@ -19,13 +19,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig5_batch_vs_inc, fig6_queries, fig7_adaptive,
-                            fig9_patterns, kernels_bench, roofline_table,
-                            scaling, table2_compat)
+                            fig9_patterns, fig_backends, kernels_bench,
+                            roofline_table, scaling, table2_compat)
     suites = {
         "fig5": fig5_batch_vs_inc.run,
         "fig6": fig6_queries.run,
         "fig7": fig7_adaptive.run,
         "fig9": fig9_patterns.run,
+        "backends": fig_backends.run,
         "table2": table2_compat.run,
         "kernels": kernels_bench.run,
         "roofline": roofline_table.run,

@@ -160,6 +160,11 @@ class IGPMConfig:
     n_max: int = 4096
     e_max: int = 65536
     ell_width: int = 64  # padded neighbor-list width K
+    # sparse-sweep backend for the RWR/G-Ray hot path:
+    #   'ell' — Pallas ELL SpMV/reach kernels over the incrementally
+    #           maintained ELL mirror (the production path, DESIGN.md §2)
+    #   'coo' — irregular gather/segment ops over the live COO arcs
+    backend: str = "ell"
     n_labels: int = 4
     # RWR
     restart_prob: float = 0.15  # c in the paper's RWR

@@ -6,10 +6,12 @@ from repro.config.base import ArchConfig, IGPMConfig, ShapeSpec
 from repro.config.registry import register_arch
 
 FULL = IGPMConfig(n_max=262_144, e_max=8_388_608, n_labels=4,
-                  rwr_iters=25, rwr_iters_incremental=5, top_k_patterns=20)
+                  rwr_iters=25, rwr_iters_incremental=5, top_k_patterns=20,
+                  backend="ell", ell_width=64)
 
 SMOKE = IGPMConfig(n_max=1024, e_max=16_384, n_labels=4, rwr_iters=10,
-                   rwr_iters_incremental=3, top_k_patterns=8)
+                   rwr_iters_incremental=3, top_k_patterns=8,
+                   backend="ell", ell_width=16)
 
 SHAPES = (
     ShapeSpec("friends2008", "stream",

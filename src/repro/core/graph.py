@@ -12,11 +12,13 @@ live on device; builders accept numpy.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.sparse.ell import EllGraph, build_ell, ell_row_capacity
 
 
 class DynamicGraph(NamedTuple):
@@ -191,3 +193,212 @@ def transition_weights(g: DynamicGraph) -> jnp.ndarray:
     safe = jnp.maximum(g.degree, 1.0)
     w = 1.0 / safe[g.senders]
     return jnp.where(g.edge_mask, w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# ELL mirror of the live edge set (the matching hot path's layout)
+# ---------------------------------------------------------------------------
+
+def ell_from_graph(g: DynamicGraph, k: int,
+                   r_cap: Optional[int] = None) -> EllGraph:
+    """Fresh *incoming*-adjacency ELL of the live arcs (host-side build).
+
+    Row owner = receiver, columns = senders, unit weights: exactly the
+    gather direction of the RWR sweep (``agg[v] = Σ_{u→v} …``) and the
+    bounded-BFS frontier sweep. ``r_cap`` defaults to the graph's static
+    worst case so every graph with the same (n_max, e_max, k) shares one
+    jit signature.
+    """
+    em = np.asarray(g.edge_mask)
+    s = np.asarray(g.senders)[em]
+    r = np.asarray(g.receivers)[em]
+    if r_cap is None:
+        r_cap = ell_row_capacity(g.n_max, g.e_max, k)
+    return build_ell(r, s, g.n_max, k=k, r_cap=r_cap)
+
+
+class EllCache:
+    """Incrementally-maintained ELL mirror of a :class:`DynamicGraph`.
+
+    Converts the live COO edge set to the ELL layout once, then refreshes it
+    per :class:`UpdateBatch` in O(|update|) host work + an O(|update|)
+    device scatter — instead of an O(E) rebuild per step. Each vertex's
+    entries stay compact (removal swaps the last live entry into the hole),
+    and vertices whose in-degree outgrows their padded rows allocate spill
+    rows from a shared cursor; when the cursor hits the static row capacity
+    the cache compacts itself with a full rebuild (DESIGN.md §2).
+
+    The device arrays always have the static bucket shape
+    ``(ell_row_capacity(n_max, e_max, k), k)``, so the jitted matcher
+    compiles once per graph bucket, not per step.
+    """
+
+    def __init__(self, n_max: int, e_max: int, k: int):
+        self.n_max = n_max
+        self.e_max = e_max
+        self.k = k
+        self.r_cap = ell_row_capacity(n_max, e_max, k)
+        self._vals = jnp.ones((self.r_cap, k), jnp.float32)
+        self._last: Optional[DynamicGraph] = None
+        self.n_rebuilds = 0
+
+    # -- full (re)build ------------------------------------------------------
+
+    def rebuild(self, g: DynamicGraph) -> None:
+        """Compact host+device state from the live edge set of ``g``."""
+        em = np.asarray(g.edge_mask)
+        s = np.asarray(g.senders)[em]
+        r = np.asarray(g.receivers)[em]
+        n, k = self.n_max, self.k
+        deg_in = np.bincount(r, minlength=n)
+        rows_per_v = np.maximum(1, -(-deg_in // k))
+        row_start = np.concatenate([[0], np.cumsum(rows_per_v)])
+        self._rows: List[List[int]] = [
+            list(range(row_start[v], row_start[v + 1])) for v in range(n)]
+        self._fill = deg_in.astype(np.int64)
+        self._next_row = int(row_start[-1])
+        self._cursor = int(np.asarray(g.n_edges))
+
+        cols = np.zeros((self.r_cap, k), np.int32)
+        mask = np.zeros((self.r_cap, k), bool)
+        row_ids = np.zeros(self.r_cap, np.int32)
+        for v in range(n):
+            row_ids[row_start[v]:row_start[v + 1]] = v
+        order = np.argsort(r, kind="stable")
+        rs, ss = r[order], s[order]
+        pos = np.arange(len(rs)) - np.concatenate([[0], np.cumsum(deg_in)])[rs]
+        cols[row_start[rs] + pos // k, pos % k] = ss
+        mask[row_start[rs] + pos // k, pos % k] = True
+        self._cols_h, self._mask_h, self._row_ids_h = cols, mask, row_ids
+        self._cols_d = jnp.asarray(cols)
+        self._mask_d = jnp.asarray(mask)
+        self._row_ids_d = jnp.asarray(row_ids)
+        self._last = g
+        self.n_rebuilds += 1
+
+    # -- incremental refresh -------------------------------------------------
+
+    def _add(self, u: int, v: int, touched: set, new_rows: set) -> bool:
+        """Append arc u→v; False if a spill row is unavailable (overflow)."""
+        p = int(self._fill[v])
+        ri = p // self.k
+        if ri == len(self._rows[v]):
+            if self._next_row >= self.r_cap:
+                return False
+            row = self._next_row
+            self._next_row += 1
+            self._rows[v].append(row)
+            self._row_ids_h[row] = v
+            new_rows.add(row)
+        row = self._rows[v][ri]
+        slot = p % self.k
+        self._cols_h[row, slot] = u
+        self._mask_h[row, slot] = True
+        self._fill[v] = p + 1
+        touched.add((row, slot))
+        return True
+
+    def _remove(self, u: int, v: int, touched: set) -> None:
+        """Remove one live copy of arc u→v (no-op when absent) by swapping
+        the block's last live entry into the hole."""
+        hit = None
+        for ri in range((int(self._fill[v]) + self.k - 1) // self.k):
+            row = self._rows[v][ri]
+            live = self._mask_h[row] & (self._cols_h[row] == u)
+            nz = np.nonzero(live)[0]
+            if len(nz):
+                hit = (row, int(nz[0]))
+                break
+        if hit is None:
+            return
+        last_p = int(self._fill[v]) - 1
+        last = (self._rows[v][last_p // self.k], last_p % self.k)
+        if hit != last:
+            self._cols_h[hit] = self._cols_h[last]
+            touched.add(hit)
+        self._mask_h[last] = False
+        touched.add(last)
+        self._fill[v] = last_p
+
+    def update(self, g: DynamicGraph, upd: UpdateBatch) -> DynamicGraph:
+        """``apply_update`` + ELL refresh; returns the updated graph."""
+        if self._last is not g:
+            # caller swapped graphs under us (fresh stream / reset) — resync
+            self.rebuild(g)
+        g2 = apply_update(g, upd)
+        self.refresh(g, g2, upd)
+        return g2
+
+    def refresh(self, g: DynamicGraph, g2: DynamicGraph,
+                upd: UpdateBatch) -> None:
+        """Mirror ``upd`` (which turned ``g`` into ``g2``) into the ELL state.
+
+        Mirrors the COO semantics arc-for-arc: additions past the e_max
+        cursor are dropped (as ``add_edges`` drops them) and each masked
+        removal kills at most one live copy.
+        """
+        if self._last is not g:
+            self.rebuild(g)
+
+        touched: set = set()
+        new_rows: set = set()
+        overflow = False
+        add_src = np.asarray(upd.add_src)
+        add_dst = np.asarray(upd.add_dst)
+        add_mask = np.asarray(upd.add_mask)
+        slot = self._cursor
+        for u, v, m in zip(add_src, add_dst, add_mask):
+            if not m:
+                continue
+            if slot < self.e_max and 0 <= v < self.n_max:
+                if not self._add(int(u), int(v), touched, new_rows):
+                    overflow = True
+                    break
+            slot += 1
+        self._cursor += int(add_mask.sum())
+        if not overflow:
+            rem_src = np.asarray(upd.rem_src)
+            rem_dst = np.asarray(upd.rem_dst)
+            rem_mask = np.asarray(upd.rem_mask)
+            for u, v, m in zip(rem_src, rem_dst, rem_mask):
+                if m and 0 <= v < self.n_max:
+                    self._remove(int(u), int(v), touched)
+
+        if overflow:
+            self.rebuild(g2)
+        else:
+            if touched or new_rows:
+                self._push(touched, new_rows)
+            self._last = g2
+
+    def _push(self, touched: set, new_rows: set) -> None:
+        """Scatter the final host values of touched slots to device.
+
+        Index vectors are padded to the next power of two (pad rows point
+        past r_cap and are dropped) so the number of scatter jit signatures
+        stays logarithmic in the update width.
+        """
+        def _pad(a: np.ndarray, fill: int) -> jnp.ndarray:
+            width = max(1, 1 << int(np.ceil(np.log2(max(len(a), 1)))))
+            return jnp.asarray(np.concatenate(
+                [a, np.full(width - len(a), fill, a.dtype)]))
+
+        if touched:
+            rc = np.asarray(sorted(touched), np.int32)
+            rr, cc = _pad(rc[:, 0], self.r_cap), _pad(rc[:, 1], 0)
+            cv = _pad(self._cols_h[rc[:, 0], rc[:, 1]], 0)
+            mv = _pad(self._mask_h[rc[:, 0], rc[:, 1]], False)
+            self._cols_d = self._cols_d.at[rr, cc].set(cv, mode="drop")
+            self._mask_d = self._mask_d.at[rr, cc].set(mv, mode="drop")
+        if new_rows:
+            nr = np.asarray(sorted(new_rows), np.int32)
+            rr = _pad(nr, self.r_cap)
+            rv = _pad(self._row_ids_h[nr], 0)
+            self._row_ids_d = self._row_ids_d.at[rr].set(rv, mode="drop")
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def ell(self) -> EllGraph:
+        return EllGraph(self._cols_d, self._vals, self._row_ids_d,
+                        self._mask_d, self.n_max)

@@ -14,6 +14,11 @@ it and memoize the RWR/bridge tables per query-source vertex: a star-5 query
 runs ONE RWR for all four expansions instead of four (a beyond-paper
 optimization recorded in EXPERIMENTS.md §Perf; the paper recomputes per
 function call).
+
+Both sparse sweeps (RWR and the BFS frontier) run on either the COO
+gather/segment path or the Pallas ELL kernels — ``backend="ell"`` routes
+them through ``repro.kernels.spmv_ell`` given an ELL mirror of the graph
+(DESIGN.md §2; see ``repro.core.graph.EllCache``).
 """
 
 from __future__ import annotations
@@ -24,9 +29,11 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import DynamicGraph, transition_weights
+from repro.core.graph import DynamicGraph, ell_from_graph
 from repro.core.query import Query
 from repro.core.rwr import label_rwr, rwr
+from repro.kernels.spmv_ell.ops import ell_reach_kernel
+from repro.sparse.ell import EllGraph
 
 _EPS = 1e-12
 
@@ -60,22 +67,32 @@ def find_seeds(g: DynamicGraph, query: Query, r_lab: jnp.ndarray, k: int,
     return ids.astype(jnp.int32), jnp.isfinite(vals)
 
 
-def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int
-                    ) -> jnp.ndarray:
+def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
+                    ell: Optional[EllGraph] = None) -> jnp.ndarray:
     """hops[k_idx, v] = min #edges from sources[k_idx] to v (≤ max_hops),
-    else max_hops+1. Batched bounded BFS via edge-gather/segment-max sweeps —
-    the bridge function's path-length oracle."""
+    else max_hops+1. Batched bounded BFS — the bridge function's path-length
+    oracle. The frontier sweep is either an edge-gather/segment-max (COO) or
+    the masked-gather max kernel on the ELL layout; both propagate exact 0/1
+    indicators, so the backends are bit-identical."""
     k = sources.shape[0]
     reached = jax.nn.one_hot(sources, g.n_max, dtype=jnp.float32).T  # (n,k)
     hops = jnp.where(reached.T > 0, 0, max_hops + 1).astype(jnp.int32)
 
-    live = g.edge_mask.astype(jnp.float32)[:, None]
+    if ell is None:
+        live = g.edge_mask.astype(jnp.float32)[:, None]
+
+        def sweep(reached):
+            msg = reached[g.senders] * live                  # (E, k)
+            return jax.ops.segment_max(msg, g.receivers,
+                                       num_segments=g.n_max)
+    else:
+        def sweep(reached):
+            return ell_reach_kernel(ell.cols, ell.mask, ell.row_ids,
+                                    reached, ell.n)
 
     def body(carry, h):
         reached, hops = carry
-        msg = reached[g.senders] * live                      # (E, k)
-        nxt = jax.ops.segment_max(msg, g.receivers, num_segments=g.n_max)
-        nxt = jnp.maximum(nxt, reached)
+        nxt = jnp.maximum(sweep(reached), reached)
         newly = (nxt > 0) & (reached <= 0)
         hops = jnp.where(newly.T, h, hops)
         return (nxt, hops), None
@@ -86,17 +103,27 @@ def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int
 
 
 class GRayMatcher:
-    """Jitted G-Ray for one query shape. Reused across steps/seeds."""
+    """Jitted G-Ray for one query shape. Reused across steps/seeds.
+
+    ``backend="ell"`` runs both sparse sweeps through the Pallas ELL
+    kernels; callers pass the graph's ELL mirror via ``ell=`` (one is built
+    on the fly when omitted — prefer a cached mirror in loops).
+    """
 
     def __init__(self, query: Query, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
-                 bridge_hops: int = 4):
+                 bridge_hops: int = 4, backend: str = "coo",
+                 ell_width: int = 64):
+        if backend not in ("coo", "ell"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.query = query
         self.n_labels = n_labels
         self.k = k
         self.rwr_iters = rwr_iters
         self.restart = restart
         self.bridge_hops = bridge_hops
+        self.backend = backend
+        self.ell_width = ell_width
         # host-static expansion schedule
         import numpy as np
         om = np.asarray(query.order_mask)
@@ -113,27 +140,39 @@ class GRayMatcher:
 
     # -- public API ---------------------------------------------------------
 
+    def _ell_for(self, g: DynamicGraph,
+                 ell: Optional[EllGraph]) -> Optional[EllGraph]:
+        if self.backend != "ell":
+            return None
+        if ell is None:
+            ell = ell_from_graph(g, self.ell_width)
+        return ell
+
     def label_table(self, g: DynamicGraph,
                     r0: Optional[jnp.ndarray] = None,
-                    iters: Optional[int] = None) -> jnp.ndarray:
+                    iters: Optional[int] = None,
+                    ell: Optional[EllGraph] = None) -> jnp.ndarray:
         return label_rwr(g, self.n_labels,
-                         iters=iters or self.rwr_iters, c=self.restart, r0=r0)
+                         iters=iters if iters is not None else self.rwr_iters,
+                         c=self.restart, r0=r0, ell=self._ell_for(g, ell))
 
     def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
-              seed_filter: Optional[jnp.ndarray] = None) -> GRayResult:
+              seed_filter: Optional[jnp.ndarray] = None,
+              ell: Optional[EllGraph] = None) -> GRayResult:
         seed_ids, seed_mask = self._seeds(g, r_lab, seed_filter)
-        return self.match_from_seeds(g, r_lab, seed_ids, seed_mask)
+        return self.match_from_seeds(g, r_lab, seed_ids, seed_mask, ell=ell)
 
     def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
-                         seed_ids: jnp.ndarray,
-                         seed_mask: jnp.ndarray) -> GRayResult:
-        return self._match(g, r_lab, seed_ids, seed_mask)
+                         seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
+                         ell: Optional[EllGraph] = None) -> GRayResult:
+        return self._match(g, r_lab, seed_ids, seed_mask,
+                           self._ell_for(g, ell))
 
     # -- implementation ------------------------------------------------------
 
     def _match_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
-                    seed_ids: jnp.ndarray,
-                    seed_mask: jnp.ndarray) -> GRayResult:
+                    seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
+                    ell: Optional[EllGraph]) -> GRayResult:
         query, k = self.query, self.k
         q_max, qe_max = query.q_max, query.order_src.shape[0]
         n = g.n_max
@@ -160,8 +199,9 @@ class GRayMatcher:
                 src = matched[:, qa]                            # (k,)
                 e = jax.nn.one_hot(src, n, dtype=jnp.float32).T  # (n, k)
                 rwr_memo[qa] = rwr(g, e, iters=self.rwr_iters,
-                                   c=self.restart)              # (n, k)
-                reach_memo[qa] = _bfs_reach_hops(g, src, self.bridge_hops)
+                                   c=self.restart, ell=ell)     # (n, k)
+                reach_memo[qa] = _bfs_reach_hops(g, src, self.bridge_hops,
+                                                 ell=ell)
             return rwr_memo[qa], reach_memo[qa]
 
         for ei, (qa, qb, is_tree) in enumerate(self.schedule):
@@ -204,9 +244,14 @@ def gray_match(g: DynamicGraph, query: Query, n_labels: int, k: int = 20,
                rwr_iters: int = 25, restart: float = 0.15,
                bridge_hops: int = 4,
                seed_filter: Optional[jnp.ndarray] = None,
-               r_lab: Optional[jnp.ndarray] = None) -> GRayResult:
+               r_lab: Optional[jnp.ndarray] = None,
+               backend: str = "coo",
+               ell: Optional[EllGraph] = None) -> GRayResult:
     """One-shot batch G-Ray (builds a matcher; prefer GRayMatcher in loops)."""
-    m = GRayMatcher(query, n_labels, k, rwr_iters, restart, bridge_hops)
+    m = GRayMatcher(query, n_labels, k, rwr_iters, restart, bridge_hops,
+                    backend=backend)
+    if backend == "ell" and ell is None:
+        ell = ell_from_graph(g, m.ell_width)
     if r_lab is None:
-        r_lab = m.label_table(g)
-    return m.match(g, r_lab, seed_filter=seed_filter)
+        r_lab = m.label_table(g, ell=ell)
+    return m.match(g, r_lab, seed_filter=seed_filter, ell=ell)

@@ -9,6 +9,12 @@ Each ``step(graph, update)`` applies one timestep of graph updates, runs the
 matcher, merges results into a persistent pattern store (batch mode rebuilds
 its store — it recomputes everything), and reports the paper's metrics:
 elapsed time, #re-computed vertices, #patterns (exact/approx).
+
+With ``cfg.backend == "ell"`` (the default) every sparse sweep runs through
+the Pallas ELL kernels: the full graph carries an incrementally refreshed
+:class:`~repro.core.graph.EllCache`, and induced subgraphs emit their ELL
+tile straight from the bucketed extraction (DESIGN.md §2). ``"coo"`` keeps
+the seed gather/segment path.
 """
 
 from __future__ import annotations
@@ -22,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import IGPMConfig
-from repro.core.graph import (DynamicGraph, UpdateBatch, apply_update,
-                              updated_vertices)
+from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
+                              apply_update, updated_vertices)
 from repro.core.gray import GRayMatcher, GRayResult
 from repro.core.pem import PartialExecutionManager
 from repro.core.query import Query
@@ -43,6 +49,8 @@ class StepStats:
     frac_affected: float = 0.0
     subgraph_nodes: int = 0
     subgraph_edges: int = 0
+    ell_refresh_s: float = 0.0  # ELL-mirror refresh cost (outside `elapsed`)
+    n_pruned: int = 0           # patterns dropped for dead vertices
 
 
 class PatternStore:
@@ -78,6 +86,24 @@ class PatternStore:
                                  np.asarray(res.exact),
                                  np.asarray(res.valid), q_mask)
 
+    def prune(self, node_mask: np.ndarray) -> int:
+        """Drop patterns touching vertices no longer live.
+
+        Later ``UpdateBatch``es can delete every arc of a matched vertex;
+        without this hook ``n_patterns_total``/``n_exact_total`` drift upward
+        on deletion-heavy streams. Invalidation is deliberately *vertex*-
+        level: patterns are keyed by their vertex assignment and approximate
+        matches never required the literal edge (bridges admit multi-hop
+        paths), so removing a single matched arc does not falsify the
+        pattern — a dead vertex does. Returns the number of patterns removed.
+        """
+        node_mask = np.asarray(node_mask, bool)
+        dead = [key for key in self._patterns
+                if any(not node_mask[v] for v in key)]
+        for key in dead:
+            del self._patterns[key]
+        return len(dead)
+
     @property
     def total(self) -> int:
         return len(self._patterns)
@@ -87,6 +113,15 @@ class PatternStore:
         return sum(1 for _, e in self._patterns.values() if e)
 
 
+def live_vertex_mask(g: DynamicGraph) -> np.ndarray:
+    """Vertices incident to at least one live arc (host-side)."""
+    em = np.asarray(g.edge_mask)
+    live = np.zeros(g.n_max, bool)
+    live[np.asarray(g.senders)[em]] = True
+    live[np.asarray(g.receivers)[em]] = True
+    return live & np.asarray(g.node_mask)
+
+
 class _BaseMatcher:
     def __init__(self, query: Query, cfg: IGPMConfig, seed: int = 0):
         self.query = query
@@ -94,7 +129,11 @@ class _BaseMatcher:
         self.gray = GRayMatcher(query, cfg.n_labels, cfg.top_k_patterns,
                                 rwr_iters=cfg.rwr_iters,
                                 restart=cfg.restart_prob,
-                                bridge_hops=cfg.bridge_hops)
+                                bridge_hops=cfg.bridge_hops,
+                                backend=cfg.backend,
+                                ell_width=cfg.ell_width)
+        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width)
+                          if cfg.backend == "ell" else None)
         self.store = PatternStore()
         self.step_idx = 0
 
@@ -105,6 +144,29 @@ class _BaseMatcher:
         self.step_idx = 0
         if hasattr(self, "_r_lab"):
             self._r_lab = None
+        if self.ell_cache is not None:
+            self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
+                                      self.cfg.ell_width)
+
+    def _apply(self, g: DynamicGraph,
+               upd: UpdateBatch) -> Tuple[DynamicGraph, float]:
+        """Apply the update, refreshing the ELL mirror when one is carried.
+
+        The returned refresh time covers only the mirror maintenance — the
+        COO ``apply_update`` is paid identically by both backends."""
+        if self.ell_cache is None:
+            return apply_update(g, upd), 0.0
+        if self.ell_cache._last is not g:
+            self.ell_cache.rebuild(g)
+        g2 = apply_update(g, upd)
+        t0 = time.perf_counter()
+        self.ell_cache.refresh(g, g2, upd)
+        jax.block_until_ready(self.ell_cache._cols_d)
+        return g2, time.perf_counter() - t0
+
+    @property
+    def _full_ell(self):
+        return None if self.ell_cache is None else self.ell_cache.ell
 
     def _finish(self, elapsed: float, n_recompute: int, new: int,
                 **kw) -> StepStats:
@@ -121,17 +183,19 @@ class BatchMatcher(_BaseMatcher):
 
     def step(self, g: DynamicGraph,
              upd: UpdateBatch) -> Tuple[DynamicGraph, StepStats]:
-        g = apply_update(g, upd)
+        g, refresh_s = self._apply(g, upd)
         jax.block_until_ready(g)
         t0 = time.perf_counter()
-        r_lab = self.gray.label_table(g)  # cold start, full iterations
-        res = self.gray.match(g, r_lab)
+        ell = self._full_ell
+        r_lab = self.gray.label_table(g, ell=ell)  # cold start, full iters
+        res = self.gray.match(g, r_lab, ell=ell)
         jax.block_until_ready(res)
         elapsed = time.perf_counter() - t0
         self.store = PatternStore()  # batch mode owns no incremental state
         new = self.store.merge(res, self.query.mask)
         n_recompute = int(np.asarray(g.node_mask).sum())
-        return g, self._finish(elapsed, n_recompute, new)
+        return g, self._finish(elapsed, n_recompute, new,
+                               ell_refresh_s=refresh_s)
 
 
 class NaiveIncrementalMatcher(_BaseMatcher):
@@ -159,10 +223,16 @@ class NaiveIncrementalMatcher(_BaseMatcher):
 
     def step(self, g: DynamicGraph,
              upd: UpdateBatch) -> Tuple[DynamicGraph, StepStats]:
-        g = apply_update(g, upd)
+        g, refresh_s = self._apply(g, upd)
         ids, mask = updated_vertices(g, upd, self._v_max)
         upd_ids = np.asarray(jnp.where(mask, ids, -1))
         jax.block_until_ready(g)
+        n_pruned = 0
+        # liveness costs one O(e_max) host sync (same order as the n_live /
+        # edge-count syncs below) — only pay it when a removal could have
+        # killed a stored pattern's vertex
+        if self.store.total and bool(np.asarray(upd.rem_mask).any()):
+            n_pruned = self.store.prune(live_vertex_mask(g))
 
         t0 = time.perf_counter()
         rec_mask, frac = self.pem.recompute_mask(g, upd_ids)
@@ -172,22 +242,26 @@ class NaiveIncrementalMatcher(_BaseMatcher):
         if n_rec > self.full_graph_frac * n_live:
             # update storm — full pass, warm-started label RWR (paper: "too
             # many vertices updated to be re-computed" case)
+            ell = self._full_ell
             if self._r_lab is None:
-                r_lab = self.gray.label_table(g)
+                r_lab = self.gray.label_table(g, ell=ell)
             else:
                 r_lab = self.gray.label_table(
-                    g, r0=self._r_lab, iters=self.cfg.rwr_iters_incremental)
+                    g, r0=self._r_lab, iters=self.cfg.rwr_iters_incremental,
+                    ell=ell)
             self._r_lab = r_lab
             res = self.gray.match(g, r_lab,
-                                  seed_filter=jnp.asarray(rec_mask))
+                                  seed_filter=jnp.asarray(rec_mask), ell=ell)
             jax.block_until_ready(res)
             elapsed = time.perf_counter() - t0
             new = self.store.merge(res, self.query.mask)
             sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
         else:
-            sub = extract_induced(g, rec_mask)
-            r_lab = self.gray.label_table(sub.graph)
-            res = self.gray.match(sub.graph, r_lab)
+            sub = extract_induced(
+                g, rec_mask,
+                ell_k=self.cfg.ell_width if self.ell_cache else None)
+            r_lab = self.gray.label_table(sub.graph, ell=sub.ell)
+            res = self.gray.match(sub.graph, r_lab, ell=sub.ell)
             jax.block_until_ready(res)
             matched = remap_matched(np.asarray(res.matched),
                                     sub.local_to_global)
@@ -201,7 +275,8 @@ class NaiveIncrementalMatcher(_BaseMatcher):
         c, loss = self.pem.feedback(g, frac, elapsed)
         return g, self._finish(elapsed, n_rec, new, community_size=c,
                                rl_loss=loss, frac_affected=frac,
-                               subgraph_nodes=sub_n, subgraph_edges=sub_e)
+                               subgraph_nodes=sub_n, subgraph_edges=sub_e,
+                               ell_refresh_s=refresh_s, n_pruned=n_pruned)
 
 
 class AdaptiveMatcher(NaiveIncrementalMatcher):

@@ -1,18 +1,22 @@
 """Random Walk with Restart — the goodness signal of G-Ray (paper §III-A).
 
 ``r = c·e + (1−c)·Pᵀr`` iterated to (near) fixed point, with the
-row-stochastic transition ``P = D⁻¹A``. Implemented as batched COO
-gather/segment-sum sweeps so that
+row-stochastic transition ``P = D⁻¹A``. Two interchangeable sweep backends:
 
-  * many restart vectors run as one ``(n, S)`` dense block (MXU-friendly),
-  * under pjit the edge dimension shards over ("pod","data") and the scatter
-    becomes a psum (distributed RWR),
-  * the *incremental* variant warm-starts from the previous fixed point and
-    needs only a few sweeps (DESIGN.md §2 — iteration-count sparsity, the
-    TPU-native replacement for per-vertex push).
+  * ``coo`` — irregular gather/segment-sum over the live COO arcs (the
+    seed implementation; under pjit the edge dimension shards over
+    ("pod","data") and the scatter becomes a psum),
+  * ``ell`` — the Pallas ELL SpMM kernel (``repro.kernels.spmv_ell``) over
+    the incoming-adjacency ELL mirror: fully regular gathers that tile into
+    VMEM (DESIGN.md §2). Pass the mirror as ``ell=`` (see
+    ``repro.core.graph.EllCache``); the transition weights are applied by
+    pre-scaling the iterate with 1/deg, so the mirror only needs structural
+    refreshes.
 
-The Pallas ELL kernel path (``repro.kernels.spmv_ell``) is a drop-in for the
-sweep on static graphs.
+Either way, many restart vectors run as one ``(n, S)`` dense block
+(MXU-friendly), and the *incremental* variant warm-starts from the previous
+fixed point and needs only a few sweeps (DESIGN.md §2 — iteration-count
+sparsity, the TPU-native replacement for per-vertex push).
 """
 
 from __future__ import annotations
@@ -24,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import DynamicGraph, transition_weights
+from repro.kernels.spmv_ell.ops import ell_spmm_kernel
+from repro.sparse.ell import EllGraph
 
 
 def _sweep(g: DynamicGraph, w: jnp.ndarray, r: jnp.ndarray,
@@ -34,18 +40,40 @@ def _sweep(g: DynamicGraph, w: jnp.ndarray, r: jnp.ndarray,
     return c * e + (1.0 - c) * agg
 
 
+def _sweep_ell(ell: EllGraph, inv_deg: jnp.ndarray, r: jnp.ndarray,
+               e: jnp.ndarray, c: float) -> jnp.ndarray:
+    """ELL-backend sweep: agg[v] = Σ_{u→v} r[u]/deg(u) via the Pallas kernel.
+
+    The per-arc weight 1/deg(sender) depends only on the *column* vertex, so
+    it factors out of the gather: A_in @ (r ⊙ inv_deg) — the mirror carries
+    unit weights and never needs a weight refresh.
+    """
+    agg = ell_spmm_kernel(ell.cols, ell.vals, ell.mask, ell.row_ids,
+                          r * inv_deg[:, None], ell.n)
+    return c * e + (1.0 - c) * agg
+
+
 @partial(jax.jit, static_argnames=("iters", "c"))
 def rwr(g: DynamicGraph, e: jnp.ndarray, iters: int = 30, c: float = 0.15,
-        r0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        r0: Optional[jnp.ndarray] = None,
+        ell: Optional[EllGraph] = None) -> jnp.ndarray:
     """Batched RWR. ``e``: (n_max, S) restart distributions (columns sum ≤ 1).
 
     ``r0`` warm-starts the iteration (incremental mode); defaults to ``e``.
+    ``ell`` selects the Pallas ELL sweep backend (must mirror ``g``'s live
+    arcs); ``None`` keeps the COO gather/segment-sum path.
     """
-    w = transition_weights(g)
     r = e if r0 is None else r0
+    if ell is None:
+        w = transition_weights(g)
 
-    def body(r, _):
-        return _sweep(g, w, r, e, c), None
+        def body(r, _):
+            return _sweep(g, w, r, e, c), None
+    else:
+        inv_deg = 1.0 / jnp.maximum(g.degree, 1.0)
+
+        def body(r, _):
+            return _sweep_ell(ell, inv_deg, r, e, c), None
 
     r, _ = jax.lax.scan(body, r, None, length=iters)
     return r
@@ -58,7 +86,8 @@ def restart_onehot(ids: jnp.ndarray, n_max: int) -> jnp.ndarray:
 
 @partial(jax.jit, static_argnames=("n_labels", "iters", "c"))
 def label_rwr(g: DynamicGraph, n_labels: int, iters: int = 30,
-              c: float = 0.15, r0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+              c: float = 0.15, r0: Optional[jnp.ndarray] = None,
+              ell: Optional[EllGraph] = None) -> jnp.ndarray:
     """Label-conditioned RWR table r_lab: (n_max, L).
 
     Column ℓ is the RWR fixed point whose restart distribution is uniform
@@ -69,12 +98,15 @@ def label_rwr(g: DynamicGraph, n_labels: int, iters: int = 30,
     onehot = onehot * g.node_mask[:, None]
     counts = jnp.maximum(onehot.sum(axis=0, keepdims=True), 1.0)
     e = onehot / counts
-    return rwr(g, e, iters=iters, c=c, r0=r0)
+    return rwr(g, e, iters=iters, c=c, r0=r0, ell=ell)
 
 
 def rwr_residual(g: DynamicGraph, r: jnp.ndarray, e: jnp.ndarray,
-                 c: float = 0.15) -> jnp.ndarray:
+                 c: float = 0.15,
+                 ell: Optional[EllGraph] = None) -> jnp.ndarray:
     """‖r − (c·e + (1−c)·Pᵀr)‖∞ per column — convergence diagnostics."""
-    w = transition_weights(g)
-    nxt = _sweep(g, w, r, e, c)
+    if ell is None:
+        nxt = _sweep(g, transition_weights(g), r, e, c)
+    else:
+        nxt = _sweep_ell(ell, 1.0 / jnp.maximum(g.degree, 1.0), r, e, c)
     return jnp.abs(nxt - r).max(axis=0)

@@ -5,17 +5,22 @@ induced by the update-touched communities, not the full graph. We gather that
 subgraph into compact buffers whose capacities are rounded up to powers of
 two ("static-shape bucketing"): every bucket is a distinct jit signature, so
 a handful of compilations cover the whole stream while sweep cost tracks the
-*live* subgraph size. Patterns that cross community boundaries are missed —
-the exact limitation the paper concedes for cycle/dense queries (§III-D).
+*live* subgraph size. With ``ell_k`` set, the extraction also emits the
+bucket's incoming-adjacency ELL tile directly from the kept-edge arrays —
+no COO round trip — sized to the bucket's static row capacity so the ELL
+matcher path compiles once per bucket too (DESIGN.md §2). Patterns that
+cross community boundaries are missed — the exact limitation the paper
+concedes for cycle/dense queries (§III-D).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
 
 from repro.core.graph import DynamicGraph, new_graph
+from repro.sparse.ell import EllGraph, build_ell, ell_row_capacity
 
 
 class Subgraph(NamedTuple):
@@ -23,6 +28,7 @@ class Subgraph(NamedTuple):
     local_to_global: np.ndarray  # int64[n_cap] (−1 pad)
     n_nodes: int
     n_edges: int
+    ell: Optional[EllGraph] = None  # incoming-adjacency ELL tile (bucketed)
 
 
 def _pow2(x: int, floor: int) -> int:
@@ -30,7 +36,8 @@ def _pow2(x: int, floor: int) -> int:
 
 
 def extract_induced(g: DynamicGraph, mask: np.ndarray,
-                    n_floor: int = 64, e_floor: int = 256) -> Subgraph:
+                    n_floor: int = 64, e_floor: int = 256,
+                    ell_k: Optional[int] = None) -> Subgraph:
     """Induced subgraph over ``mask`` with bucketed capacities (host-side)."""
     mask = np.asarray(mask, bool)
     senders = np.asarray(g.senders)
@@ -57,7 +64,12 @@ def extract_induced(g: DynamicGraph, mask: np.ndarray,
     # new_graph marks node_mask from labels length; ensure capacity padding
     l2g = np.full(n_cap, -1, np.int64)
     l2g[:n_sub] = ids
-    return Subgraph(sub, l2g, n_sub, e_sub)
+    ell = None
+    if ell_k is not None:
+        # row owner = receiver: the gather direction of the RWR/BFS sweeps
+        ell = build_ell(lr, ls, n_cap, k=ell_k,
+                        r_cap=ell_row_capacity(n_cap, e_cap, ell_k))
+    return Subgraph(sub, l2g, n_sub, e_sub, ell)
 
 
 def remap_matched(matched: np.ndarray, local_to_global: np.ndarray) -> np.ndarray:

@@ -1,3 +1,5 @@
-from repro.kernels.spmv_ell.ops import ell_spmm_kernel
+from repro.kernels.spmv_ell.ops import (ell_reach_graph, ell_reach_kernel,
+                                        ell_spmm_graph, ell_spmm_kernel)
 
-__all__ = ["ell_spmm_kernel"]
+__all__ = ["ell_spmm_kernel", "ell_spmm_graph",
+           "ell_reach_kernel", "ell_reach_graph"]

@@ -13,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmv_ell.spmv_ell import ell_row_partials
+from repro.kernels.spmv_ell.spmv_ell import ell_row_maxima, ell_row_partials
 from repro.sparse.ell import EllGraph
 
 _MAX_D_RESIDENT = 32
@@ -46,3 +46,33 @@ def ell_spmm_kernel(cols: jnp.ndarray, vals: jnp.ndarray, mask: jnp.ndarray,
 
 def ell_spmm_graph(g: EllGraph, x: jnp.ndarray) -> jnp.ndarray:
     return ell_spmm_kernel(g.cols, g.vals, g.mask, g.row_ids, x, g.n)
+
+
+@partial(jax.jit, static_argnames=("n", "block_rows"))
+def ell_reach_kernel(cols: jnp.ndarray, mask: jnp.ndarray,
+                     row_ids: jnp.ndarray, x: jnp.ndarray, n: int,
+                     block_rows: int = 256) -> jnp.ndarray:
+    """y[v] = max_{u in N(v)} x[u] for indicator x ∈ [0,1]: (n, d) → (n, d).
+
+    The max-plus sibling of ``ell_spmm_kernel`` — one bounded-BFS frontier
+    sweep on the ELL layout. Vertices with no live in-arcs get 0.
+    """
+    interpret = _on_cpu()
+    d = x.shape[1]
+    if d <= _MAX_D_RESIDENT:
+        partial_rows = ell_row_maxima(cols, mask, x, block_rows=block_rows,
+                                      interpret=interpret)
+    else:
+        chunks = []
+        for lo in range(0, d, _MAX_D_RESIDENT):
+            chunks.append(ell_row_maxima(
+                cols, mask, x[:, lo:lo + _MAX_D_RESIDENT],
+                block_rows=block_rows, interpret=interpret))
+        partial_rows = jnp.concatenate(chunks, axis=1)
+    out = jax.ops.segment_max(partial_rows, row_ids, num_segments=n)
+    # segment_max fills vertices owning no row with -inf; reach wants 0
+    return jnp.maximum(out, 0.0)
+
+
+def ell_reach_graph(g: EllGraph, x: jnp.ndarray) -> jnp.ndarray:
+    return ell_reach_kernel(g.cols, g.mask, g.row_ids, x, g.n)

@@ -16,3 +16,15 @@ def ell_row_partials_ref(cols: jnp.ndarray, vals: jnp.ndarray,
 def ell_spmm_ref(cols, vals, mask, row_ids, x, n: int) -> jnp.ndarray:
     partial = ell_row_partials_ref(cols, vals, mask, x)
     return jax.ops.segment_sum(partial, row_ids, num_segments=n)
+
+
+def ell_row_maxima_ref(cols: jnp.ndarray, mask: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    gathered = jnp.where(mask[..., None], x[cols], 0.0)  # (R, K, d)
+    return gathered.max(axis=1)
+
+
+def ell_reach_ref(cols, mask, row_ids, x, n: int) -> jnp.ndarray:
+    partial = ell_row_maxima_ref(cols, mask, x)
+    out = jax.ops.segment_max(partial, row_ids, num_segments=n)
+    return jnp.maximum(out, 0.0)

@@ -40,6 +40,22 @@ def _kernel(cols_ref, vals_ref, mask_ref, x_ref, out_ref):
         preferred_element_type=out_ref.dtype)
 
 
+def _max_kernel(cols_ref, mask_ref, x_ref, out_ref):
+    """Max-plus row partials: out[i,:] = max_k mask[i,k]·X[cols[i,k],:].
+
+    The masked-gather formulation of the bounded-BFS bridge sweep
+    (G-Ray's path-length oracle) on the same ELL layout. Dead entries
+    contribute 0, which is the identity for reachability indicators
+    (x ∈ [0, 1])."""
+    cols = cols_ref[...]                       # (BR, K) int32
+    mask = mask_ref[...]                       # (BR, K) bool
+    x = x_ref[...]                             # (n, d)
+    gathered = jnp.take(x, cols.reshape(-1), axis=0)
+    gathered = gathered.reshape(cols.shape + (x.shape[-1],))  # (BR, K, d)
+    gathered = jnp.where(mask[..., None], gathered, 0.0)
+    out_ref[...] = gathered.max(axis=1).astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def ell_row_partials(cols: jnp.ndarray, vals: jnp.ndarray,
                      mask: jnp.ndarray, x: jnp.ndarray,
@@ -68,4 +84,32 @@ def ell_row_partials(cols: jnp.ndarray, vals: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((rp, d), x.dtype),
         interpret=interpret,
     )(cols, vals, mask, x)
+    return out[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_row_maxima(cols: jnp.ndarray, mask: jnp.ndarray, x: jnp.ndarray,
+                   block_rows: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """(R, K) ELL tile × (n, d) indicator matrix → (R, d) row maxima."""
+    r, k = cols.shape
+    n, d = x.shape
+    pad = (-r) % block_rows
+    if pad:
+        cols = jnp.pad(cols, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    rp = r + pad
+    grid = (rp // block_rows,)
+    out = pl.pallas_call(
+        _max_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),  # X resident per program
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), x.dtype),
+        interpret=interpret,
+    )(cols, mask, x)
     return out[:r]

@@ -7,25 +7,35 @@ hardware adaptation of the paper's CSR/NetworkX loops (DESIGN.md §2).
 
 Rows whose degree exceeds ``K`` spill into duplicate rows via ``row_ids``
 (ELL + row-splitting), so no neighbor is ever dropped.
+
+``EllGraph`` is registered as a pytree whose vertex count ``n`` is static
+aux data, so an ELL graph can be passed straight through ``jax.jit``
+boundaries (the matcher hot path) while ``num_segments=g.n`` stays a Python
+int. Builders accept an explicit row capacity ``r_cap`` so that every graph
+sharing one ``(n, e_cap, K)`` bucket lowers to one jit signature — the
+static-shape convention the dynamic-graph cache relies on (DESIGN.md §2).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-class EllGraph(NamedTuple):
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
     """Padded neighbor-list graph (static shapes, jit-friendly).
 
     cols:    int32[R, K]   neighbor ids (arbitrary value where ~mask)
     vals:    f32[R, K]     edge weights (0 where ~mask)
     row_ids: int32[R]      owning vertex of each padded row (row-splitting)
     mask:    bool[R, K]    entry validity
-    n:       int           number of vertices
+    n:       int           number of vertices (static — pytree aux data)
     """
 
     cols: jnp.ndarray
@@ -38,14 +48,37 @@ class EllGraph(NamedTuple):
     def k(self) -> int:
         return self.cols.shape[1]
 
+    @property
+    def r(self) -> int:
+        return self.cols.shape[0]
+
+    def tree_flatten(self):
+        return (self.cols, self.vals, self.row_ids, self.mask), self.n
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux)
+
+
+def ell_row_capacity(n: int, e_cap: int, k: int) -> int:
+    """Worst-case padded-row count for ``e_cap`` live arcs over ``n`` vertices.
+
+    Every vertex owns at least one row and each row beyond the first of a
+    vertex accounts for ``k`` arcs, so Σ max(1, ceil(deg/k)) ≤ n + ceil(E/k).
+    """
+    return n + -(-e_cap // k)
+
 
 def build_ell(senders: np.ndarray, receivers: np.ndarray, n: int,
-              weights: Optional[np.ndarray] = None, k: int = 64) -> EllGraph:
+              weights: Optional[np.ndarray] = None, k: int = 64,
+              r_cap: Optional[int] = None) -> EllGraph:
     """Host-side ELL builder from a COO edge list (numpy).
 
     Produces rows in vertex order; vertices with degree > k get
     ``ceil(deg/k)`` rows. Isolated vertices still get one (all-masked) row so
-    ``row_ids`` always covers ``0..n-1`` at least once.
+    ``row_ids`` always covers ``0..n-1`` at least once. When ``r_cap`` is
+    given the row axis is padded (all-masked, row_ids=0) to that fixed
+    capacity so same-bucket graphs share a jit signature.
     """
     senders = np.asarray(senders, np.int64)
     receivers = np.asarray(receivers, np.int64)
@@ -57,11 +90,14 @@ def build_ell(senders: np.ndarray, receivers: np.ndarray, n: int,
     rows_per_v = np.maximum(1, -(-deg // k))  # ceil, min 1
     row_start = np.concatenate([[0], np.cumsum(rows_per_v)])
     n_rows = int(row_start[-1])
+    n_alloc = n_rows if r_cap is None else int(r_cap)
+    if n_rows > n_alloc:
+        raise ValueError(f"ELL needs {n_rows} rows > capacity {n_alloc}")
 
-    cols = np.zeros((n_rows, k), np.int32)
-    vals = np.zeros((n_rows, k), np.float32)
-    mask = np.zeros((n_rows, k), bool)
-    row_ids = np.zeros(n_rows, np.int32)
+    cols = np.zeros((n_alloc, k), np.int32)
+    vals = np.zeros((n_alloc, k), np.float32)
+    mask = np.zeros((n_alloc, k), bool)
+    row_ids = np.zeros(n_alloc, np.int32)
     for v in range(n):
         row_ids[row_start[v]:row_start[v + 1]] = v
     # position of each edge within its vertex block

@@ -1,0 +1,214 @@
+"""COO-vs-ELL backend equivalence + regressions for the backend wiring.
+
+The ELL path must be a *drop-in*: same ``GRayResult.matched/exact/valid``
+on random dynamic graphs across update steps, through both the induced-
+subgraph path and the full-graph fallback. Plus regression tests for the
+``iters=0`` warm-start bug and the PatternStore deletion-drift bug.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import IGPMConfig
+from repro.core.graph import (EllCache, UpdateBatch, ell_from_graph,
+                              new_graph)
+from repro.core.gray import GRayMatcher, _bfs_reach_hops
+from repro.core.matcher import (NaiveIncrementalMatcher, PatternStore,
+                                live_vertex_mask)
+from repro.core.query import build_query, triangle
+from repro.core.rwr import restart_onehot, rwr
+from repro.core.subgraph import extract_induced
+from repro.data.temporal import TemporalGraphSpec, generate_stream
+from repro.sparse.ell import dense_adj
+
+pytestmark = pytest.mark.slow
+
+
+def _spec(seed=7):
+    return TemporalGraphSpec("toy", "sparse_dense", n_vertices=256,
+                             n_edges=2048, n_steps=24, seed=seed)
+
+
+def _cfg(backend):
+    return IGPMConfig(n_max=256, e_max=8192, ell_width=8, rwr_iters=8,
+                      rwr_iters_incremental=3, top_k_patterns=6,
+                      init_community_size=32, backend=backend)
+
+
+def _run_steps(backend, full_graph_frac):
+    stream = generate_stream(_spec(), n_measured_steps=4, u_max=128)
+    m = NaiveIncrementalMatcher(triangle(), _cfg(backend),
+                                full_graph_frac=full_graph_frac)
+    g = stream.graph
+    results = []
+    for upd in stream.updates:
+        g, st = m.step(g, upd)
+        results.append((st.n_patterns_total, st.n_exact_total,
+                        st.n_recompute))
+    return results, m
+
+
+@pytest.mark.parametrize("full_graph_frac", [1.1, -1.0],
+                         ids=["subgraph", "full_graph"])
+def test_ell_backend_matches_coo_over_stream(full_graph_frac):
+    """frac > 1 forces the induced-subgraph path every step; frac < 0
+    forces the full-graph fallback — both must agree with COO."""
+    got_coo, _ = _run_steps("coo", full_graph_frac)
+    got_ell, m = _run_steps("ell", full_graph_frac)
+    assert got_coo == got_ell
+    assert m.ell_cache is not None
+
+
+def test_ell_backend_identical_gray_result():
+    rng = np.random.default_rng(1)
+    n = 96
+    s = rng.integers(0, n, 300)
+    r = rng.integers(0, n, 300)
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    g = new_graph(n, 1024, labels=labels, senders=s, receivers=r)
+    q = build_query([(0, 1), (1, 2), (2, 0)], [0, 1, 2])
+    res = {}
+    for backend in ("coo", "ell"):
+        m = GRayMatcher(q, n_labels=4, k=6, rwr_iters=12, backend=backend,
+                        ell_width=8)
+        r_lab = m.label_table(g)
+        res[backend] = m.match(g, r_lab)
+    np.testing.assert_array_equal(res["coo"].matched, res["ell"].matched)
+    np.testing.assert_array_equal(res["coo"].exact, res["ell"].exact)
+    np.testing.assert_array_equal(res["coo"].valid, res["ell"].valid)
+    np.testing.assert_array_equal(res["coo"].hops, res["ell"].hops)
+
+
+def test_ell_cache_incremental_matches_fresh_build():
+    rng = np.random.default_rng(3)
+    n, e_max, k = 64, 2048, 8
+    g = new_graph(n, e_max, labels=np.zeros(n, np.int32),
+                  senders=rng.integers(0, n, 100),
+                  receivers=rng.integers(0, n, 100))
+    cache = EllCache(n, e_max, k)
+    for _ in range(5):
+        upd = UpdateBatch.additions(rng.integers(0, n, 20),
+                                    rng.integers(0, n, 20), u_max=64)
+        em = np.asarray(g.edge_mask)
+        ls = np.asarray(g.senders)[em]
+        lr = np.asarray(g.receivers)[em]
+        idx = rng.choice(len(ls), size=min(8, len(ls)), replace=False)
+        pad = 64 - len(idx)
+        upd = upd._replace(
+            rem_src=jnp.asarray(np.pad(ls[idx], (0, pad)).astype(np.int32)),
+            rem_dst=jnp.asarray(np.pad(lr[idx], (0, pad)).astype(np.int32)),
+            rem_mask=jnp.asarray(np.arange(64) < len(idx)))
+        g = cache.update(g, upd)
+        fresh = ell_from_graph(g, k)
+        np.testing.assert_array_equal(np.asarray(dense_adj(cache.ell)),
+                                      np.asarray(dense_adj(fresh)))
+
+
+def test_ell_cache_overflow_triggers_compacting_rebuild():
+    # k=2 with a tiny row budget: repeated add/remove churn must spill and
+    # force the compaction rebuild without ever diverging from fresh state
+    rng = np.random.default_rng(0)
+    n, e_max, k = 8, 64, 2
+    g = new_graph(n, e_max, n_nodes=n)
+    cache = EllCache(n, e_max, k)
+    for _ in range(12):
+        src, dst = rng.integers(0, n, 4), rng.integers(0, n, 4)
+        upd = UpdateBatch.additions(src, dst, u_max=16, undirected=False)
+        g = cache.update(g, upd)
+    fresh = ell_from_graph(g, k)
+    np.testing.assert_array_equal(np.asarray(dense_adj(cache.ell)),
+                                  np.asarray(dense_adj(fresh)))
+
+
+def test_bfs_reach_backends_bit_identical():
+    rng = np.random.default_rng(5)
+    n = 128
+    g = new_graph(n, 1024, labels=np.zeros(n, np.int32),
+                  senders=rng.integers(0, n, 400),
+                  receivers=rng.integers(0, n, 400))
+    ell = ell_from_graph(g, 8)
+    src = jnp.asarray(rng.integers(0, n, 5).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(_bfs_reach_hops(g, src, 4)),
+        np.asarray(_bfs_reach_hops(g, src, 4, ell=ell)))
+
+
+def test_subgraph_emits_bucketed_ell():
+    rng = np.random.default_rng(2)
+    n = 128
+    g = new_graph(n, 1024, labels=rng.integers(0, 4, n).astype(np.int32),
+                  senders=rng.integers(0, n, 300),
+                  receivers=rng.integers(0, n, 300))
+    mask = np.zeros(n, bool)
+    mask[rng.choice(n, 40, replace=False)] = True
+    sub = extract_induced(g, mask, ell_k=8)
+    assert sub.ell is not None
+    fresh = ell_from_graph(sub.graph, 8)
+    np.testing.assert_array_equal(np.asarray(dense_adj(sub.ell)),
+                                  np.asarray(dense_adj(fresh)))
+
+
+# -- regression: label_table(iters=0) silently ignored ------------------------
+
+def test_label_table_honors_explicit_zero_iters():
+    rng = np.random.default_rng(4)
+    n = 32
+    g = new_graph(n, 256, labels=rng.integers(0, 4, n).astype(np.int32),
+                  senders=rng.integers(0, n, 64),
+                  receivers=rng.integers(0, n, 64))
+    m = GRayMatcher(triangle(), n_labels=4, k=2, rwr_iters=10)
+    r0 = jnp.asarray(rng.random((n, 4)).astype(np.float32))
+    out = m.label_table(g, r0=r0, iters=0)
+    # zero extra sweeps must return the warm start unchanged — the seed
+    # code treated iters=0 as "unset" and ran rwr_iters sweeps instead
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(r0))
+
+
+# -- regression: PatternStore never invalidated deleted vertices --------------
+
+def test_pattern_store_prunes_deleted_vertices():
+    store = PatternStore()
+    q_mask = np.ones(3, bool)
+    matched = np.array([[0, 1, 2], [3, 4, 5]])
+    store.merge_arrays(matched, np.zeros(2), np.ones(2, bool),
+                       np.ones(2, bool), q_mask)
+    assert store.total == 2
+    node_mask = np.ones(8, bool)
+    node_mask[4] = False  # vertex 4 died → pattern (3,4,5) is stale
+    assert store.prune(node_mask) == 1
+    assert store.total == 1
+
+
+def test_matcher_prunes_on_deletion_heavy_stream():
+    rng = np.random.default_rng(9)
+    n = 64
+    labels = np.array([0, 1, 2] + [3] * (n - 3), np.int32)
+    edges = [(0, 1), (1, 2), (2, 0)]
+    for _ in range(30):
+        a, b = rng.integers(3, n, 2)
+        if a != b:
+            edges.append((int(a), int(b)))
+    s = np.array([e[0] for e in edges] + [e[1] for e in edges])
+    r = np.array([e[1] for e in edges] + [e[0] for e in edges])
+    g = new_graph(n, 1024, labels=labels, senders=s, receivers=r)
+    cfg = dataclasses.replace(_cfg("ell"), n_max=64, e_max=1024)
+    m = NaiveIncrementalMatcher(triangle(labels=(0, 1, 2)), cfg,
+                                full_graph_frac=-1.0)
+    g, _ = m.step(g, UpdateBatch.additions(np.array([0]), np.array([5]),
+                                           u_max=16))
+    assert m.store.total >= 1
+    assert any({0, 1, 2} == set(k) for k in m.store._patterns)
+    # delete the planted triangle's arcs; its pattern must leave the store
+    rem = np.array([[0, 1], [1, 2], [2, 0], [1, 0], [2, 1], [0, 2]])
+    upd = UpdateBatch.empty(16)._replace(
+        rem_src=jnp.asarray(np.pad(rem[:, 0], (0, 10)).astype(np.int32)),
+        rem_dst=jnp.asarray(np.pad(rem[:, 1], (0, 10)).astype(np.int32)),
+        rem_mask=jnp.asarray(np.arange(16) < 6))
+    g, st = m.step(g, upd)
+    assert st.n_pruned >= 1
+    live = live_vertex_mask(g)
+    assert not live[1] and not live[2]  # 1,2 lost every arc
+    assert not any(1 in k or 2 in k for k in m.store._patterns)

@@ -3,9 +3,13 @@
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.core.graph import (UpdateBatch, add_edges, apply_update, new_graph,
                               remove_edges, set_labels, transition_weights,
                               updated_vertices, vertex_mask)
+
+pytestmark = pytest.mark.fast
 
 
 def _toy():

@@ -2,9 +2,12 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.graph import UpdateBatch, apply_update, new_graph
 from repro.core.rwr import label_rwr, restart_onehot, rwr, rwr_residual
+
+pytestmark = pytest.mark.fast
 
 
 def _ring(n=12, n_labels=3):

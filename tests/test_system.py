@@ -4,6 +4,8 @@ adaptive IGPM on a synthetic temporal stream (paper §IV protocol, scaled)."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.config.base import IGPMConfig
 from repro.core.matcher import (AdaptiveMatcher, BatchMatcher,
                                 NaiveIncrementalMatcher, PatternStore)
