@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test fast bench-kernels bench-backends
+.PHONY: verify test fast bench-kernels bench-backends serve-smoke
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -25,3 +25,8 @@ bench-kernels:
 bench-backends:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import fig_backends; \
 	    [print(r.csv()) for r in fig_backends.run()]"
+
+# continuous-serving smoke: exercises the MatchServer pipeline (queue →
+# shared sweeps → query-bank match → telemetry) on a tiny churn stream
+serve-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/serving_bench.py --smoke

@@ -20,7 +20,8 @@ def main() -> None:
 
     from benchmarks import (fig5_batch_vs_inc, fig6_queries, fig7_adaptive,
                             fig9_patterns, fig_backends, kernels_bench,
-                            roofline_table, scaling, table2_compat)
+                            roofline_table, scaling, serving_bench,
+                            table2_compat)
     suites = {
         "fig5": fig5_batch_vs_inc.run,
         "fig6": fig6_queries.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "roofline": roofline_table.run,
         "scaling": scaling.run,
+        "serving": serving_bench.run,
     }
     picked = args.only or list(suites)
     kw = {}

@@ -190,6 +190,33 @@ class IGPMConfig:
     target_update_every: int = 10
 
 
+@dataclass(frozen=True)
+class ServingConfig:
+    """Continuous multi-query serving knobs (DESIGN.md §3).
+
+    The serving loop drains at most ``microbatch_window`` queued update
+    events per step, coalesces them into one :class:`UpdateBatch`, and runs
+    the shared pipeline + query-bank match once. The queue is bounded at
+    ``queue_depth`` events; past that, back-pressure applies
+    ``drop_policy``:
+      - ``drop_oldest`` — evict the oldest pending event (freshness wins)
+      - ``drop_newest`` — reject the offered event (history wins)
+    ``coalesce`` annihilates add/remove pairs of the same arc that meet in
+    the pending window, so storms of flapping edges never reach the device.
+    """
+
+    queue_depth: int = 4096
+    microbatch_window: int = 256
+    drop_policy: str = "drop_oldest"  # | 'drop_newest'
+    coalesce: bool = True
+    adaptive: bool = True             # PEM community size driven by the DQN
+    full_graph_frac: float = 0.5      # update-storm full-pass threshold
+    telemetry_window: int = 512       # step-latency samples kept for p50/p99
+    # query-bank padding: every registered query is re-padded to this shape
+    q_max: int = 8
+    qe_max: int = 16
+
+
 # ---------------------------------------------------------------------------
 # Arch + run configs
 # ---------------------------------------------------------------------------

@@ -9,9 +9,11 @@ from repro.core.graph import (
     remove_edges,
     set_labels,
 )
-from repro.core.query import Query, clique4, square, star5, triangle
+from repro.core.query import (Query, QueryBank, clique4, query_zoo, square,
+                              stack_queries, star5, triangle)
 from repro.core.rwr import label_rwr, rwr
-from repro.core.gray import GRayResult, gray_match
+from repro.core.gray import (BankGRayMatcher, GRayMatcher, GRayResult,
+                             gray_match)
 from repro.core.louvain import louvain, louvain_constrained
 from repro.core.dqn import DQNAgent
 from repro.core.pem import PartialExecutionManager
@@ -20,9 +22,10 @@ from repro.core.matcher import AdaptiveMatcher, BatchMatcher, NaiveIncrementalMa
 __all__ = [
     "DynamicGraph", "UpdateBatch", "new_graph", "add_edges", "remove_edges",
     "set_labels", "apply_update",
-    "Query", "triangle", "square", "star5", "clique4",
+    "Query", "QueryBank", "stack_queries", "query_zoo",
+    "triangle", "square", "star5", "clique4",
     "rwr", "label_rwr",
-    "GRayResult", "gray_match",
+    "GRayResult", "GRayMatcher", "BankGRayMatcher", "gray_match",
     "louvain", "louvain_constrained",
     "DQNAgent",
     "PartialExecutionManager",

@@ -125,6 +125,47 @@ class DQNAgent:
             return int(self._rng.integers(self.cfg.dqn_n_actions))
         return int(np.argmax(self.q_values(obs[None])[0]))
 
+    # -- persistence (serving restarts) --------------------------------------
+
+    def state_dict(self) -> Dict:
+        """Learner state as a pytree of host arrays — params, target net,
+        Adam moments, step count, and the replay ring — shaped for
+        ``repro.checkpoint.Checkpointer`` (see MatchServer.save_policy)."""
+        rb = self.replay
+        return {
+            "params": jax.tree.map(np.asarray, self.params),
+            "target_params": jax.tree.map(np.asarray, self.target_params),
+            "m": jax.tree.map(np.asarray, self.m),
+            "v": jax.tree.map(np.asarray, self.v),
+            "t": np.asarray(self.t, np.int64),
+            "replay": {
+                "obs": rb.obs.copy(), "next_obs": rb.next_obs.copy(),
+                "actions": rb.actions.copy(), "rewards": rb.rewards.copy(),
+                "dones": rb.dones.copy(),
+                "size": np.asarray(rb.size, np.int64),
+                "cursor": np.asarray(rb.cursor, np.int64),
+            },
+        }
+
+    def load_state_dict(self, sd: Dict) -> None:
+        """Restore the learner from :meth:`state_dict` output (or its
+        checkpoint round-trip). The exploration RNG is NOT part of the
+        state — a restarted server explores afresh by design."""
+        as_jnp = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
+        self.params = as_jnp(sd["params"])
+        self.target_params = as_jnp(sd["target_params"])
+        self.m = as_jnp(sd["m"])
+        self.v = as_jnp(sd["v"])
+        self.t = int(sd["t"])
+        rb, srb = self.replay, sd["replay"]
+        rb.obs[:] = srb["obs"]
+        rb.next_obs[:] = srb["next_obs"]
+        rb.actions[:] = srb["actions"]
+        rb.rewards[:] = srb["rewards"]
+        rb.dones[:] = srb["dones"]
+        rb.size = int(srb["size"])
+        rb.cursor = int(srb["cursor"])
+
     def observe(self, t: Transition) -> float:
         """Push a transition and do one learning step. Returns TD loss."""
         self.replay.push(t)

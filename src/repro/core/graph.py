@@ -67,19 +67,60 @@ class UpdateBatch(NamedTuple):
     def additions(src: np.ndarray, dst: np.ndarray, u_max: int,
                   undirected: bool = True) -> "UpdateBatch":
         """Host helper: pack an edge-addition batch (optionally both arcs)."""
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        if undirected:
-            src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
-        k = len(src)
-        if k > u_max:
-            raise ValueError(f"update batch {k} exceeds u_max {u_max}")
-        pad = u_max - k
-        b = UpdateBatch.empty(u_max)
-        return b._replace(
-            add_src=jnp.asarray(np.pad(src, (0, pad))),
-            add_dst=jnp.asarray(np.pad(dst, (0, pad))),
-            add_mask=jnp.asarray(np.arange(u_max) < k),
+        return UpdateBatch.mixed(add_src=src, add_dst=dst, u_max=u_max,
+                                 undirected=undirected)
+
+    @staticmethod
+    def removals(src: np.ndarray, dst: np.ndarray, u_max: int,
+                 undirected: bool = True) -> "UpdateBatch":
+        """Host helper: pack an edge-removal batch (optionally both arcs)."""
+        return UpdateBatch.mixed(rem_src=src, rem_dst=dst, u_max=u_max,
+                                 undirected=undirected)
+
+    @staticmethod
+    def mixed(add_src: Optional[np.ndarray] = None,
+              add_dst: Optional[np.ndarray] = None,
+              rem_src: Optional[np.ndarray] = None,
+              rem_dst: Optional[np.ndarray] = None,
+              lab_ids: Optional[np.ndarray] = None,
+              lab_vals: Optional[np.ndarray] = None,
+              u_max: int = 512, undirected: bool = True) -> "UpdateBatch":
+        """Host helper: one timestep mixing additions, removals, and label
+        changes — the churn-capable constructor deletion-heavy streams use.
+
+        ``undirected`` inserts/removes both arcs of every edge. Each lane
+        (add/remove/label) is padded to ``u_max`` independently, mirroring
+        the field layout :func:`apply_update` consumes.
+        """
+        def _arcs(s, d):
+            if s is None:
+                return np.zeros(0, np.int32), np.zeros(0, np.int32)
+            s = np.asarray(s, np.int32)
+            d = np.asarray(d, np.int32)
+            if undirected:
+                s, d = np.concatenate([s, d]), np.concatenate([d, s])
+            return s, d
+
+        def _pack(a: np.ndarray) -> jnp.ndarray:
+            if len(a) > u_max:
+                raise ValueError(
+                    f"update batch {len(a)} exceeds u_max {u_max}")
+            return jnp.asarray(np.pad(a, (0, u_max - len(a))))
+
+        a_s, a_d = _arcs(add_src, add_dst)
+        r_s, r_d = _arcs(rem_src, rem_dst)
+        l_i = (np.zeros(0, np.int32) if lab_ids is None
+               else np.asarray(lab_ids, np.int32))
+        l_v = (np.zeros(0, np.int32) if lab_vals is None
+               else np.asarray(lab_vals, np.int32))
+        lanes = jnp.arange(u_max)
+        return UpdateBatch(
+            add_src=_pack(a_s), add_dst=_pack(a_d),
+            add_mask=lanes < len(a_s),
+            rem_src=_pack(r_s), rem_dst=_pack(r_d),
+            rem_mask=lanes < len(r_s),
+            lab_ids=_pack(l_i), lab_vals=_pack(l_v),
+            lab_mask=lanes < len(l_i),
         )
 
 
@@ -135,9 +176,48 @@ def add_edges(g: DynamicGraph, src: jnp.ndarray, dst: jnp.ndarray,
                       n_edges=g.n_edges + k.sum())
 
 
+# largest n_max whose (sender·n_max + receiver) arc key fits int32
+# (jax x64 is off, so int64 keys would silently truncate)
+_KEYED_REMOVE_N_MAX = 46_000
+
+
 def remove_edges(g: DynamicGraph, src: jnp.ndarray, dst: jnp.ndarray,
                  mask: jnp.ndarray) -> DynamicGraph:
-    """Remove arcs by endpoint match (first live occurrence each)."""
+    """Remove arcs by endpoint match — each masked request kills one live
+    copy, earliest slots first; duplicate requests consume duplicate
+    copies; requests with no live match are no-ops.
+
+    Vectorized as sort + searchsorted (the seed implementation was a
+    sequential ``fori_loop`` scanning all of ``e_max`` per request — at
+    serving batch widths that dominated the whole step): count the
+    requests per arc key, rank each live arc among live arcs with its key
+    (stable → slot order), and kill arcs with rank < request count. This
+    removes, per key, the first ``count`` live copies — exactly what the
+    sequential first-match loop produced. Graphs too large for an int32
+    arc key keep the sequential path.
+    """
+    if g.n_max > _KEYED_REMOVE_N_MAX:
+        return _remove_edges_seq(g, src, dst, mask)
+    key_e = g.senders * g.n_max + g.receivers
+    key_u = src * g.n_max + dst
+    sent = jnp.iinfo(key_e.dtype).max
+    ku = jnp.sort(jnp.where(mask, key_u, sent))
+    cnt = (jnp.searchsorted(ku, key_e, side="right")
+           - jnp.searchsorted(ku, key_e, side="left"))
+    ke = jnp.where(g.edge_mask, key_e, sent)
+    order = jnp.argsort(ke, stable=True)
+    ke_sorted = ke[order]
+    rank_sorted = (jnp.arange(g.e_max)
+                   - jnp.searchsorted(ke_sorted, ke_sorted, side="left"))
+    rank = jnp.zeros(g.e_max, rank_sorted.dtype).at[order].set(rank_sorted)
+    kill = g.edge_mask & (rank < cnt)
+    deg = g.degree.at[g.senders].add(-kill.astype(g.degree.dtype))
+    return g._replace(edge_mask=g.edge_mask & ~kill, degree=deg)
+
+
+def _remove_edges_seq(g: DynamicGraph, src: jnp.ndarray, dst: jnp.ndarray,
+                      mask: jnp.ndarray) -> DynamicGraph:
+    """Sequential first-match removal (huge-graph fallback)."""
     def body(i, carry):
         em, deg = carry
         hit = (g.senders == src[i]) & (g.receivers == dst[i]) & em & mask[i]

@@ -9,28 +9,39 @@ The three core functions map onto dense array ops:
   bridge             → bounded-hop BFS reachability sweep (hop count of the
                        best connecting path; direct edge ⇒ hop 1 ⇒ exact)
 
-The query expansion schedule is host-static (Query.order_*), so we *unroll*
-it and memoize the RWR/bridge tables per query-source vertex: a star-5 query
-runs ONE RWR for all four expansions instead of four (a beyond-paper
-optimization recorded in EXPERIMENTS.md §Perf; the paper recomputes per
-function call).
+Queries are *data*, not code: every matcher entry point takes the query
+tensors (labels/mask/anchor/expansion schedule) as jit arguments, so a
+whole bank of standing queries stacked into a :class:`~repro.core.query.
+QueryBank` runs through ONE compiled program — :class:`BankGRayMatcher`
+vmaps the expansion over the query axis while the expensive sparse sweeps
+(single-source RWR and the BFS bridge) run as ONE ``(n, B·k)`` dense block
+shared across all queries (DESIGN.md §3). :class:`GRayMatcher` is the
+single-query view: a bank of size one with the leading axis squeezed.
 
-Both sparse sweeps (RWR and the BFS frontier) run on either the COO
-gather/segment path or the Pallas ELL kernels — ``backend="ell"`` routes
-them through ``repro.kernels.spmv_ell`` given an ELL mirror of the graph
-(DESIGN.md §2; see ``repro.core.graph.EllCache``).
+The expansion schedule is host-static (``Query.order_*``), so we unroll it
+and memoize the per-step source tables by their *source-vertex signature*:
+a star-5 query runs ONE RWR for all four expansions instead of four (a
+beyond-paper optimization recorded in EXPERIMENTS.md §Perf; the paper
+recomputes per function call). In bank mode the signature is the vector of
+per-query source vertices, so steps that line up across the bank share one
+batched sweep.
+
+Both sparse sweeps run on either the COO gather/segment path or the Pallas
+ELL kernels — ``backend="ell"`` routes them through
+``repro.kernels.spmv_ell`` given an ELL mirror of the graph (DESIGN.md §2;
+see ``repro.core.graph.EllCache``).
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import DynamicGraph, ell_from_graph
-from repro.core.query import Query
+from repro.core.query import Query, QueryBank, stack_queries
 from repro.core.rwr import label_rwr, rwr
 from repro.kernels.spmv_ell.ops import ell_reach_kernel
 from repro.sparse.ell import EllGraph
@@ -39,11 +50,13 @@ _EPS = 1e-12
 
 
 class GRayResult(NamedTuple):
-    matched: jnp.ndarray   # int32[k, q_max] — data vertex per query vertex
-    goodness: jnp.ndarray  # f32[k] — Σ log proximity over schedule edges
-    hops: jnp.ndarray      # int32[k, qe_max] — best-path hops per query edge
-    exact: jnp.ndarray     # bool[k] — every query edge realized by a data edge
-    valid: jnp.ndarray     # bool[k] — seed live and all expansions found
+    """Single-query: leading axis k (seeds). Bank: leading axes (B, k)."""
+
+    matched: jnp.ndarray   # int32[..., q_max] — data vertex per query vertex
+    goodness: jnp.ndarray  # f32[...] — Σ log proximity over schedule edges
+    hops: jnp.ndarray      # int32[..., qe_max] — best-path hops per edge
+    exact: jnp.ndarray     # bool[...] — every query edge is a data edge
+    valid: jnp.ndarray     # bool[...] — seed live and all expansions found
 
 
 def find_seeds(g: DynamicGraph, query: Query, r_lab: jnp.ndarray, k: int,
@@ -55,10 +68,18 @@ def find_seeds(g: DynamicGraph, query: Query, r_lab: jnp.ndarray, k: int,
     restricted to v with the anchor's label (and the PEM recompute mask,
     when given — that's the paper's partial execution hook).
     """
-    q_lab = query.labels
+    return _find_seeds_arrays(g, r_lab, k, seed_filter, query.labels,
+                              query.mask, query.anchor)
+
+
+def _find_seeds_arrays(g: DynamicGraph, r_lab: jnp.ndarray, k: int,
+                       seed_filter: Optional[jnp.ndarray],
+                       q_labels: jnp.ndarray, q_mask: jnp.ndarray,
+                       anchor: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     logp = jnp.log(r_lab + _EPS)                      # (n, L)
-    score = (logp[:, q_lab] * query.mask[None, :]).sum(axis=1)  # (n,)
-    anchor_lab = q_lab[query.anchor]
+    score = (logp[:, q_labels] * q_mask[None, :]).sum(axis=1)  # (n,)
+    anchor_lab = q_labels[anchor]
     ok = (g.labels == anchor_lab) & g.node_mask & (g.degree > 0)
     if seed_filter is not None:
         ok = ok & seed_filter
@@ -102,21 +123,27 @@ def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
     return hops  # (k, n)
 
 
-class GRayMatcher:
-    """Jitted G-Ray for one query shape. Reused across steps/seeds.
+class BankGRayMatcher:
+    """Jitted G-Ray over a stacked bank of standing queries.
+
+    One compiled program serves the whole bank: the expansion is vmapped
+    over the query axis and every per-step single-source sweep (RWR +
+    bounded BFS) runs as one ``(n, B·k)`` dense block — the shared-sweep
+    amortization that makes a 16-query bank far cheaper than 16 single
+    matchers (DESIGN.md §3, benchmarks/serving_bench.py).
 
     ``backend="ell"`` runs both sparse sweeps through the Pallas ELL
     kernels; callers pass the graph's ELL mirror via ``ell=`` (one is built
     on the fly when omitted — prefer a cached mirror in loops).
     """
 
-    def __init__(self, query: Query, n_labels: int, k: int,
+    def __init__(self, bank: QueryBank, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
                  bridge_hops: int = 4, backend: str = "coo",
                  ell_width: int = 64):
         if backend not in ("coo", "ell"):
             raise ValueError(f"unknown backend {backend!r}")
-        self.query = query
+        self.bank = bank
         self.n_labels = n_labels
         self.k = k
         self.rwr_iters = rwr_iters
@@ -124,19 +151,39 @@ class GRayMatcher:
         self.bridge_hops = bridge_hops
         self.backend = backend
         self.ell_width = ell_width
-        # host-static expansion schedule
-        import numpy as np
-        om = np.asarray(query.order_mask)
-        self.schedule: Tuple[Tuple[int, int, bool], ...] = tuple(
-            (int(a), int(b), bool(t))
-            for a, b, t, m in zip(np.asarray(query.order_src),
-                                  np.asarray(query.order_dst),
-                                  np.asarray(query.order_tree), om) if m)
+        # host-static schedule structure: unroll to the longest schedule in
+        # the bank; shorter queries no-op their padded tail steps
+        src_np = np.asarray(bank.order_src)
+        mask_np = np.asarray(bank.order_mask)
+        B = bank.n_queries
+        self.n_steps = int(mask_np.sum(axis=1).max()) if mask_np.size else 0
+        # per-(query, source-vertex) table memo: each query computes one
+        # RWR/reach table per DISTINCT schedule source, exactly like the
+        # single-query memo — but all tables first used at one unrolled
+        # step batch into one shared (n, P·k) sweep. Sound because
+        # matched[qa] is write-once and BFS order matches a source before
+        # its first use; padded tail steps of shorter queries read slot 0
+        # and mask the result out.
+        pair_of: Tuple[Dict[int, int], ...] = tuple({} for _ in range(B))
+        self._new_pairs: Tuple[Tuple[Tuple[int, int, int], ...], ...]
+        new_pairs = []
+        self._read_slot = np.zeros((self.n_steps, B), np.int32)
+        for ei in range(self.n_steps):
+            fresh = []
+            for b in range(B):
+                if not mask_np[b, ei]:
+                    continue
+                sv = int(src_np[b, ei])
+                if sv not in pair_of[b]:
+                    pair_of[b][sv] = len(pair_of[b])
+                    fresh.append((b, pair_of[b][sv], sv))
+                self._read_slot[ei, b] = pair_of[b][sv]
+            new_pairs.append(tuple(fresh))
+        self._new_pairs = tuple(new_pairs)
+        self.t_max = max([1] + [len(p) for p in pair_of])
+        self.n_tables = sum(len(p) for p in pair_of)
         self._match = jax.jit(self._match_impl)
-        # close over the (tiny, host-static) query so jit sees only arrays
-        self._seeds = jax.jit(
-            lambda g, r_lab, seed_filter=None: find_seeds(
-                g, self.query, r_lab, self.k, seed_filter=seed_filter))
+        self._seeds = jax.jit(self._seeds_impl)
 
     # -- public API ---------------------------------------------------------
 
@@ -152,6 +199,8 @@ class GRayMatcher:
                     r0: Optional[jnp.ndarray] = None,
                     iters: Optional[int] = None,
                     ell: Optional[EllGraph] = None) -> jnp.ndarray:
+        """Label-conditioned RWR table — query-independent, computed ONCE
+        per graph state and shared by every query in the bank."""
         return label_rwr(g, self.n_labels,
                          iters=iters if iters is not None else self.rwr_iters,
                          c=self.restart, r0=r0, ell=self._ell_for(g, ell))
@@ -159,85 +208,185 @@ class GRayMatcher:
     def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
               seed_filter: Optional[jnp.ndarray] = None,
               ell: Optional[EllGraph] = None) -> GRayResult:
-        seed_ids, seed_mask = self._seeds(g, r_lab, seed_filter)
+        b = self.bank
+        ell = self._ell_for(g, ell)
+        seed_ids, seed_mask = self._seeds(g, r_lab, seed_filter,
+                                          b.labels, b.mask, b.anchor)
         return self.match_from_seeds(g, r_lab, seed_ids, seed_mask, ell=ell)
 
     def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
                          seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
                          ell: Optional[EllGraph] = None) -> GRayResult:
+        b = self.bank
         return self._match(g, r_lab, seed_ids, seed_mask,
-                           self._ell_for(g, ell))
+                           self._ell_for(g, ell), b.labels, b.mask, b.anchor,
+                           b.order_src, b.order_dst, b.order_tree,
+                           b.order_mask)
 
     # -- implementation ------------------------------------------------------
 
+    def _seeds_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
+                    seed_filter: Optional[jnp.ndarray],
+                    q_labels: jnp.ndarray, q_mask: jnp.ndarray,
+                    anchor: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jax.vmap(
+            lambda lq, mq, aq: _find_seeds_arrays(g, r_lab, self.k,
+                                                  seed_filter, lq, mq, aq)
+        )(q_labels, q_mask, anchor)
+
     def _match_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
                     seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
-                    ell: Optional[EllGraph]) -> GRayResult:
-        query, k = self.query, self.k
-        q_max, qe_max = query.q_max, query.order_src.shape[0]
+                    ell: Optional[EllGraph], q_labels: jnp.ndarray,
+                    q_mask: jnp.ndarray, anchor: jnp.ndarray,
+                    order_src: jnp.ndarray, order_dst: jnp.ndarray,
+                    order_tree: jnp.ndarray, order_mask: jnp.ndarray
+                    ) -> GRayResult:
+        B, k = seed_ids.shape
         n = g.n_max
-
-        matched = jnp.full((k, q_max), -1, jnp.int32)
-        anchor = query.anchor
-        matched = matched.at[:, anchor].set(seed_ids)
-        used = jnp.zeros((k, n), bool)
-        used = used.at[jnp.arange(k), seed_ids].set(True)
-
-        # seed goodness (same quantity the seed-finder ranked by)
+        q_max = q_labels.shape[1]
+        qe_max = order_src.shape[1]
         logp = jnp.log(r_lab + _EPS)
-        goodness = (logp[seed_ids][:, query.labels] * query.mask[None, :]
-                    ).sum(axis=1)
-        hops = jnp.zeros((k, qe_max), jnp.int32)
+
+        def init_one(lq, mq, aq, sq, _):
+            matched = jnp.full((k, q_max), -1, jnp.int32).at[:, aq].set(sq)
+            used = jnp.zeros((k, n), bool).at[jnp.arange(k), sq].set(True)
+            # seed goodness (same quantity the seed-finder ranked by)
+            goodness = (logp[sq][:, lq] * mq[None, :]).sum(axis=1)
+            return matched, used, goodness
+
+        matched, used, goodness = jax.vmap(init_one)(
+            q_labels, q_mask, anchor, seed_ids, seed_mask)
+        hops = jnp.zeros((B, k, qe_max), jnp.int32)
         valid = seed_mask
 
-        # memoized per-source tables (sound: matched[qa] is final once set)
-        rwr_memo: Dict[int, jnp.ndarray] = {}
-        reach_memo: Dict[int, jnp.ndarray] = {}
+        # per-(query, source) tables, all first-uses of one unrolled step
+        # batched into ONE shared (n, P·k) RWR + reach sweep
+        tables_r = jnp.zeros((B, self.t_max, n, k), jnp.float32)
+        tables_h = jnp.zeros((B, self.t_max, k, n), jnp.int32)
 
-        def source_tables(qa: int):
-            if qa not in rwr_memo:
-                src = matched[:, qa]                            # (k,)
-                e = jax.nn.one_hot(src, n, dtype=jnp.float32).T  # (n, k)
-                rwr_memo[qa] = rwr(g, e, iters=self.rwr_iters,
-                                   c=self.restart, ell=ell)     # (n, k)
-                reach_memo[qa] = _bfs_reach_hops(g, src, self.bridge_hops,
-                                                 ell=ell)
-            return rwr_memo[qa], reach_memo[qa]
+        for ei in range(self.n_steps):
+            pairs = self._new_pairs[ei]
+            if pairs:
+                srcs = jnp.stack([matched[b, :, sv]
+                                  for b, _, sv in pairs])        # (P, k)
+                p = len(pairs)
+                flat = srcs.reshape(p * k)
+                e = jax.nn.one_hot(flat, n, dtype=jnp.float32).T  # (n, P·k)
+                r_new = rwr(g, e, iters=self.rwr_iters, c=self.restart,
+                            ell=ell)
+                r_new = jnp.transpose(r_new.reshape(n, p, k), (1, 0, 2))
+                h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
+                                        ell=ell).reshape(p, k, n)
+                b_idx = jnp.asarray([b for b, _, _ in pairs])
+                t_idx = jnp.asarray([t for _, t, _ in pairs])
+                tables_r = tables_r.at[b_idx, t_idx].set(r_new)
+                tables_h = tables_h.at[b_idx, t_idx].set(h_new)
+            slot = jnp.asarray(self._read_slot[ei])
+            r_t = tables_r[jnp.arange(B), slot]                  # (B, n, k)
+            reach_t = tables_h[jnp.arange(B), slot]              # (B, k, n)
 
-        for ei, (qa, qb, is_tree) in enumerate(self.schedule):
-            r_a, reach_a = source_tables(qa)
-            if is_tree:
+            def step_one(lq, matched_q, used_q, goodness_q, hops_q, valid_q,
+                         qb, tr, on, r_q, reach_q, ei=ei):
                 # neighbor-expander: best label-compatible unused candidate
-                lab_b = query.labels[qb]
-                cand_ok = (g.labels == lab_b) & g.node_mask & ~used
-                score = jnp.where(cand_ok, r_a.T, -jnp.inf)     # (k, n)
+                cand_ok = ((g.labels == lq[qb])[None, :]
+                           & g.node_mask[None, :] & ~used_q)       # (k, n)
+                score = jnp.where(cand_ok, r_q.T, -jnp.inf)
                 best = jnp.argmax(score, axis=1).astype(jnp.int32)
                 found = jnp.isfinite(jnp.max(score, axis=1))
-                matched = matched.at[:, qb].set(
-                    jnp.where(found, best, -1))
-                used = used.at[jnp.arange(k), best].set(
-                    used[jnp.arange(k), best] | found)
-                prox = r_a[best, jnp.arange(k)]
-                goodness = goodness + jnp.where(
-                    found, jnp.log(prox + _EPS), 0.0)
-                valid = valid & found
-                m_b = best
-            else:
-                # both endpoints matched — score + bridge the chord
-                m_b = matched[:, qb]
-                prox = r_a[jnp.clip(m_b, 0, n - 1), jnp.arange(k)]
-                goodness = goodness + jnp.log(prox + _EPS)
-            # bridge: hop count of best path (1 ⇒ exact edge)
-            h = reach_a[jnp.arange(k), jnp.clip(m_b, 0, n - 1)]
-            hops = hops.at[:, ei].set(h)
+                m_tree = jnp.where(found, best, -1)
+                m_non = matched_q[:, qb]   # non-tree: both ends matched
+                write = tr & on
+                matched_q = matched_q.at[:, qb].set(
+                    jnp.where(write, m_tree, m_non))
+                used_q = used_q.at[jnp.arange(k), best].set(
+                    used_q[jnp.arange(k), best] | (found & write))
+                prox_tree = r_q[best, jnp.arange(k)]
+                prox_non = r_q[jnp.clip(m_non, 0, n - 1), jnp.arange(k)]
+                delta = jnp.where(tr,
+                                  jnp.where(found,
+                                            jnp.log(prox_tree + _EPS), 0.0),
+                                  jnp.log(prox_non + _EPS))
+                goodness_q = goodness_q + jnp.where(on, delta, 0.0)
+                valid_q = valid_q & jnp.where(write, found, True)
+                # bridge: hop count of best path (1 ⇒ exact edge)
+                m_b = jnp.where(tr, m_tree, m_non)
+                h = reach_q[jnp.arange(k), jnp.clip(m_b, 0, n - 1)]
+                hops_q = hops_q.at[:, ei].set(
+                    jnp.where(on, h, hops_q[:, ei]))
+                return matched_q, used_q, goodness_q, hops_q, valid_q
 
-        n_edges_sched = len(self.schedule)
-        edge_mask = jnp.arange(qe_max) < n_edges_sched
-        exact = jnp.where(edge_mask[None, :], hops == 1, True).all(axis=1)
-        reachable = jnp.where(edge_mask[None, :],
-                              hops <= self.bridge_hops, True).all(axis=1)
+            matched, used, goodness, hops, valid = jax.vmap(step_one)(
+                q_labels, matched, used, goodness, hops, valid,
+                order_dst[:, ei], order_tree[:, ei], order_mask[:, ei],
+                r_t, reach_t)
+
+        em = order_mask[:, None, :]                             # (B, 1, qe)
+        exact = jnp.where(em, hops == 1, True).all(axis=2)
+        reachable = jnp.where(em, hops <= self.bridge_hops, True).all(axis=2)
         valid = valid & reachable
         return GRayResult(matched, goodness, hops, exact & valid, valid)
+
+
+class GRayMatcher:
+    """Jitted G-Ray for one query shape — a bank of size one.
+
+    Kept as the single-query API the incremental matchers drive; all the
+    matching machinery lives in :class:`BankGRayMatcher` (the query tensors
+    are jit arguments, not closure state), so single-query and bank-mode
+    results are equal by construction.
+    """
+
+    def __init__(self, query: Query, n_labels: int, k: int,
+                 rwr_iters: int = 25, restart: float = 0.15,
+                 bridge_hops: int = 4, backend: str = "coo",
+                 ell_width: int = 64):
+        self.query = query
+        self.n_labels = n_labels
+        self.k = k
+        self.rwr_iters = rwr_iters
+        self.restart = restart
+        self.bridge_hops = bridge_hops
+        self.backend = backend
+        self.ell_width = ell_width
+        # host-static expansion schedule (introspection + tests)
+        om = np.asarray(query.order_mask)
+        self.schedule: Tuple[Tuple[int, int, bool], ...] = tuple(
+            (int(a), int(b), bool(t))
+            for a, b, t, m in zip(np.asarray(query.order_src),
+                                  np.asarray(query.order_dst),
+                                  np.asarray(query.order_tree), om) if m)
+        self._bank = BankGRayMatcher(
+            stack_queries([query], q_max=query.q_max,
+                          qe_max=int(query.order_src.shape[0])),
+            n_labels, k, rwr_iters=rwr_iters, restart=restart,
+            bridge_hops=bridge_hops, backend=backend, ell_width=ell_width)
+
+    # -- public API ---------------------------------------------------------
+
+    def _ell_for(self, g: DynamicGraph,
+                 ell: Optional[EllGraph]) -> Optional[EllGraph]:
+        return self._bank._ell_for(g, ell)
+
+    def label_table(self, g: DynamicGraph,
+                    r0: Optional[jnp.ndarray] = None,
+                    iters: Optional[int] = None,
+                    ell: Optional[EllGraph] = None) -> jnp.ndarray:
+        return self._bank.label_table(g, r0=r0, iters=iters, ell=ell)
+
+    def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
+              seed_filter: Optional[jnp.ndarray] = None,
+              ell: Optional[EllGraph] = None) -> GRayResult:
+        return GRayResult(
+            *(x[0] for x in self._bank.match(g, r_lab,
+                                             seed_filter=seed_filter,
+                                             ell=ell)))
+
+    def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
+                         seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
+                         ell: Optional[EllGraph] = None) -> GRayResult:
+        return GRayResult(
+            *(x[0] for x in self._bank.match_from_seeds(
+                g, r_lab, seed_ids[None], seed_mask[None], ell=ell)))
 
 
 def gray_match(g: DynamicGraph, query: Query, n_labels: int, k: int = 20,

@@ -4,11 +4,17 @@ A query is padded to ``q_max`` vertices. The G-Ray expansion order is a
 host-precomputed BFS spanning tree from the anchor vertex (highest-degree
 query vertex — the paper notes hubs make the best seeds), followed by the
 non-tree edges which are verified/bridged between already-matched vertices.
+
+For continuous serving many standing queries are evaluated against one
+update stream, so :func:`stack_queries` re-pads a heterogeneous set of
+queries to a common ``(q_max, qe_max)`` and stacks them into a
+:class:`QueryBank` — one device array per field with a leading query axis
+that the bank matcher vmaps over (DESIGN.md §3).
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -88,6 +94,85 @@ def build_query(edges: List[Tuple[int, int]], labels: List[int],
                  jnp.asarray(anchor, jnp.int32), name)
 
 
+class QueryBank(NamedTuple):
+    """A stack of standing queries padded to one ``(q_max, qe_max)`` shape.
+
+    Every field of :class:`Query` gains a leading query axis ``B``; the bank
+    matcher vmaps its expansion over that axis while sharing the per-step
+    sweeps (DESIGN.md §3). ``names`` is host metadata (never crosses jit).
+    """
+
+    labels: jnp.ndarray      # int32[B, q_max]
+    mask: jnp.ndarray        # bool[B, q_max]
+    order_src: jnp.ndarray   # int32[B, qe_max]
+    order_dst: jnp.ndarray   # int32[B, qe_max]
+    order_tree: jnp.ndarray  # bool[B, qe_max]
+    order_mask: jnp.ndarray  # bool[B, qe_max]
+    anchor: jnp.ndarray      # int32[B]
+    names: Tuple[str, ...] = ()
+
+    @property
+    def n_queries(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def q_max(self) -> int:
+        return self.labels.shape[1]
+
+    @property
+    def qe_max(self) -> int:
+        return self.order_src.shape[1]
+
+    def query(self, i: int) -> Query:
+        """Unstack query ``i`` (the single-query view of one bank row)."""
+        return Query(self.labels[i], self.mask[i], self.order_src[i],
+                     self.order_dst[i], self.order_tree[i],
+                     self.order_mask[i], self.anchor[i],
+                     self.names[i] if i < len(self.names) else f"q{i}")
+
+
+def _repad(a: np.ndarray, width: int) -> np.ndarray:
+    out = np.zeros(width, a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def stack_queries(queries: Sequence[Query], q_max: Optional[int] = None,
+                  qe_max: Optional[int] = None) -> QueryBank:
+    """Stack queries into a :class:`QueryBank`, re-padding each to the
+    common ``q_max``/``qe_max`` (defaults: the max over the bank)."""
+    if not queries:
+        raise ValueError("cannot stack an empty query bank")
+    n_nodes = [q.n_nodes for q in queries]
+    n_edges = [q.n_edges for q in queries]
+    q_max = q_max or max(max(n_nodes), 1)
+    qe_max = qe_max or max(max(n_edges), 1)
+    if max(n_nodes) > q_max:
+        raise ValueError(f"q_max {q_max} < largest query ({max(n_nodes)})")
+    if max(n_edges) > qe_max:
+        raise ValueError(f"qe_max {qe_max} < longest schedule "
+                         f"({max(n_edges)})")
+    fields = {k: [] for k in ("labels", "mask", "order_src", "order_dst",
+                              "order_tree", "order_mask")}
+    anchors = []
+    for q, nn, ne in zip(queries, n_nodes, n_edges):
+        fields["labels"].append(_repad(np.asarray(q.labels)[:nn], q_max))
+        fields["mask"].append(_repad(np.asarray(q.mask)[:nn], q_max))
+        fields["order_src"].append(_repad(np.asarray(q.order_src)[:ne],
+                                          qe_max))
+        fields["order_dst"].append(_repad(np.asarray(q.order_dst)[:ne],
+                                          qe_max))
+        fields["order_tree"].append(_repad(np.asarray(q.order_tree)[:ne],
+                                           qe_max))
+        fields["order_mask"].append(_repad(np.asarray(q.order_mask)[:ne],
+                                           qe_max))
+        anchors.append(int(q.anchor))
+    return QueryBank(
+        **{k: jnp.asarray(np.stack(v)) for k, v in fields.items()},
+        anchor=jnp.asarray(np.asarray(anchors, np.int32)),
+        names=tuple(q.name for q in queries))
+
+
 def triangle(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:
     return build_query([(0, 1), (1, 2), (2, 0)], list(labels),
                        name="triangle", **kw)
@@ -113,3 +198,19 @@ def clique4(labels: Tuple[int, int, int, int] = (0, 0, 0, 0), **kw) -> Query:
 def line3(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:
     """Line query — excluded from the paper's experiments (§V) but supported."""
     return build_query([(0, 1), (1, 2)], list(labels), name="line3", **kw)
+
+
+def query_zoo(count: int, n_labels: int = 4, q_max: int = 8,
+              qe_max: int = 16) -> List[Query]:
+    """``count`` standing queries for a serving bank: the paper's four
+    shapes cycled with rotated label assignments (deterministic)."""
+    shapes = (triangle, square, star5, clique4)
+    sizes = (3, 4, 5, 4)
+    out = []
+    for i in range(count):
+        fn, sz = shapes[i % 4], sizes[i % 4]
+        shift = i // 4
+        labs = tuple((shift + j) % n_labels for j in range(sz))
+        q = fn(labels=labs, q_max=q_max, qe_max=qe_max)
+        out.append(q._replace(name=f"{q.name}/l{shift}"))
+    return out

@@ -36,6 +36,17 @@ class TemporalGraphSpec:
     # few communities per window, which is precisely the regime PEM targets)
     locality: bool = True
     locality_regions: int = 64
+    # churn: removals emitted per measured step, as a fraction of that
+    # step's additions (0 = the paper's addition-only streams; 1 = every
+    # step deletes as many live edges as it adds). Removals are sampled
+    # from edges actually live at that point, so every batch is valid.
+    churn: float = 0.0
+    # hotspot: every ``hotspot_period``-th measured step is a burst whose
+    # additions all land in one small vertex region — the deletion/addition
+    # storm scenario serving back-pressure is sized against
+    hotspot: bool = False
+    hotspot_period: int = 4
+    hotspot_frac: float = 1.0 / 64.0
 
     @property
     def edges_per_step(self) -> int:
@@ -135,7 +146,10 @@ def generate_stream(spec: TemporalGraphSpec, n_max: int | None = None,
 
     Mirrors the paper's measurement protocol (§IV-C): the stream is replayed
     for a warmup prefix (the paper uses 100 steps — too sparse before that),
-    then ``n_measured_steps`` batches of edge additions are emitted.
+    then ``n_measured_steps`` batches are emitted — pure additions by
+    default; mixed add/remove batches when ``spec.churn > 0`` (removals
+    are sampled from live edges), with periodic hotspot bursts when
+    ``spec.hotspot`` is set.
     """
     rng = np.random.default_rng(spec.seed)
     src, dst = _gen_edges(spec, rng)
@@ -143,7 +157,14 @@ def generate_stream(spec: TemporalGraphSpec, n_max: int | None = None,
 
     m = len(src)
     eps = spec.edges_per_step
-    per_step = min(eps, u_max // 2)  # undirected → 2 arcs per edge
+    # undirected → 2 arcs per edge; the add and remove lanes of an
+    # UpdateBatch are padded to u_max independently, so each is bounded
+    # on its own (removals only constrain per_step when churn > 1)
+    per_step = min(eps, u_max // 2)
+    if spec.churn > 0:
+        per_step = min(per_step, int(u_max / (2.0 * spec.churn)))
+    per_step = max(per_step, 1)
+    rem_per_step = min(int(round(spec.churn * per_step)), u_max // 2)
     need = n_measured_steps * per_step
     warm = min(int(m * warmup_frac), m - need)
     warm = max(warm, 0)
@@ -166,9 +187,41 @@ def generate_stream(spec: TemporalGraphSpec, n_max: int | None = None,
     g = new_graph(n_max, e_max, labels=labels,
                   senders=np.concatenate([ws, wd]),
                   receivers=np.concatenate([wd, ws]))
+
+    # live-edge pool for churn sampling: warmup prefix + measured additions
+    # as they are emitted; removals only ever hit edges live at that point
+    pool_src = np.concatenate([ws, np.zeros(need, src.dtype)])
+    pool_dst = np.concatenate([wd, np.zeros(need, dst.dtype)])
+    alive = np.zeros(warm + need, bool)
+    alive[:warm] = True
+    pool_fill = warm
+
+    hot_n = max(8, int(spec.n_vertices * spec.hotspot_frac))
     updates = []
     for t in range(n_measured_steps):
         lo = warm + t * per_step
         hi = lo + per_step
-        updates.append(UpdateBatch.additions(src[lo:hi], dst[lo:hi], u_max))
+        a_s, a_d = src[lo:hi].copy(), dst[lo:hi].copy()
+        if spec.hotspot and t % spec.hotspot_period == 0:
+            # burst: all of this step's additions land in the hot region
+            a_s, a_d = a_s % hot_n, a_d % hot_n
+            keep = a_s != a_d
+            a_s, a_d = a_s[keep], a_d[keep]
+        r_s = r_d = None
+        if rem_per_step > 0:
+            live_idx = np.flatnonzero(alive[:pool_fill])
+            take = min(rem_per_step, len(live_idx))
+            if take > 0:
+                pick = rng.choice(live_idx, size=take, replace=False)
+                alive[pick] = False
+                r_s, r_d = pool_src[pick], pool_dst[pick]
+        if spec.churn > 0:
+            k = len(a_s)
+            pool_src[pool_fill:pool_fill + k] = a_s
+            pool_dst[pool_fill:pool_fill + k] = a_d
+            alive[pool_fill:pool_fill + k] = True
+            pool_fill += k
+        updates.append(UpdateBatch.mixed(add_src=a_s, add_dst=a_d,
+                                         rem_src=r_s, rem_dst=r_d,
+                                         u_max=u_max))
     return TemporalStream(spec, g, updates, labels, warm)

@@ -16,7 +16,20 @@ import jax.numpy as jnp
 from repro.kernels.spmv_ell.spmv_ell import ell_row_maxima, ell_row_partials
 from repro.sparse.ell import EllGraph
 
-_MAX_D_RESIDENT = 32
+_X_VMEM_BUDGET = 8 << 20  # bytes of VMEM granted to the resident X block
+_MIN_D_RESIDENT = 32      # legacy fixed bound — floor, so huge n never regresses
+_MAX_D_RESIDENT = 512
+
+
+def _d_resident(n: int) -> int:
+    """Widest RHS block whose (n, d) f32 residency fits the X budget.
+
+    The fixed 32-column bound assumed the 256k-vertex worst case; serving
+    banks sweep (n, B·k) blocks where small/medium graphs can keep far
+    wider blocks resident, and fewer kernel launches beat narrower tiles.
+    """
+    return int(max(_MIN_D_RESIDENT,
+                   min(_MAX_D_RESIDENT, _X_VMEM_BUDGET // max(4 * n, 1))))
 
 
 def _on_cpu() -> bool:
@@ -30,15 +43,16 @@ def ell_spmm_kernel(cols: jnp.ndarray, vals: jnp.ndarray, mask: jnp.ndarray,
     """y = A_ell @ x; x: (n, d) → y: (n, d)."""
     interpret = _on_cpu()
     d = x.shape[1]
-    if d <= _MAX_D_RESIDENT:
+    d_res = _d_resident(n)
+    if d <= d_res:
         partial_rows = ell_row_partials(cols, vals, mask, x,
                                         block_rows=block_rows,
                                         interpret=interpret)
     else:  # shard the RHS batch to respect the VMEM bound on X
         chunks = []
-        for lo in range(0, d, _MAX_D_RESIDENT):
+        for lo in range(0, d, d_res):
             chunks.append(ell_row_partials(
-                cols, vals, mask, x[:, lo:lo + _MAX_D_RESIDENT],
+                cols, vals, mask, x[:, lo:lo + d_res],
                 block_rows=block_rows, interpret=interpret))
         partial_rows = jnp.concatenate(chunks, axis=1)
     return jax.ops.segment_sum(partial_rows, row_ids, num_segments=n)
@@ -59,14 +73,15 @@ def ell_reach_kernel(cols: jnp.ndarray, mask: jnp.ndarray,
     """
     interpret = _on_cpu()
     d = x.shape[1]
-    if d <= _MAX_D_RESIDENT:
+    d_res = _d_resident(n)
+    if d <= d_res:
         partial_rows = ell_row_maxima(cols, mask, x, block_rows=block_rows,
                                       interpret=interpret)
     else:
         chunks = []
-        for lo in range(0, d, _MAX_D_RESIDENT):
+        for lo in range(0, d, d_res):
             chunks.append(ell_row_maxima(
-                cols, mask, x[:, lo:lo + _MAX_D_RESIDENT],
+                cols, mask, x[:, lo:lo + d_res],
                 block_rows=block_rows, interpret=interpret))
         partial_rows = jnp.concatenate(chunks, axis=1)
     out = jax.ops.segment_max(partial_rows, row_ids, num_segments=n)

@@ -1,8 +1,11 @@
 """Batched serving driver: prefill + decode loop with a KV cache
-(LM archs) or batched scoring (BST), on the reduced configs.
+(LM archs), batched scoring (BST), or the continuous multi-query
+pattern-match server (IGPM), on the reduced configs.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --arch bst
+  PYTHONPATH=src python -m repro.launch.serve --arch igpm-pem \\
+      --bank 8 --steps 12 --churn 0.25 --hotspot
 """
 
 from __future__ import annotations
@@ -67,16 +70,78 @@ def serve_bst(arch) -> None:
           f"probs[:4]={np.asarray(probs)[:4].round(3)}")
 
 
+def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
+               policy_dir: str = "") -> None:
+    """Continuous multi-query match serving on a synthetic churn stream.
+
+    One MatchServer serves a ``bank``-sized standing-query zoo against a
+    generated update stream (deletion traffic via ``--churn``, periodic
+    bursts via ``--hotspot``); per-step match deltas and the closing
+    telemetry snapshot are printed. ``--policy-dir`` persists/restores the
+    learned PEM policy across invocations (DESIGN.md §3).
+    """
+    from repro.config.base import ServingConfig
+    from repro.core.query import query_zoo
+    from repro.data.temporal import TemporalGraphSpec, generate_stream
+    from repro.serving import MatchServer
+
+    cfg = arch.model
+    n = min(cfg.n_max, 1024)
+    spec = TemporalGraphSpec("serve", "sparse_dense", n_vertices=n,
+                             n_edges=8 * n, n_steps=64, seed=0,
+                             churn=churn, hotspot=hotspot)
+    stream = generate_stream(spec, n_measured_steps=steps, u_max=512,
+                             n_max=cfg.n_max, e_max=cfg.e_max)
+    server = MatchServer(cfg, query_zoo(bank), ServingConfig(), seed=0)
+    if policy_dir:
+        try:
+            at = server.load_policy(policy_dir)
+            print(f"[serve] restored PEM policy from {policy_dir} "
+                  f"(step {at})")
+        except FileNotFoundError:
+            print(f"[serve] no policy in {policy_dir} — starting fresh")
+
+    g, stats = server.run(stream.graph, stream.updates)
+    for st in stats:
+        top = max(st.deltas, key=lambda d: d.n_new)
+        print(f"[serve] step {st.step}: {st.elapsed * 1e3:6.1f} ms  "
+              f"events={st.n_events:4d} recompute={st.n_recompute:5d} "
+              f"new={st.n_new_patterns:3d} pruned={st.n_pruned:2d} "
+              f"c={st.community_size}  top={top.query}(+{top.n_new})")
+    snap = server.telemetry.snapshot()
+    print(f"[serve] bank={bank} steps={snap['steps']} "
+          f"p50={snap['p50_step_ms']:.1f}ms p99={snap['p99_step_ms']:.1f}ms "
+          f"{snap['updates_per_s']:.0f} upd/s {snap['patterns_per_s']:.1f} "
+          f"pat/s recompute={snap['recompute_frac']:.2f}")
+    print(f"[serve] queue: {server.queue.stats()}")
+    if policy_dir:
+        server.save_policy(policy_dir)
+        print(f"[serve] saved PEM policy to {policy_dir}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=8,
+                    help="igpm: serving steps to run")
+    ap.add_argument("--bank", type=int, default=4,
+                    help="igpm: number of standing queries")
+    ap.add_argument("--churn", type=float, default=0.25,
+                    help="igpm: removals per step as a fraction of adds")
+    ap.add_argument("--hotspot", action="store_true",
+                    help="igpm: periodic burst steps on a hot region")
+    ap.add_argument("--policy-dir", default="",
+                    help="igpm: persist/restore the PEM policy here")
     args = ap.parse_args()
     arch = get_arch(args.arch, smoke=True)
     if arch.family == "lm":
         serve_lm(arch, args.tokens)
     elif arch.family == "recsys":
         serve_bst(arch)
+    elif arch.family == "igpm":
+        serve_igpm(arch, args.steps, args.bank, args.churn, args.hotspot,
+                   policy_dir=args.policy_dir)
     else:
         raise SystemExit(f"{args.arch} ({arch.family}) has no serve path")
 

@@ -1,0 +1,17 @@
+"""Continuous multi-query match serving (DESIGN.md §3).
+
+A :class:`MatchServer` registers a bank of standing queries and evaluates
+all of them against one update stream, amortizing the shared per-step work
+(graph update + ELL refresh, PEM, induced extraction, label RWR) across
+the bank and vmapping G-Ray over the stacked query axis.
+"""
+
+from repro.serving.queue import (ADD, RELABEL, REMOVE, UpdateEvent,
+                                 UpdateQueue)
+from repro.serving.server import (MatchDelta, MatchServer, ServingStepStats)
+from repro.serving.telemetry import Telemetry
+
+__all__ = [
+    "ADD", "REMOVE", "RELABEL", "UpdateEvent", "UpdateQueue",
+    "MatchDelta", "MatchServer", "ServingStepStats", "Telemetry",
+]

@@ -1,0 +1,64 @@
+"""Serving telemetry — step-latency percentiles and throughput counters.
+
+A ring of the last ``window`` step-latency samples gives p50/p99 without
+unbounded memory; throughput counters (updates, patterns, recompute
+fraction) accumulate over the server's lifetime. Everything is host-side
+numpy; ``snapshot()`` is what the CLI prints and the benchmark serializes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class Telemetry:
+    def __init__(self, window: int = 512):
+        self.window = window
+        self._lat = np.zeros(window, np.float64)
+        self._fill = 0
+        self._cursor = 0
+        self.n_steps = 0
+        self.n_updates = 0
+        self.n_patterns = 0
+        self.n_dropped = 0
+        self._recompute_sum = 0.0
+        self._t0: Optional[float] = None
+
+    def record_step(self, latency_s: float, n_updates: int,
+                    n_new_patterns: int, recompute_frac: float,
+                    n_dropped: int = 0) -> None:
+        if self._t0 is None:
+            # wall clock spans from the START of the first recorded step,
+            # so small step counts don't inflate the throughput rates
+            self._t0 = time.perf_counter() - latency_s
+        self._lat[self._cursor] = latency_s
+        self._cursor = (self._cursor + 1) % self.window
+        self._fill = min(self._fill + 1, self.window)
+        self.n_steps += 1
+        self.n_updates += n_updates
+        self.n_patterns += n_new_patterns
+        self.n_dropped += n_dropped
+        self._recompute_sum += recompute_frac
+
+    # -- views ---------------------------------------------------------------
+
+    def latency_percentile(self, q: float) -> float:
+        if self._fill == 0:
+            return 0.0
+        return float(np.percentile(self._lat[: self._fill], q))
+
+    def snapshot(self) -> Dict[str, float]:
+        wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        steps = max(self.n_steps, 1)
+        return {
+            "steps": self.n_steps,
+            "p50_step_ms": 1e3 * self.latency_percentile(50),
+            "p99_step_ms": 1e3 * self.latency_percentile(99),
+            "updates_per_s": self.n_updates / wall if wall > 0 else 0.0,
+            "patterns_per_s": self.n_patterns / wall if wall > 0 else 0.0,
+            "recompute_frac": self._recompute_sum / steps,
+            "dropped_events": self.n_dropped,
+        }

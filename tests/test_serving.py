@@ -1,0 +1,347 @@
+"""Serving-subsystem tests (DESIGN.md §3).
+
+Pins the acceptance contract of the multi-query serving layer:
+  * bank-mode matched/exact/valid equal running each query alone, on both
+    the ``ell`` and ``coo`` backends (shared-sweep execution is a pure
+    optimization);
+  * PatternStore.prune + live_vertex_mask keep counts honest on
+    deletion-heavy streams, and pruned patterns reappear when re-formed;
+  * churn/hotspot stream generation emits valid mixed batches;
+  * queue back-pressure/coalescing, telemetry, and the MatchServer loop;
+  * DQN policy persistence through repro.checkpoint.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.config.base import IGPMConfig, ServingConfig
+from repro.core.dqn import DQNAgent, Transition
+from repro.core.graph import UpdateBatch, apply_update, new_graph
+from repro.core.gray import BankGRayMatcher, GRayMatcher
+from repro.core.matcher import (NaiveIncrementalMatcher, PatternStore,
+                                live_vertex_mask)
+from repro.core.query import (build_query, clique4, query_zoo, stack_queries,
+                              star5, triangle)
+from repro.data.temporal import TemporalGraphSpec, generate_stream
+from repro.serving import MatchServer, UpdateEvent, UpdateQueue
+from repro.serving.telemetry import Telemetry
+
+
+def _cfg(backend="ell", **kw):
+    base = dict(n_max=256, e_max=8192, ell_width=8, rwr_iters=8,
+                rwr_iters_incremental=3, top_k_patterns=6,
+                init_community_size=32, backend=backend)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _rand_graph(seed=0, n=128, arcs=500):
+    rng = np.random.default_rng(seed)
+    return new_graph(n, 2048, labels=rng.integers(0, 4, n).astype(np.int32),
+                     senders=rng.integers(0, n, arcs),
+                     receivers=rng.integers(0, n, arcs))
+
+
+# -- query-bank stacking ------------------------------------------------------
+
+def test_stack_queries_repads_and_unstacks():
+    qs = [triangle(labels=(0, 1, 2)), star5()]
+    bank = stack_queries(qs)
+    assert bank.n_queries == 2
+    assert bank.q_max == 5 and bank.qe_max == 4
+    for i, q in enumerate(qs):
+        u = bank.query(i)
+        assert u.name == q.name
+        assert u.n_nodes == q.n_nodes and u.n_edges == q.n_edges
+        np.testing.assert_array_equal(
+            np.asarray(u.labels)[: u.n_nodes],
+            np.asarray(q.labels)[: q.n_nodes])
+
+
+def test_stack_queries_rejects_too_small_padding():
+    with pytest.raises(ValueError):
+        stack_queries([clique4()], q_max=2)
+    with pytest.raises(ValueError):
+        stack_queries([clique4()], qe_max=3)
+    with pytest.raises(ValueError):
+        stack_queries([])
+
+
+# -- bank vs single equivalence (acceptance criterion) ------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_bank_results_equal_single_query_results(backend):
+    """Bank-mode matched/exact/valid must equal running each query alone —
+    the shared (n, B·k) sweeps are a pure batching of the per-query math."""
+    g = _rand_graph(seed=1)
+    queries = query_zoo(4)
+    bank = stack_queries(queries, q_max=8, qe_max=16)
+    bm = BankGRayMatcher(bank, n_labels=4, k=6, rwr_iters=10,
+                         backend=backend, ell_width=8)
+    r_lab = bm.label_table(g)
+    res = bm.match(g, r_lab)
+    assert res.matched.shape[0] == 4
+    for i, q in enumerate(queries):
+        sm = GRayMatcher(q, n_labels=4, k=6, rwr_iters=10,
+                         backend=backend, ell_width=8)
+        alone = sm.match(g, sm.label_table(g))
+        np.testing.assert_array_equal(np.asarray(res.matched[i]),
+                                      np.asarray(alone.matched))
+        np.testing.assert_array_equal(np.asarray(res.exact[i]),
+                                      np.asarray(alone.exact))
+        np.testing.assert_array_equal(np.asarray(res.valid[i]),
+                                      np.asarray(alone.valid))
+        np.testing.assert_allclose(np.asarray(res.goodness[i]),
+                                   np.asarray(alone.goodness), rtol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_server_stores_equal_single_matchers_over_stream(backend):
+    """End-to-end: a MatchServer bank step produces the same per-query
+    pattern stores as one NaiveIncrementalMatcher per query fed the same
+    stream (non-adaptive PEM so the recompute sets are deterministic)."""
+    spec = TemporalGraphSpec("toy", "sparse_dense", n_vertices=256,
+                             n_edges=2048, n_steps=24, seed=5, churn=0.2)
+    queries = query_zoo(2)
+    cfg = _cfg(backend)
+    srv = MatchServer(cfg, queries,
+                      ServingConfig(microbatch_window=256, adaptive=False),
+                      seed=0)
+    stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+    g, _ = srv.run(stream.graph, stream.updates)
+
+    for i, q in enumerate(queries):
+        m = NaiveIncrementalMatcher(q, cfg, full_graph_frac=0.5)
+        stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+        g = stream.graph
+        for upd in stream.updates:
+            g, _ = m.step(g, upd)
+        assert srv.stores[i].total == m.store.total, q.name
+        assert srv.stores[i].exact == m.store.exact, q.name
+
+
+# -- deletion-heavy correctness (prune + live_vertex_mask) --------------------
+
+def _planted_triangle_graph(n=64, noise=30, seed=9):
+    rng = np.random.default_rng(seed)
+    labels = np.array([0, 1, 2] + [3] * (n - 3), np.int32)
+    edges = [(0, 1), (1, 2), (2, 0)]
+    for _ in range(noise):
+        a, b = rng.integers(3, n, 2)
+        if a != b:
+            edges.append((int(a), int(b)))
+    s = np.array([e[0] for e in edges] + [e[1] for e in edges])
+    r = np.array([e[1] for e in edges] + [e[0] for e in edges])
+    return new_graph(n, 1024, labels=labels, senders=s, receivers=r)
+
+
+def test_pruned_pattern_reappears_when_reformed():
+    """Deleting every arc of a matched vertex drops the pattern; re-adding
+    the same edges re-forms it — counts must follow, not drift."""
+    g = _planted_triangle_graph()
+    q = triangle(labels=(0, 1, 2))
+    m = NaiveIncrementalMatcher(q, _cfg(n_max=64, e_max=1024),
+                                full_graph_frac=-1.0)
+    # touch the triangle so its community is in the recompute set
+    g, st = m.step(g, UpdateBatch.additions(np.array([0]), np.array([5]),
+                                            u_max=64))
+    assert m.store.total == 1 and m.store.exact == 1
+
+    tri = np.array([0, 1, 2]), np.array([1, 2, 0])
+    g, st = m.step(g, UpdateBatch.removals(*tri, u_max=64))
+    assert st.n_pruned == 1
+    assert m.store.total == 0
+
+    g, st = m.step(g, UpdateBatch.additions(*tri, u_max=64))
+    assert m.store.total == 1 and m.store.exact == 1
+
+
+def test_live_vertex_mask_tracks_arc_liveness():
+    g = new_graph(8, 64, n_nodes=8)
+    g = apply_update(g, UpdateBatch.additions(np.array([0, 2]),
+                                              np.array([1, 3]), u_max=16))
+    live = live_vertex_mask(g)
+    assert live[:4].all() and not live[4:].any()
+    g = apply_update(g, UpdateBatch.removals(np.array([2]), np.array([3]),
+                                             u_max=16))
+    live = live_vertex_mask(g)
+    assert live[0] and live[1] and not live[2] and not live[3]
+
+
+def test_store_counts_do_not_drift_on_deletion_heavy_stream():
+    """Pattern totals under heavy churn stay bounded by what is live —
+    repeatedly deleting and re-adding must not inflate the store."""
+    spec = TemporalGraphSpec("churny", "sparse_dense", n_vertices=128,
+                             n_edges=1024, n_steps=16, seed=2, churn=1.0)
+    cfg = _cfg()
+    m = NaiveIncrementalMatcher(triangle(), cfg, full_graph_frac=0.5)
+    stream = generate_stream(spec, n_measured_steps=4, u_max=128,
+                             n_max=cfg.n_max, e_max=cfg.e_max)
+    g = stream.graph
+    for upd in stream.updates:
+        g, st = m.step(g, upd)
+    live = live_vertex_mask(g)
+    for key in m.store._patterns:
+        assert all(live[v] for v in key)
+
+
+# -- churn / hotspot stream generation ----------------------------------------
+
+def test_churn_stream_removals_are_live_and_budgeted():
+    spec = TemporalGraphSpec("toy", "random", n_vertices=128, n_edges=1024,
+                             n_steps=16, seed=1, churn=0.5, locality=False)
+    st = generate_stream(spec, n_measured_steps=5, u_max=64)
+    g = st.graph
+    for upd in st.updates:
+        na = int(np.asarray(upd.add_mask).sum())
+        nr = int(np.asarray(upd.rem_mask).sum())
+        assert na <= 64 and nr <= 64  # each lane padded to u_max on its own
+        assert nr > 0
+        e0 = int(np.asarray(g.edge_mask).sum())
+        g = apply_update(g, upd)
+        # removals all found live arcs: the live count moves by exactly
+        # adds - removals (a dangling removal would be a silent no-op)
+        assert int(np.asarray(g.edge_mask).sum()) == e0 + na - nr
+
+
+def test_hotspot_bursts_land_in_hot_region():
+    spec = TemporalGraphSpec("toy", "random", n_vertices=256, n_edges=2048,
+                             n_steps=16, seed=1, hotspot=True,
+                             hotspot_period=2, locality=False)
+    st = generate_stream(spec, n_measured_steps=4, u_max=64)
+    hot_n = max(8, int(256 * spec.hotspot_frac))
+    for t, upd in enumerate(st.updates):
+        m = np.asarray(upd.add_mask)
+        burst = (np.asarray(upd.add_src)[m] < hot_n).all()
+        assert burst == (t % 2 == 0)
+
+
+# -- queue back-pressure + coalescing -----------------------------------------
+
+def test_queue_coalesces_add_remove_pairs():
+    q = UpdateQueue(depth=16)
+    assert q.offer(UpdateEvent("add", 1, 2))
+    assert q.offer(UpdateEvent("remove", 2, 1))  # same undirected edge
+    assert len(q) == 0
+    assert q.n_coalesced == 2
+    assert q.drain(16) == []
+
+
+def test_queue_drop_oldest_back_pressure():
+    q = UpdateQueue(depth=2, policy="drop_oldest", coalesce=False)
+    q.offer(UpdateEvent("add", 0, 1))
+    q.offer(UpdateEvent("add", 1, 2))
+    assert not q.offer(UpdateEvent("add", 2, 3))  # evicts (0,1)
+    assert q.n_dropped == 1
+    got = q.drain(8)
+    assert [(e.u, e.v) for e in got] == [(1, 2), (2, 3)]
+
+
+def test_queue_drop_newest_back_pressure():
+    q = UpdateQueue(depth=2, policy="drop_newest", coalesce=False)
+    q.offer(UpdateEvent("add", 0, 1))
+    q.offer(UpdateEvent("add", 1, 2))
+    assert not q.offer(UpdateEvent("add", 2, 3))  # rejected
+    got = q.drain(8)
+    assert [(e.u, e.v) for e in got] == [(0, 1), (1, 2)]
+
+
+def test_queue_pack_roundtrips_to_update_batch():
+    evs = [UpdateEvent("add", 0, 1), UpdateEvent("remove", 2, 3),
+           UpdateEvent("relabel", 4, value=1),
+           UpdateEvent("relabel", 4, value=2)]
+    upd = UpdateQueue.pack(evs, u_max=16)
+    assert int(np.asarray(upd.add_mask).sum()) == 2   # both arcs
+    assert int(np.asarray(upd.rem_mask).sum()) == 2
+    lm = np.asarray(upd.lab_mask)
+    assert int(lm.sum()) == 1                          # last relabel wins
+    assert int(np.asarray(upd.lab_vals)[lm][0]) == 2
+
+
+def test_telemetry_percentiles_and_counters():
+    t = Telemetry(window=8)
+    for ms in (1, 2, 3, 4):
+        t.record_step(ms / 1e3, n_updates=10, n_new_patterns=2,
+                      recompute_frac=0.5)
+    snap = t.snapshot()
+    assert snap["steps"] == 4
+    assert 1.9 < snap["p50_step_ms"] < 3.1
+    assert snap["p99_step_ms"] <= 4.0 + 1e-6
+    assert snap["recompute_frac"] == pytest.approx(0.5)
+    assert snap["updates_per_s"] > 0
+
+
+# -- MatchServer loop ---------------------------------------------------------
+
+@pytest.mark.slow
+def test_match_server_serves_churn_stream_with_deltas():
+    spec = TemporalGraphSpec("toy", "sparse_dense", n_vertices=256,
+                             n_edges=2048, n_steps=24, seed=7, churn=0.3)
+    srv = MatchServer(_cfg(), query_zoo(4),
+                      ServingConfig(microbatch_window=128), seed=0)
+    stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+    g, stats = srv.run(stream.graph, stream.updates)
+    assert len(stats) >= 3
+    names = [q.name for q in srv.queries]
+    for st in stats:
+        assert [d.query for d in st.deltas] == names
+        assert st.n_events > 0
+    assert sum(st.n_new_patterns for st in stats) > 0
+    snap = srv.telemetry.snapshot()
+    assert snap["steps"] == len(stats)
+    assert snap["p99_step_ms"] >= snap["p50_step_ms"] > 0
+
+
+def test_match_server_reset_clears_state():
+    srv = MatchServer(_cfg(), [triangle()], ServingConfig(), seed=0)
+    srv.submit("add", 0, 1)
+    srv.stores[0]._patterns[(0, 1, 2)] = (0.0, True)
+    srv.reset()
+    assert len(srv.queue) == 0
+    assert srv.stores[0].total == 0
+    assert srv.step_idx == 0
+
+
+# -- DQN policy persistence ---------------------------------------------------
+
+def test_dqn_state_dict_roundtrip(tmp_path):
+    cfg = _cfg()
+    a = DQNAgent(cfg, seed=0)
+    for i in range(cfg.replay_batch + 4):
+        a.observe(Transition(np.array([0.1, 0.2], np.float32), i % 2, 1.0,
+                             np.array([0.2, 0.1], np.float32), False))
+    from repro.checkpoint import Checkpointer
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(3, a.state_dict())
+
+    b = DQNAgent(cfg, seed=123)
+    obs = np.array([[0.3, 0.4]], np.float32)
+    assert not np.allclose(a.q_values(obs), b.q_values(obs))
+    state, step = ck.restore(b.state_dict())
+    b.load_state_dict(state)
+    assert step == 3
+    np.testing.assert_allclose(a.q_values(obs), b.q_values(obs))
+    assert b.t == a.t and b.replay.size == a.replay.size
+
+
+@pytest.mark.slow
+def test_server_policy_survives_restart(tmp_path):
+    spec = TemporalGraphSpec("toy", "sparse_dense", n_vertices=256,
+                             n_edges=2048, n_steps=24, seed=7)
+    cfg = _cfg()
+    srv = MatchServer(cfg, [triangle()],
+                      ServingConfig(microbatch_window=128), seed=0)
+    stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+    srv.run(stream.graph, stream.updates)
+    srv.save_policy(str(tmp_path))
+
+    srv2 = MatchServer(cfg, [triangle()], ServingConfig(), seed=42)
+    srv2.load_policy(str(tmp_path))
+    assert srv2.pem.c == srv.pem.c
+    obs = np.array([[0.5, 0.5]], np.float32)
+    np.testing.assert_allclose(srv.pem.agent.q_values(obs),
+                               srv2.pem.agent.q_values(obs))
