@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test fast bench-kernels bench-backends serve-smoke
+.PHONY: verify test fast bench-kernels bench-backends serve-smoke engine-smoke
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -30,3 +30,11 @@ bench-backends:
 # shared sweeps → query-bank match → telemetry) on a tiny churn stream
 serve-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/serving_bench.py --smoke
+
+# engine multi-device smoke: sharded-vs-vmap equality under 4 forced host
+# devices, then the 1/2/4-device bank-16 sweep (each device count in its
+# own forced-platform subprocess) — what the CI multi-device job runs
+engine-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest tests/test_engine_sharding.py -q
+	PYTHONPATH=src:. $(PY) benchmarks/engine_bench.py --smoke

@@ -1,0 +1,131 @@
+"""Engine bench — device-sharded bank execution across 1/2/4 devices.
+
+A 16-query bank (the zoo: 4 shapes × 4 label rotations, bucketed by the
+engine into per-shape dynamic banks) serves the same churn stream on 1, 2,
+and 4 logical devices; the device count is forced per measurement with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in a fresh
+subprocess (the device count is fixed at jax init, so the sweep cannot run
+in one process). Reported per row: median full serving-step latency, p50/
+p99, and the per-bucket shard counts actually used.
+
+On this CPU container the sharded path adds partition overhead rather than
+speedup — the measured quantity is the *scaling harness* (sharded results
+are pinned bit-identical in tests/test_engine_sharding.py; real speedups
+need real devices). The JSON artifact keeps CI honest about the path
+existing and running end-to-end.
+
+  PYTHONPATH=src:. python benchmarks/engine_bench.py [--smoke]
+
+Writes ``benchmarks/out/engine_bench.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+DEVICE_COUNTS = (1, 2, 4)
+BANK = 16
+
+
+def _worker(n_devices: int, smoke: bool) -> None:
+    """Runs inside the forced-device subprocess; prints one JSON line."""
+    import numpy as np
+
+    import jax
+
+    from benchmarks.serving_bench import _cfg, _spec
+    from repro.config.base import ServingConfig
+    from repro.core.query import query_zoo
+    from repro.data.temporal import generate_stream
+    from repro.serving import MatchServer
+
+    assert len(jax.devices()) == n_devices, (
+        f"expected {n_devices} forced devices, found {len(jax.devices())}")
+    spec = _spec(smoke, 1.0)
+    cfg = _cfg(spec, smoke)
+    n_steps = 3 if smoke else 8
+    server = MatchServer(cfg, query_zoo(BANK),
+                         ServingConfig(microbatch_window=256, shard="auto"),
+                         seed=0)
+    shards = sorted(
+        (f"{b.q_max}x{b.qe_max}x{b.b_pad}", b.n_shards)
+        for b in server.engine.buckets.values())
+
+    def pass_once():
+        stream = generate_stream(spec, n_measured_steps=n_steps, u_max=256)
+        g = stream.graph
+        totals = []
+        for upd in stream.updates:
+            server.submit_update(upd)
+            g, st = server.step(g)
+            totals.append(st.total_s)
+        return totals
+
+    pass_once()        # warm/compile pass on an identical stream
+    server.reset()
+    totals = pass_once()
+    snap = server.telemetry.snapshot()
+    print(json.dumps({
+        "devices": n_devices,
+        "median_step_us": 1e6 * float(np.median(totals)),
+        "p50_ms": snap["p50_step_ms"],
+        "p99_ms": snap["p99_step_ms"],
+        "updates_per_s": snap["updates_per_s"],
+        "bucket_shards": shards,
+    }))
+
+
+def run(smoke: bool = False) -> List["BenchRow"]:
+    from benchmarks.common import BenchRow, write_json
+
+    results = []
+    for nd in DEVICE_COUNTS:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={nd} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env["PYTHONPATH"] = "src:." + (
+            ":" + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+               "--devices", str(nd)]
+        if smoke:
+            cmd.append("--smoke")
+        out = subprocess.run(
+            cmd, env=env, capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if out.returncode != 0:
+            raise SystemExit(
+                f"engine_bench worker (devices={nd}) failed:\n{out.stderr}")
+        results.append(json.loads(out.stdout.strip().splitlines()[-1]))
+
+    rows = []
+    for r in results:
+        shards = ";".join(f"{k}:{v}" for k, v in r["bucket_shards"])
+        rows.append(BenchRow(
+            f"engine/bank{BANK}/dev{r['devices']}", r["median_step_us"],
+            f"p50_ms={r['p50_ms']:.1f};p99_ms={r['p99_ms']:.1f};"
+            f"updates_per_s={r['updates_per_s']:.0f};shards={shards}"))
+    write_json(rows, "engine_bench" if not smoke else "engine_bench_smoke")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (same code path)")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=1, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.devices, args.smoke)
+        return
+    for row in run(smoke=args.smoke):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

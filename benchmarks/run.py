@@ -18,10 +18,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import (fig5_batch_vs_inc, fig6_queries, fig7_adaptive,
-                            fig9_patterns, fig_backends, kernels_bench,
-                            roofline_table, scaling, serving_bench,
-                            table2_compat)
+    from benchmarks import (engine_bench, fig5_batch_vs_inc, fig6_queries,
+                            fig7_adaptive, fig9_patterns, fig_backends,
+                            kernels_bench, roofline_table, scaling,
+                            serving_bench, table2_compat)
     suites = {
         "fig5": fig5_batch_vs_inc.run,
         "fig6": fig6_queries.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "roofline": roofline_table.run,
         "scaling": scaling.run,
         "serving": serving_bench.run,
+        "engine": engine_bench.run,
     }
     picked = args.only or list(suites)
     kw = {}
@@ -53,6 +54,8 @@ def main() -> None:
             skw = dict(kw)
             if name in ("kernels", "roofline"):
                 skw = {}
+            elif name == "engine":  # forced-device subprocess sweep:
+                skw = {"smoke": True} if args.quick else {}
             for row in suites[name](**skw):
                 print(row.csv(), flush=True)
         except Exception as e:  # keep the harness going, fail at exit

@@ -105,6 +105,33 @@ def run(smoke: bool = False, scale: float = 1.0,
             f"p99_ms={snap['p99_step_ms']:.1f};"
             f"updates_per_s={snap['updates_per_s']:.0f};"
             f"recompute_frac={snap['recompute_frac']:.2f}"))
+
+    # storm scenario: a hotspot stream (every step bursts into one hot
+    # region) with the full-graph fallback forced (full_graph_frac < 0);
+    # the staleness-keyed seed cache skips the per-storm-step (n, L)
+    # label-RWR refresh and — because consecutive bursts touch the same
+    # communities — the per-bucket seed top-k. This pair of rows pins its
+    # p50/p99 effect (DESIGN.md §4)
+    storm_spec = TemporalGraphSpec(
+        "storm", "sparse_dense", n_vertices=spec.n_vertices,
+        n_edges=spec.n_edges, n_steps=64, seed=11, hotspot=True,
+        hotspot_period=1)
+    for label, staleness in (("seedcache_off", 0), ("seedcache_on", 10 ** 6)):
+        server = MatchServer(
+            cfg, query_zoo(4),
+            ServingConfig(microbatch_window=256, full_graph_frac=-1.0,
+                          seed_cache_staleness=staleness), seed=0)
+        stream = generate_stream(storm_spec, n_measured_steps=n_steps,
+                                 u_max=256)
+        t = _median_step_s(server, stream, warm=True)
+        snap = server.telemetry.snapshot()
+        rows.append(BenchRow(
+            f"serving/storm/{label}", 1e6 * t,
+            f"p50_ms={snap['p50_step_ms']:.1f};"
+            f"p99_ms={snap['p99_step_ms']:.1f};"
+            f"rlab_hits={snap.get('rlab_cache_hits', 0)};"
+            f"rlab_misses={snap.get('rlab_cache_misses', 0)};"
+            f"seed_hits={snap.get('seed_cache_hits', 0)}"))
     # smoke/scaled runs must not clobber the committed default-scale artifact
     default_run = not smoke and scale == 1.0 and steps is None
     write_json(rows, "serving_bench" if default_run else "serving_bench_smoke")

@@ -191,6 +191,47 @@ class IGPMConfig:
 
 
 @dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of the functional-core match engine (DESIGN.md §4).
+
+    One :class:`repro.engine.Engine` owns THE step pipeline every matcher
+    facade drives (apply + ELL refresh → PEM mask → induced extraction →
+    label RWR → per-bucket bank G-Ray → merge). Standing queries live in
+    *buckets* keyed on ``(q_max, qe_max, B_pad)`` — padded pow-2 shapes —
+    so ``register``/``retire`` swap rows inside a bucket without retracing.
+
+    ``mode``:
+      - ``incremental`` — the paper's IGPM loop (PEM recompute set, storm
+        fallback past ``full_graph_frac``); ``adaptive`` selects the DQN-
+        driven community threshold (IGPM-PEM) vs the fixed one (Inc).
+      - ``batch`` — re-run G-Ray from scratch on the full graph each step
+        (the paper's Batch oracle; stores rebuilt, no PEM).
+
+    ``seed_cache_staleness`` bounds the storm-fallback seed cache: when a
+    storm step finds the label-RWR table at most this many applied update
+    events stale, the (n, L) warm-start sweeps are skipped and the cached
+    per-bucket seed top-k is reused as long as the recompute mask is
+    unchanged too. 0 disables the cache (every storm step refreshes, the
+    pre-engine behavior). ``shard="auto"`` runs each bucket's match through
+    ``shard_map`` over the query axis when >1 device is visible (vmap on
+    one device); ``"off"`` pins the single-device path.
+    """
+
+    mode: str = "incremental"        # | 'batch'
+    adaptive: bool = True
+    full_graph_frac: float = 0.5     # update-storm full-pass threshold
+    seed_cache_staleness: int = 0    # events; 0 = always refresh
+    # bucket padding: pow-2 roundup of (query vertices, schedule length)
+    # with these floors, capped by (q_cap, qe_cap)
+    q_floor: int = 4
+    qe_floor: int = 4
+    q_cap: int = 8
+    qe_cap: int = 16
+    shard: str = "auto"              # | 'off'
+    v_max: int = 4096                # updated-vertex buffer width
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     """Continuous multi-query serving knobs (DESIGN.md §3).
 
@@ -212,9 +253,21 @@ class ServingConfig:
     adaptive: bool = True             # PEM community size driven by the DQN
     full_graph_frac: float = 0.5      # update-storm full-pass threshold
     telemetry_window: int = 512       # step-latency samples kept for p50/p99
-    # query-bank padding: every registered query is re-padded to this shape
+    # query-size caps: a registered query may not exceed this many vertices
+    # / schedule edges (buckets pad to pow-2 shapes below these caps)
     q_max: int = 8
     qe_max: int = 16
+    # storm-fallback seed cache bound (events; 0 = off — see EngineConfig)
+    seed_cache_staleness: int = 0
+    shard: str = "auto"               # bucket execution: 'auto' | 'off'
+
+    def engine(self) -> EngineConfig:
+        """The engine configuration this serving configuration implies."""
+        return EngineConfig(
+            mode="incremental", adaptive=self.adaptive,
+            full_graph_frac=self.full_graph_frac,
+            seed_cache_staleness=self.seed_cache_staleness,
+            q_cap=self.q_max, qe_cap=self.qe_max, shard=self.shard)
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,21 @@ from repro.core.gray import (BankGRayMatcher, GRayMatcher, GRayResult,
 from repro.core.louvain import louvain, louvain_constrained
 from repro.core.dqn import DQNAgent
 from repro.core.pem import PartialExecutionManager
-from repro.core.matcher import AdaptiveMatcher, BatchMatcher, NaiveIncrementalMatcher
+
+# The matcher facades import repro.engine, whose modules import back into
+# repro.core.* submodules (running THIS __init__ first) — importing them
+# eagerly here would make `import repro.engine` a circular-import error.
+# PEP 562 lazy re-export keeps `repro.core.BatchMatcher` working while
+# letting either package initialize first.
+_MATCHER_EXPORTS = ("AdaptiveMatcher", "BatchMatcher",
+                    "NaiveIncrementalMatcher")
+
+
+def __getattr__(name):
+    if name in _MATCHER_EXPORTS:
+        from repro.core import matcher
+        return getattr(matcher, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "DynamicGraph", "UpdateBatch", "new_graph", "add_edges", "remove_edges",

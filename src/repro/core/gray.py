@@ -135,12 +135,25 @@ class BankGRayMatcher:
     ``backend="ell"`` runs both sparse sweeps through the Pallas ELL
     kernels; callers pass the graph's ELL mirror via ``ell=`` (one is built
     on the fly when omitted — prefer a cached mirror in loops).
+
+    ``memo=False`` selects the *content-independent* schedule: the unroll
+    depth and sweep structure depend only on the bank's padded shape
+    ``(B, q_max, qe_max)``, never on which queries occupy the rows. The
+    per-(row, source-vertex) memo survives as DATA — table slots per query
+    vertex plus a traced "filled" mask, with each unrolled step's shared
+    ``(n, B·k)`` sweep guarded by a ``lax.cond`` on "any row sees a new
+    source" — so repeated sources and padded tail steps still skip their
+    sweeps at runtime, but swapping a row's query tensors can never
+    invalidate a trace. Values are identical to the memoized mode
+    (``matched`` is write-once). The engine's dynamic buckets (DESIGN.md
+    §4) require this mode: register/retire inside a bucket is a row
+    write, not a recompile.
     """
 
     def __init__(self, bank: QueryBank, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
                  bridge_hops: int = 4, backend: str = "coo",
-                 ell_width: int = 64):
+                 ell_width: int = 64, memo: bool = True):
         if backend not in ("coo", "ell"):
             raise ValueError(f"unknown backend {backend!r}")
         self.bank = bank
@@ -151,37 +164,45 @@ class BankGRayMatcher:
         self.bridge_hops = bridge_hops
         self.backend = backend
         self.ell_width = ell_width
-        # host-static schedule structure: unroll to the longest schedule in
-        # the bank; shorter queries no-op their padded tail steps
-        src_np = np.asarray(bank.order_src)
-        mask_np = np.asarray(bank.order_mask)
+        self.memo = memo
         B = bank.n_queries
-        self.n_steps = int(mask_np.sum(axis=1).max()) if mask_np.size else 0
-        # per-(query, source-vertex) table memo: each query computes one
-        # RWR/reach table per DISTINCT schedule source, exactly like the
-        # single-query memo — but all tables first used at one unrolled
-        # step batch into one shared (n, P·k) sweep. Sound because
-        # matched[qa] is write-once and BFS order matches a source before
-        # its first use; padded tail steps of shorter queries read slot 0
-        # and mask the result out.
-        pair_of: Tuple[Dict[int, int], ...] = tuple({} for _ in range(B))
-        self._new_pairs: Tuple[Tuple[Tuple[int, int, int], ...], ...]
-        new_pairs = []
-        self._read_slot = np.zeros((self.n_steps, B), np.int32)
-        for ei in range(self.n_steps):
-            fresh = []
-            for b in range(B):
-                if not mask_np[b, ei]:
-                    continue
-                sv = int(src_np[b, ei])
-                if sv not in pair_of[b]:
-                    pair_of[b][sv] = len(pair_of[b])
-                    fresh.append((b, pair_of[b][sv], sv))
-                self._read_slot[ei, b] = pair_of[b][sv]
-            new_pairs.append(tuple(fresh))
-        self._new_pairs = tuple(new_pairs)
-        self.t_max = max([1] + [len(p) for p in pair_of])
-        self.n_tables = sum(len(p) for p in pair_of)
+        if memo:
+            # host-static schedule structure: unroll to the longest schedule
+            # in the bank; shorter queries no-op their padded tail steps
+            src_np = np.asarray(bank.order_src)
+            mask_np = np.asarray(bank.order_mask)
+            self.n_steps = int(mask_np.sum(axis=1).max()) if mask_np.size else 0
+            # per-(query, source-vertex) table memo: each query computes one
+            # RWR/reach table per DISTINCT schedule source, exactly like the
+            # single-query memo — but all tables first used at one unrolled
+            # step batch into one shared (n, P·k) sweep. Sound because
+            # matched[qa] is write-once and BFS order matches a source before
+            # its first use; padded tail steps of shorter queries read slot 0
+            # and mask the result out.
+            pair_of: Tuple[Dict[int, int], ...] = tuple({} for _ in range(B))
+            self._new_pairs: Tuple[Tuple[Tuple[int, int, int], ...], ...]
+            new_pairs = []
+            self._read_slot = np.zeros((self.n_steps, B), np.int32)
+            for ei in range(self.n_steps):
+                fresh = []
+                for b in range(B):
+                    if not mask_np[b, ei]:
+                        continue
+                    sv = int(src_np[b, ei])
+                    if sv not in pair_of[b]:
+                        pair_of[b][sv] = len(pair_of[b])
+                        fresh.append((b, pair_of[b][sv], sv))
+                    self._read_slot[ei, b] = pair_of[b][sv]
+                new_pairs.append(tuple(fresh))
+            self._new_pairs = tuple(new_pairs)
+            self.t_max = max([1] + [len(p) for p in pair_of])
+            self.n_tables = sum(len(p) for p in pair_of)
+        else:
+            # content-independent: full unroll; table slots per query
+            # vertex, filled lazily at runtime (≤ q_max per row)
+            self.n_steps = bank.qe_max
+            self.t_max = bank.q_max
+            self.n_tables = B * bank.q_max
         self._match = jax.jit(self._match_impl)
         self._seeds = jax.jit(self._seeds_impl)
 
@@ -205,19 +226,28 @@ class BankGRayMatcher:
                          iters=iters if iters is not None else self.rwr_iters,
                          c=self.restart, r0=r0, ell=self._ell_for(g, ell))
 
+    def seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
+              seed_filter: Optional[jnp.ndarray] = None,
+              bank: Optional[QueryBank] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-query top-k anchor candidates (ids (B, k), mask (B, k))."""
+        b = bank or self.bank
+        return self._seeds(g, r_lab, seed_filter, b.labels, b.mask, b.anchor)
+
     def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
               seed_filter: Optional[jnp.ndarray] = None,
-              ell: Optional[EllGraph] = None) -> GRayResult:
-        b = self.bank
+              ell: Optional[EllGraph] = None,
+              bank: Optional[QueryBank] = None) -> GRayResult:
         ell = self._ell_for(g, ell)
-        seed_ids, seed_mask = self._seeds(g, r_lab, seed_filter,
-                                          b.labels, b.mask, b.anchor)
-        return self.match_from_seeds(g, r_lab, seed_ids, seed_mask, ell=ell)
+        seed_ids, seed_mask = self.seeds(g, r_lab, seed_filter, bank=bank)
+        return self.match_from_seeds(g, r_lab, seed_ids, seed_mask, ell=ell,
+                                     bank=bank)
 
     def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
                          seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
-                         ell: Optional[EllGraph] = None) -> GRayResult:
-        b = self.bank
+                         ell: Optional[EllGraph] = None,
+                         bank: Optional[QueryBank] = None) -> GRayResult:
+        b = bank or self.bank
         return self._match(g, r_lab, seed_ids, seed_mask,
                            self._ell_for(g, ell), b.labels, b.mask, b.anchor,
                            b.order_src, b.order_dst, b.order_tree,
@@ -261,29 +291,76 @@ class BankGRayMatcher:
 
         # per-(query, source) tables, all first-uses of one unrolled step
         # batched into ONE shared (n, P·k) RWR + reach sweep
-        tables_r = jnp.zeros((B, self.t_max, n, k), jnp.float32)
-        tables_h = jnp.zeros((B, self.t_max, k, n), jnp.int32)
+        if self.memo:
+            tables_r = jnp.zeros((B, self.t_max, n, k), jnp.float32)
+            tables_h = jnp.zeros((B, self.t_max, k, n), jnp.int32)
+        else:
+            # slot-per-query-vertex tables + filled mask (traced data)
+            tables_r = jnp.zeros((B, q_max, n, k), jnp.float32)
+            tables_h = jnp.zeros((B, q_max, k, n), jnp.int32)
+            seen = jnp.zeros((B, q_max), bool)
 
         for ei in range(self.n_steps):
-            pairs = self._new_pairs[ei]
-            if pairs:
-                srcs = jnp.stack([matched[b, :, sv]
-                                  for b, _, sv in pairs])        # (P, k)
-                p = len(pairs)
-                flat = srcs.reshape(p * k)
-                e = jax.nn.one_hot(flat, n, dtype=jnp.float32).T  # (n, P·k)
-                r_new = rwr(g, e, iters=self.rwr_iters, c=self.restart,
-                            ell=ell)
-                r_new = jnp.transpose(r_new.reshape(n, p, k), (1, 0, 2))
-                h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
-                                        ell=ell).reshape(p, k, n)
-                b_idx = jnp.asarray([b for b, _, _ in pairs])
-                t_idx = jnp.asarray([t for _, t, _ in pairs])
-                tables_r = tables_r.at[b_idx, t_idx].set(r_new)
-                tables_h = tables_h.at[b_idx, t_idx].set(h_new)
-            slot = jnp.asarray(self._read_slot[ei])
-            r_t = tables_r[jnp.arange(B), slot]                  # (B, n, k)
-            reach_t = tables_h[jnp.arange(B), slot]              # (B, k, n)
+            if self.memo:
+                pairs = self._new_pairs[ei]
+                if pairs:
+                    srcs = jnp.stack([matched[b, :, sv]
+                                      for b, _, sv in pairs])    # (P, k)
+                    p = len(pairs)
+                    flat = srcs.reshape(p * k)
+                    e = jax.nn.one_hot(flat, n,
+                                       dtype=jnp.float32).T      # (n, P·k)
+                    r_new = rwr(g, e, iters=self.rwr_iters, c=self.restart,
+                                ell=ell)
+                    r_new = jnp.transpose(r_new.reshape(n, p, k), (1, 0, 2))
+                    h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
+                                            ell=ell).reshape(p, k, n)
+                    b_idx = jnp.asarray([b for b, _, _ in pairs])
+                    t_idx = jnp.asarray([t for _, t, _ in pairs])
+                    tables_r = tables_r.at[b_idx, t_idx].set(r_new)
+                    tables_h = tables_h.at[b_idx, t_idx].set(h_new)
+                slot = jnp.asarray(self._read_slot[ei])
+                r_t = tables_r[jnp.arange(B), slot]              # (B, n, k)
+                reach_t = tables_h[jnp.arange(B), slot]          # (B, k, n)
+            else:
+                # content-independent memo: one table SLOT per (row, query
+                # vertex), "slot filled" tracked as DATA, and the step's
+                # shared (n, B·k) sweep guarded by a lax.cond on "any row
+                # sees a source not seen before" — all computed from the
+                # order tensors, which are jit arguments. Sweep count
+                # matches the host-static memo (padded tail steps and
+                # repeated sources skip at runtime) while the compiled
+                # structure depends only on the bucket shape, so membership
+                # swaps never retrace. Recomputing an already-filled slot
+                # (a fresh row forces the whole-bucket sweep) writes
+                # identical values: matched is write-once.
+                src = order_src[:, ei]                           # (B,)
+                have = jnp.take_along_axis(seen, src[:, None],
+                                           axis=1)[:, 0]
+                fresh = order_mask[:, ei] & ~have
+
+                def compute(tabs, matched=matched, src=src):
+                    t_r, t_h = tabs
+                    srcs = jnp.take_along_axis(
+                        matched, src[:, None, None], axis=2)[:, :, 0]
+                    flat = srcs.reshape(B * k)
+                    e = jax.nn.one_hot(flat, n,
+                                       dtype=jnp.float32).T      # (n, B·k)
+                    r_new = rwr(g, e, iters=self.rwr_iters,
+                                c=self.restart, ell=ell)
+                    r_new = jnp.transpose(r_new.reshape(n, B, k), (1, 0, 2))
+                    h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
+                                            ell=ell).reshape(B, k, n)
+                    rows = jnp.arange(B)
+                    return (t_r.at[rows, src].set(r_new),
+                            t_h.at[rows, src].set(h_new))
+
+                tables_r, tables_h = jax.lax.cond(
+                    fresh.any(), compute, lambda t: t, (tables_r, tables_h))
+                seen = seen.at[jnp.arange(B), src].set(
+                    have | order_mask[:, ei])
+                r_t = tables_r[jnp.arange(B), src]               # (B, n, k)
+                reach_t = tables_h[jnp.arange(B), src]           # (B, k, n)
 
             def step_one(lq, matched_q, used_q, goodness_q, hops_q, valid_q,
                          qb, tr, on, r_q, reach_q, ei=ei):

@@ -5,35 +5,34 @@
                           touched by V_l, FIXED community size
   AdaptiveMatcher         IGPM-PEM: community size driven by the DQN
 
-Each ``step(graph, update)`` applies one timestep of graph updates, runs the
-matcher, merges results into a persistent pattern store (batch mode rebuilds
-its store — it recomputes everything), and reports the paper's metrics:
-elapsed time, #re-computed vertices, #patterns (exact/approx).
+All three are thin *facades* over the one :class:`repro.engine.Engine`
+step pipeline (DESIGN.md §4): construction registers the query with a
+single-query engine in the matching mode, ``step(graph, update)`` threads
+the engine's explicit :class:`~repro.engine.EngineState` and projects its
+:class:`~repro.engine.StepOutput` into the historical :class:`StepStats`.
+No matcher owns an apply/extract/RWR/G-Ray sequence of its own — the
+pipeline lives in ``repro.engine.core.engine_step`` only.
 
-With ``cfg.backend == "ell"`` (the default) every sparse sweep runs through
-the Pallas ELL kernels: the full graph carries an incrementally refreshed
-:class:`~repro.core.graph.EllCache`, and induced subgraphs emit their ELL
-tile straight from the bucketed extraction (DESIGN.md §2). ``"coo"`` keeps
-the seed gather/segment path.
+``PatternStore`` and ``live_vertex_mask`` moved to ``repro.engine.store``;
+they are re-exported here for the pre-engine import paths.
 """
 
 from __future__ import annotations
 
-import time
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config.base import IGPMConfig
-from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
-                              apply_update, updated_vertices)
-from repro.core.gray import GRayMatcher, GRayResult
-from repro.core.pem import PartialExecutionManager
+from repro.config.base import EngineConfig, IGPMConfig
+from repro.core.graph import DynamicGraph, UpdateBatch
 from repro.core.query import Query
-from repro.core.subgraph import extract_induced, remap_matched
+from repro.engine import Engine, EngineState, StepOutput
+from repro.engine.store import PatternStore, live_vertex_mask  # noqa: F401
+
+__all__ = [
+    "StepStats", "PatternStore", "live_vertex_mask",
+    "BatchMatcher", "NaiveIncrementalMatcher", "AdaptiveMatcher",
+]
 
 
 @dataclass
@@ -53,155 +52,84 @@ class StepStats:
     n_pruned: int = 0           # patterns dropped for dead vertices
 
 
-class PatternStore:
-    """Host-side dedup of matched subgraphs (keyed by the vertex assignment)."""
-
-    def __init__(self):
-        self._patterns: Dict[Tuple[int, ...], Tuple[float, bool]] = {}
-
-    def merge_arrays(self, matched: np.ndarray, goodness: np.ndarray,
-                     exact: np.ndarray, valid: np.ndarray,
-                     q_mask: np.ndarray) -> int:
-        new = 0
-        qm = np.asarray(q_mask)
-        for i in range(matched.shape[0]):
-            if not valid[i]:
-                continue
-            verts = matched[i][qm]
-            if (verts < 0).any():
-                continue
-            key = tuple(sorted(int(v) for v in verts))
-            if len(set(key)) != len(key):
-                continue  # degenerate (data vertex reused)
-            if key not in self._patterns:
-                new += 1
-                self._patterns[key] = (float(goodness[i]), bool(exact[i]))
-            elif goodness[i] > self._patterns[key][0]:
-                self._patterns[key] = (float(goodness[i]), bool(exact[i]))
-        return new
-
-    def merge(self, res: GRayResult, q_mask: np.ndarray) -> int:
-        return self.merge_arrays(np.asarray(res.matched),
-                                 np.asarray(res.goodness),
-                                 np.asarray(res.exact),
-                                 np.asarray(res.valid), q_mask)
-
-    def prune(self, node_mask: np.ndarray) -> int:
-        """Drop patterns touching vertices no longer live.
-
-        Later ``UpdateBatch``es can delete every arc of a matched vertex;
-        without this hook ``n_patterns_total``/``n_exact_total`` drift upward
-        on deletion-heavy streams. Invalidation is deliberately *vertex*-
-        level: patterns are keyed by their vertex assignment and approximate
-        matches never required the literal edge (bridges admit multi-hop
-        paths), so removing a single matched arc does not falsify the
-        pattern — a dead vertex does. Returns the number of patterns removed.
-        """
-        node_mask = np.asarray(node_mask, bool)
-        dead = [key for key in self._patterns
-                if any(not node_mask[v] for v in key)]
-        for key in dead:
-            del self._patterns[key]
-        return len(dead)
-
-    @property
-    def total(self) -> int:
-        return len(self._patterns)
-
-    @property
-    def exact(self) -> int:
-        return sum(1 for _, e in self._patterns.values() if e)
-
-
-def live_vertex_mask(g: DynamicGraph) -> np.ndarray:
-    """Vertices incident to at least one live arc (host-side)."""
-    em = np.asarray(g.edge_mask)
-    live = np.zeros(g.n_max, bool)
-    live[np.asarray(g.senders)[em]] = True
-    live[np.asarray(g.receivers)[em]] = True
-    return live & np.asarray(g.node_mask)
-
-
 class _BaseMatcher:
-    def __init__(self, query: Query, cfg: IGPMConfig, seed: int = 0):
+    """Single-query facade: one Engine, one registered query."""
+
+    mode = "incremental"
+    adaptive = False
+
+    def __init__(self, query: Query, cfg: IGPMConfig, seed: int = 0,
+                 full_graph_frac: float = 0.5):
         self.query = query
         self.cfg = cfg
-        self.gray = GRayMatcher(query, cfg.n_labels, cfg.top_k_patterns,
-                                rwr_iters=cfg.rwr_iters,
-                                restart=cfg.restart_prob,
-                                bridge_hops=cfg.bridge_hops,
-                                backend=cfg.backend,
-                                ell_width=cfg.ell_width)
-        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width)
-                          if cfg.backend == "ell" else None)
-        self.store = PatternStore()
-        self.step_idx = 0
+        self.full_graph_frac = full_graph_frac
+        ecfg = EngineConfig(mode=self.mode, adaptive=self.adaptive,
+                            full_graph_frac=full_graph_frac)
+        # single-query facades accept any query size (the pre-engine
+        # GRayMatcher had no caps) — widen the bucket caps to fit
+        ecfg = dataclasses.replace(
+            ecfg, q_cap=max(ecfg.q_cap, query.n_nodes),
+            qe_cap=max(ecfg.qe_cap, query.n_edges))
+        self.engine = Engine(cfg, ecfg, seed=seed)
+        self.qid = self.engine.register(query)
+        self._state: Optional[EngineState] = None
+
+    # engine-owned pieces the historical API exposed
+    @property
+    def store(self) -> PatternStore:
+        return self.engine.stores[self.qid]
+
+    @property
+    def pem(self):
+        return self.engine.pem
+
+    @property
+    def ell_cache(self):
+        return self.engine.ell_cache
+
+    @property
+    def step_idx(self) -> int:
+        return self._state.step_idx if self._state is not None else 0
 
     def reset(self) -> None:
         """Clear accumulated matching state but KEEP jit caches — benchmark
         warm/measure passes replay identical streams on one instance."""
-        self.store = PatternStore()
-        self.step_idx = 0
-        if hasattr(self, "_r_lab"):
-            self._r_lab = None
-        if self.ell_cache is not None:
-            self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
-                                      self.cfg.ell_width)
+        self.engine.reset()
+        self._state = None
 
-    def _apply(self, g: DynamicGraph,
-               upd: UpdateBatch) -> Tuple[DynamicGraph, float]:
-        """Apply the update, refreshing the ELL mirror when one is carried.
+    def step(self, g: DynamicGraph,
+             upd: UpdateBatch) -> Tuple[DynamicGraph, StepStats]:
+        if self._state is None or self._state.graph is not g:
+            # fresh stream (or caller-rebuilt graph): re-anchor the state
+            self._state = self.engine.init_state(g)
+        self._state, out = self.engine.step(self._state, upd)
+        return self._state.graph, self._stats(out)
 
-        The returned refresh time covers only the mirror maintenance — the
-        COO ``apply_update`` is paid identically by both backends."""
-        if self.ell_cache is None:
-            return apply_update(g, upd), 0.0
-        if self.ell_cache._last is not g:
-            self.ell_cache.rebuild(g)
-        g2 = apply_update(g, upd)
-        t0 = time.perf_counter()
-        self.ell_cache.refresh(g, g2, upd)
-        jax.block_until_ready(self.ell_cache._cols_d)
-        return g2, time.perf_counter() - t0
-
-    @property
-    def _full_ell(self):
-        return None if self.ell_cache is None else self.ell_cache.ell
-
-    def _finish(self, elapsed: float, n_recompute: int, new: int,
-                **kw) -> StepStats:
-        st = StepStats(step=self.step_idx, elapsed=elapsed,
-                       n_recompute=n_recompute, n_new_patterns=new,
-                       n_patterns_total=self.store.total,
-                       n_exact_total=self.store.exact, **kw)
-        self.step_idx += 1
-        return st
+    def _stats(self, out: StepOutput) -> StepStats:
+        store = self.store
+        return StepStats(
+            step=out.step, elapsed=out.elapsed, n_recompute=out.n_recompute,
+            n_new_patterns=out.n_new_patterns, n_patterns_total=store.total,
+            n_exact_total=store.exact, community_size=out.community_size,
+            rl_loss=out.rl_loss, frac_affected=out.frac_affected,
+            subgraph_nodes=out.subgraph_nodes,
+            subgraph_edges=out.subgraph_edges,
+            ell_refresh_s=out.ell_refresh_s, n_pruned=out.n_pruned)
 
 
 class BatchMatcher(_BaseMatcher):
     """Re-compute G-Ray from scratch on the full graph (paper's 'Batch')."""
 
-    def step(self, g: DynamicGraph,
-             upd: UpdateBatch) -> Tuple[DynamicGraph, StepStats]:
-        g, refresh_s = self._apply(g, upd)
-        jax.block_until_ready(g)
-        t0 = time.perf_counter()
-        ell = self._full_ell
-        r_lab = self.gray.label_table(g, ell=ell)  # cold start, full iters
-        res = self.gray.match(g, r_lab, ell=ell)
-        jax.block_until_ready(res)
-        elapsed = time.perf_counter() - t0
-        self.store = PatternStore()  # batch mode owns no incremental state
-        new = self.store.merge(res, self.query.mask)
-        n_recompute = int(np.asarray(g.node_mask).sum())
-        return g, self._finish(elapsed, n_recompute, new,
-                               ell_refresh_s=refresh_s)
+    mode = "batch"
+
+    def __init__(self, query: Query, cfg: IGPMConfig, seed: int = 0):
+        super().__init__(query, cfg, seed)
 
 
 class NaiveIncrementalMatcher(_BaseMatcher):
     """IGPM with a fixed community size (paper's 'Inc').
 
-    Incremental machinery (paper §III-B/C):
+    Incremental machinery (paper §III-B/C), all inside ``engine_step``:
       * V_l = endpoints of this step's updates
       * PEM expands V_l to all vertices of touched communities
       * G-Ray runs on the induced subgraph only (bucketed static shapes);
@@ -211,72 +139,6 @@ class NaiveIncrementalMatcher(_BaseMatcher):
     """
 
     adaptive = False
-
-    def __init__(self, query: Query, cfg: IGPMConfig, seed: int = 0,
-                 full_graph_frac: float = 0.5):
-        super().__init__(query, cfg, seed)
-        self.pem = PartialExecutionManager(cfg, adaptive=self.adaptive,
-                                           seed=seed)
-        self._r_lab: Optional[jnp.ndarray] = None
-        self._v_max = 4 * 1024
-        self.full_graph_frac = full_graph_frac
-
-    def step(self, g: DynamicGraph,
-             upd: UpdateBatch) -> Tuple[DynamicGraph, StepStats]:
-        g, refresh_s = self._apply(g, upd)
-        ids, mask = updated_vertices(g, upd, self._v_max)
-        upd_ids = np.asarray(jnp.where(mask, ids, -1))
-        jax.block_until_ready(g)
-        n_pruned = 0
-        # liveness costs one O(e_max) host sync (same order as the n_live /
-        # edge-count syncs below) — only pay it when a removal could have
-        # killed a stored pattern's vertex
-        if self.store.total and bool(np.asarray(upd.rem_mask).any()):
-            n_pruned = self.store.prune(live_vertex_mask(g))
-
-        t0 = time.perf_counter()
-        rec_mask, frac = self.pem.recompute_mask(g, upd_ids)
-        n_live = max(int(np.asarray(g.node_mask).sum()), 1)
-        n_rec = int(rec_mask.sum())
-
-        if n_rec > self.full_graph_frac * n_live:
-            # update storm — full pass, warm-started label RWR (paper: "too
-            # many vertices updated to be re-computed" case)
-            ell = self._full_ell
-            if self._r_lab is None:
-                r_lab = self.gray.label_table(g, ell=ell)
-            else:
-                r_lab = self.gray.label_table(
-                    g, r0=self._r_lab, iters=self.cfg.rwr_iters_incremental,
-                    ell=ell)
-            self._r_lab = r_lab
-            res = self.gray.match(g, r_lab,
-                                  seed_filter=jnp.asarray(rec_mask), ell=ell)
-            jax.block_until_ready(res)
-            elapsed = time.perf_counter() - t0
-            new = self.store.merge(res, self.query.mask)
-            sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
-        else:
-            sub = extract_induced(
-                g, rec_mask,
-                ell_k=self.cfg.ell_width if self.ell_cache else None)
-            r_lab = self.gray.label_table(sub.graph, ell=sub.ell)
-            res = self.gray.match(sub.graph, r_lab, ell=sub.ell)
-            jax.block_until_ready(res)
-            matched = remap_matched(np.asarray(res.matched),
-                                    sub.local_to_global)
-            elapsed = time.perf_counter() - t0
-            new = self.store.merge_arrays(matched, np.asarray(res.goodness),
-                                          np.asarray(res.exact),
-                                          np.asarray(res.valid),
-                                          self.query.mask)
-            sub_n, sub_e = sub.n_nodes, sub.n_edges
-
-        c, loss = self.pem.feedback(g, frac, elapsed)
-        return g, self._finish(elapsed, n_rec, new, community_size=c,
-                               rl_loss=loss, frac_affected=frac,
-                               subgraph_nodes=sub_n, subgraph_edges=sub_e,
-                               ell_refresh_s=refresh_s, n_pruned=n_pruned)
 
 
 class AdaptiveMatcher(NaiveIncrementalMatcher):

@@ -1,0 +1,20 @@
+"""Functional-core match engine (DESIGN.md §4).
+
+One :class:`Engine` owns the single step pipeline every matcher facade
+drives, a registry of standing queries in bucketed dynamic banks, and
+whole-engine checkpointing. ``engine.step(state, upd)`` threads an explicit
+:class:`EngineState`; facades (`core.matcher`, `serving.server`) only
+project its :class:`StepOutput` into their historical stats types.
+"""
+
+from repro.engine.buckets import QueryBucket, bucket_shape
+from repro.engine.core import Engine, engine_step
+from repro.engine.sharding import ShardedBankMatch, query_shard_count
+from repro.engine.state import EngineState, QueryDelta, StepOutput
+from repro.engine.store import PatternStore, live_vertex_mask
+
+__all__ = [
+    "Engine", "engine_step", "EngineState", "StepOutput", "QueryDelta",
+    "QueryBucket", "bucket_shape", "ShardedBankMatch", "query_shard_count",
+    "PatternStore", "live_vertex_mask",
+]

@@ -1,0 +1,208 @@
+"""Bucketed dynamic query banks (DESIGN.md §4).
+
+Standing queries are grouped into *buckets* keyed on the padded shape
+``(q_max, qe_max, B_pad)`` — pow-2 roundups of (query vertices, schedule
+length, row count). Each bucket owns one padded :class:`QueryBank` and ONE
+:class:`~repro.core.gray.BankGRayMatcher` compiled in the content-
+independent ``memo=False`` mode, where every bank tensor is a jit
+*argument* and the unroll structure depends only on the bucket key. That
+is what makes membership dynamic: ``register`` writes a query's tensors
+into a free row and ``retire`` zeroes them — device scatters, never a
+retrace. Only outgrowing ``B_pad`` (a doubling) builds a new bucket.
+
+Execution is vmapped over the row axis on one device and ``shard_map``-ed
+over it when more devices are visible (rows are independent in
+``memo=False`` mode, so the sharded program needs no collectives and its
+results are bit-identical to the vmap path — pinned in
+``tests/test_engine_sharding.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import EngineConfig, IGPMConfig
+from repro.core.graph import DynamicGraph
+from repro.core.gray import BankGRayMatcher, GRayResult
+from repro.core.query import Query, QueryBank, stack_queries
+from repro.engine.sharding import ShardedBankMatch, query_shard_count
+from repro.sparse.ell import EllGraph
+
+
+def _pow2(x: int, floor: int) -> int:
+    return max(floor, 1 << int(np.ceil(np.log2(max(x, 1)))))
+
+
+def bucket_shape(query: Query, ecfg: EngineConfig) -> Tuple[int, int]:
+    """The (q_max, qe_max) bucket a query pads into."""
+    q = _pow2(query.n_nodes, ecfg.q_floor)
+    qe = _pow2(query.n_edges, ecfg.qe_floor)
+    if query.n_nodes > ecfg.q_cap or query.n_edges > ecfg.qe_cap:
+        raise ValueError(
+            f"query {query.name!r} ({query.n_nodes} vertices, "
+            f"{query.n_edges} schedule edges) exceeds the engine caps "
+            f"(q_cap={ecfg.q_cap}, qe_cap={ecfg.qe_cap})")
+    return min(q, ecfg.q_cap), min(qe, ecfg.qe_cap)
+
+
+def _empty_bank(q_max: int, qe_max: int, b_pad: int) -> QueryBank:
+    return QueryBank(
+        labels=jnp.zeros((b_pad, q_max), jnp.int32),
+        mask=jnp.zeros((b_pad, q_max), bool),
+        order_src=jnp.zeros((b_pad, qe_max), jnp.int32),
+        order_dst=jnp.zeros((b_pad, qe_max), jnp.int32),
+        order_tree=jnp.zeros((b_pad, qe_max), bool),
+        order_mask=jnp.zeros((b_pad, qe_max), bool),
+        anchor=jnp.zeros((b_pad,), jnp.int32),
+        names=())
+
+
+class QueryBucket:
+    """One padded bank of standing queries sharing a jit signature."""
+
+    def __init__(self, cfg: IGPMConfig, q_max: int, qe_max: int, b_pad: int,
+                 shard: str = "auto"):
+        self.q_max, self.qe_max, self.b_pad = q_max, qe_max, b_pad
+        self.bank = _empty_bank(q_max, qe_max, b_pad)
+        self.matcher = BankGRayMatcher(
+            self.bank, cfg.n_labels, cfg.top_k_patterns,
+            rwr_iters=cfg.rwr_iters, restart=cfg.restart_prob,
+            bridge_hops=cfg.bridge_hops, backend=cfg.backend,
+            ell_width=cfg.ell_width, memo=False)
+        self.n_shards = query_shard_count(b_pad, shard)
+        self._sharded = (ShardedBankMatch(self.matcher, self.n_shards)
+                         if self.n_shards > 1 else None)
+        self.qids: List[Optional[str]] = [None] * b_pad
+        self._queries: List[Optional[Query]] = [None] * b_pad
+        self._row_masks: List[Optional[np.ndarray]] = [None] * b_pad
+        self.version = 0  # bumped on every membership change (seed memo key)
+
+    # -- membership -----------------------------------------------------------
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.q_max, self.qe_max, self.b_pad)
+
+    @property
+    def n_live(self) -> int:
+        return sum(q is not None for q in self.qids)
+
+    @property
+    def full(self) -> bool:
+        return self.n_live == self.b_pad
+
+    def rows(self) -> List[Tuple[int, str]]:
+        """(slot, qid) of every occupied row, slot order."""
+        return [(i, q) for i, q in enumerate(self.qids) if q is not None]
+
+    def query(self, slot: int) -> Query:
+        q = self._queries[slot]
+        assert q is not None
+        return q
+
+    def row_mask(self, slot: int) -> np.ndarray:
+        m = self._row_masks[slot]
+        assert m is not None
+        return m
+
+    def register(self, qid: str, query: Query) -> int:
+        """Write ``query`` into a free row; returns the slot. Device-array
+        row writes only — the bucket's compiled programs are untouched."""
+        slot = self.qids.index(None)  # raises ValueError when full
+        row = stack_queries([query], q_max=self.q_max, qe_max=self.qe_max)
+        b = self.bank
+        self.bank = b._replace(
+            labels=b.labels.at[slot].set(row.labels[0]),
+            mask=b.mask.at[slot].set(row.mask[0]),
+            order_src=b.order_src.at[slot].set(row.order_src[0]),
+            order_dst=b.order_dst.at[slot].set(row.order_dst[0]),
+            order_tree=b.order_tree.at[slot].set(row.order_tree[0]),
+            order_mask=b.order_mask.at[slot].set(row.order_mask[0]),
+            anchor=b.anchor.at[slot].set(row.anchor[0]))
+        self.qids[slot] = qid
+        self._queries[slot] = query
+        self._row_masks[slot] = np.asarray(row.mask[0])
+        self.version += 1
+        return slot
+
+    def retire(self, qid: str) -> int:
+        """Zero the row of ``qid``; returns the freed slot."""
+        slot = self.qids.index(qid)
+        b = self.bank
+        self.bank = b._replace(
+            labels=b.labels.at[slot].set(0),
+            mask=b.mask.at[slot].set(False),
+            order_src=b.order_src.at[slot].set(0),
+            order_dst=b.order_dst.at[slot].set(0),
+            order_tree=b.order_tree.at[slot].set(False),
+            order_mask=b.order_mask.at[slot].set(False),
+            anchor=b.anchor.at[slot].set(0))
+        self.qids[slot] = None
+        self._queries[slot] = None
+        self._row_masks[slot] = None
+        self.version += 1
+        return slot
+
+    # -- execution ------------------------------------------------------------
+
+    def seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
+              seed_filter: Optional[jnp.ndarray]
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.matcher.seeds(g, r_lab, seed_filter, bank=self.bank)
+
+    def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
+              seed_filter: Optional[jnp.ndarray] = None,
+              ell: Optional[EllGraph] = None,
+              seeds: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+              ) -> GRayResult:
+        """Match every row against ``g`` — vmap on one device, shard_map
+        over the row axis otherwise. ``seeds`` short-circuits the top-k
+        (the storm seed cache path)."""
+        if seeds is None:
+            seeds = self.seeds(g, r_lab, seed_filter)
+        seed_ids, seed_mask = seeds
+        if self._sharded is not None:
+            return self._sharded(g, r_lab, seed_ids, seed_mask, ell,
+                                 self.bank)
+        return self.matcher.match_from_seeds(g, r_lab, seed_ids, seed_mask,
+                                             ell=ell, bank=self.bank)
+
+    def trace_count(self) -> int:
+        """Compiled-trace count across this bucket's jitted programs."""
+        n = 0
+        for fn in (self.matcher._match, self.matcher._seeds):
+            size = getattr(fn, "_cache_size", None)
+            n += size() if size is not None else 0
+        if self._sharded is not None:
+            n += self._sharded.trace_count()
+        return n
+
+    # -- checkpoint views ------------------------------------------------------
+
+    def bank_arrays(self) -> Dict[str, np.ndarray]:
+        b = self.bank
+        return {
+            "labels": np.asarray(b.labels), "mask": np.asarray(b.mask),
+            "order_src": np.asarray(b.order_src),
+            "order_dst": np.asarray(b.order_dst),
+            "order_tree": np.asarray(b.order_tree),
+            "order_mask": np.asarray(b.order_mask),
+            "anchor": np.asarray(b.anchor),
+            "occupancy": np.asarray([q is not None for q in self.qids]),
+        }
+
+    def load_bank_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        occ = np.asarray(arrays["occupancy"], bool)
+        live = np.asarray([q is not None for q in self.qids])
+        if not np.array_equal(occ, live):
+            raise ValueError(
+                "checkpointed bucket occupancy does not match the live "
+                "registry — register the same queries before load()")
+        self.bank = self.bank._replace(
+            **{f: jnp.asarray(arrays[f])
+               for f in ("labels", "mask", "order_src", "order_dst",
+                         "order_tree", "order_mask", "anchor")})
+        self.version += 1

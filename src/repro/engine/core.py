@@ -1,0 +1,412 @@
+"""The match engine — ONE step pipeline behind every matcher facade.
+
+``engine_step(engine, state, upd)`` is the only place in the repo that
+sequences the paper's serving step:
+
+  1. ``apply_update`` + incremental ELL-mirror refresh (one graph state)
+  2. pattern-store pruning when removals could have killed a matched vertex
+  3. PEM recompute mask (one Louvain cut, one DQN-controlled threshold)
+  4. induced-subgraph extraction — or the full-graph *storm* fallback with
+     warm-started label RWR and the staleness-keyed seed cache
+  5. the label-conditioned RWR table (query-independent, shared by all
+     buckets)
+  6. one bank G-Ray match per bucket (vmap or shard_map over the row axis)
+  7. host-side merge into per-query :class:`~repro.engine.store.PatternStore`
+
+``BatchMatcher`` / ``NaiveIncrementalMatcher`` / ``AdaptiveMatcher`` /
+``MatchServer`` are thin facades projecting :class:`StepOutput` into their
+historical stats types; none of them owns a pipeline anymore (DESIGN.md §4).
+The functional core is explicit: all evolving data rides in
+:class:`~repro.engine.state.EngineState`; the Engine object holds the
+registry (buckets, stores), jit caches, and host-side caches that are pure
+functions of the state (ELL mirror, Louvain dendrogram, storm seed memo).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.config.base import EngineConfig, IGPMConfig
+from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
+                              apply_update, updated_vertices)
+from repro.core.pem import PartialExecutionManager
+from repro.core.query import Query
+from repro.core.rwr import label_rwr
+from repro.core.subgraph import extract_induced, remap_matched
+from repro.engine.buckets import QueryBucket, bucket_shape
+from repro.engine.state import EngineState, QueryDelta, StepOutput
+from repro.engine.store import PatternStore, live_vertex_mask
+
+
+class Engine:
+    """Functional-core match engine with bucketed dynamic query banks."""
+
+    def __init__(self, cfg: IGPMConfig, ecfg: Optional[EngineConfig] = None,
+                 seed: int = 0):
+        ecfg = ecfg or EngineConfig()
+        if ecfg.mode not in ("incremental", "batch"):
+            raise ValueError(f"unknown engine mode {ecfg.mode!r}")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.seed = seed
+        self.pem: Optional[PartialExecutionManager] = (
+            None if ecfg.mode == "batch"
+            else PartialExecutionManager(cfg, adaptive=ecfg.adaptive,
+                                         seed=seed))
+        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width)
+                          if cfg.backend == "ell" else None)
+        self.buckets: Dict[Tuple[int, int], QueryBucket] = {}
+        self.stores: Dict[str, PatternStore] = {}
+        self._where: Dict[str, Tuple[int, int]] = {}  # qid → bucket (q, qe)
+        self._order: List[str] = []                   # registration order
+        # storm seed cache (satellite: consecutive storm steps stop paying
+        # the full-graph seed recompute) — see EngineConfig
+        self._seed_memo: Dict[Tuple[int, int], Tuple[tuple, tuple]] = {}
+        self.rlab_hits = 0
+        self.rlab_misses = 0
+        self.seed_hits = 0
+        self.seed_misses = 0
+
+    # -- standing-query registry ----------------------------------------------
+
+    def register(self, query: Query, qid: Optional[str] = None) -> str:
+        """Add a standing query; returns its id. Inside an existing bucket
+        this is a device row write (zero recompilations); a new padded
+        shape — or outgrowing ``B_pad`` — builds a new bucket."""
+        if qid is None:
+            qid = query.name
+            i = 1
+            while qid in self.stores:
+                qid = f"{query.name}#{i}"
+                i += 1
+        elif qid in self.stores:
+            raise ValueError(f"qid {qid!r} already registered")
+        shape = bucket_shape(query, self.ecfg)
+        bucket = self.buckets.get(shape)
+        if bucket is None:
+            bucket = QueryBucket(self.cfg, *shape, b_pad=1,
+                                 shard=self.ecfg.shard)
+            self.buckets[shape] = bucket
+        elif bucket.full:
+            bucket = self._grow(bucket)
+        bucket.register(qid, query)
+        self._seed_memo.pop(shape, None)
+        self.stores[qid] = PatternStore()
+        self._where[qid] = shape
+        self._order.append(qid)
+        return qid
+
+    def retire(self, qid: str) -> None:
+        """Drop a standing query (device row clear — zero recompilations).
+        Its pattern store goes with it."""
+        if qid not in self._where:
+            raise KeyError(f"unknown qid {qid!r}; live: {self._order}")
+        shape = self._where.pop(qid)
+        self.buckets[shape].retire(qid)
+        self._seed_memo.pop(shape, None)
+        del self.stores[qid]
+        self._order.remove(qid)
+
+    def _grow(self, bucket: QueryBucket) -> QueryBucket:
+        """Double a full bucket's row capacity (new jit signature — the one
+        membership change that does recompile, by design)."""
+        grown = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
+                            b_pad=2 * bucket.b_pad, shard=self.ecfg.shard)
+        for slot, qid in bucket.rows():
+            grown.register(qid, bucket.query(slot))
+        self.buckets[(bucket.q_max, bucket.qe_max)] = grown
+        return grown
+
+    def query(self, qid: str) -> Query:
+        shape = self._where[qid]
+        bucket = self.buckets[shape]
+        return bucket.query(bucket.qids.index(qid))
+
+    @property
+    def qids(self) -> Tuple[str, ...]:
+        return tuple(self._order)
+
+    def occupancy(self) -> Dict[Tuple[int, int, int], Tuple[int, int]]:
+        """bucket key (q_max, qe_max, B_pad) → (live rows, padded rows)."""
+        return {b.key: (b.n_live, b.b_pad) for b in self.buckets.values()}
+
+    def trace_count(self) -> int:
+        """Total compiled traces across bucket programs — the membership
+        tests pin this flat across register/retire inside a bucket."""
+        return sum(b.trace_count() for b in self.buckets.values())
+
+    def counters(self) -> Dict[str, int]:
+        return {"rlab_cache_hits": self.rlab_hits,
+                "rlab_cache_misses": self.rlab_misses,
+                "seed_cache_hits": self.seed_hits,
+                "seed_cache_misses": self.seed_misses}
+
+    # -- state lifecycle -------------------------------------------------------
+
+    def init_state(self, graph: DynamicGraph) -> EngineState:
+        return EngineState(graph=graph)
+
+    def reset(self) -> None:
+        """Clear accumulated match state but KEEP jit caches (and the PEM's
+        learned threshold/policy) — benchmark warm/measure passes replay
+        identical streams on one engine."""
+        self.stores = {qid: PatternStore() for qid in self._order}
+        self._seed_memo.clear()
+        self.rlab_hits = self.rlab_misses = 0
+        self.seed_hits = self.seed_misses = 0
+        if self.ell_cache is not None:
+            self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
+                                      self.cfg.ell_width)
+
+    # -- the ONE step pipeline -------------------------------------------------
+
+    def step(self, state: EngineState,
+             upd: UpdateBatch) -> Tuple[EngineState, StepOutput]:
+        return engine_step(self, state, upd)
+
+    def _apply(self, g: DynamicGraph,
+               upd: UpdateBatch) -> Tuple[DynamicGraph, float]:
+        """Apply the update, refreshing the ELL mirror when one is carried.
+
+        The returned refresh time covers only the mirror maintenance — the
+        COO ``apply_update`` is paid identically by both backends."""
+        if self.ell_cache is None:
+            return apply_update(g, upd), 0.0
+        if self.ell_cache._last is not g:
+            self.ell_cache.rebuild(g)
+        g2 = apply_update(g, upd)
+        t0 = time.perf_counter()
+        self.ell_cache.refresh(g, g2, upd)
+        jax.block_until_ready(self.ell_cache._cols_d)
+        return g2, time.perf_counter() - t0
+
+    @property
+    def _full_ell(self):
+        return None if self.ell_cache is None else self.ell_cache.ell
+
+    def _label_table(self, g: DynamicGraph,
+                     r0: Optional[jnp.ndarray] = None,
+                     iters: Optional[int] = None, ell=None) -> jnp.ndarray:
+        return label_rwr(
+            g, self.cfg.n_labels,
+            iters=iters if iters is not None else self.cfg.rwr_iters,
+            c=self.cfg.restart_prob, r0=r0, ell=ell)
+
+    def _merge(self, results, remap=None,
+               rebuild: bool = False) -> Tuple[QueryDelta, ...]:
+        """Fold per-bucket results into the per-query stores (the only
+        per-query host work of a step)."""
+        by_qid: Dict[str, QueryDelta] = {}
+        for shape, res in results.items():
+            bucket = self.buckets[shape]
+            matched = np.asarray(res.matched)
+            if remap is not None:
+                matched = remap_matched(
+                    matched.reshape(-1, matched.shape[-1]),
+                    remap).reshape(matched.shape)
+            goodness = np.asarray(res.goodness)
+            exact = np.asarray(res.exact)
+            valid = np.asarray(res.valid)
+            for slot, qid in bucket.rows():
+                store = self.stores[qid]
+                if rebuild:
+                    store._patterns.clear()
+                new = store.merge_arrays(matched[slot], goodness[slot],
+                                         exact[slot], valid[slot],
+                                         bucket.row_mask(slot))
+                by_qid[qid] = QueryDelta(qid, bucket.query(slot).name, new,
+                                         store.total, store.exact)
+        return tuple(by_qid[q] for q in self._order if q in by_qid)
+
+    # -- whole-engine checkpointing (DESIGN.md §4) ------------------------------
+
+    def state_dict(self, state: EngineState) -> Dict:
+        """The engine's EngineState pytree as host arrays: graph, the
+        warm-start r_lab table, per-bucket bank tables, PEM/DQN state, and
+        the pattern-store arrays. The ELL mirror and Louvain dendrogram are
+        deliberately absent — they are caches rebuilt from the graph."""
+        n, L = self.cfg.n_max, self.cfg.n_labels
+        d: Dict = {
+            "graph": {f: np.asarray(getattr(state.graph, f))
+                      for f in state.graph._fields},
+            "r_lab": (np.zeros((n, L), np.float32) if state.r_lab is None
+                      else np.asarray(state.r_lab)),
+            "has_rlab": np.asarray(state.r_lab is not None),
+            "rlab_events": np.asarray(state.rlab_events, np.int64),
+            "step_idx": np.asarray(state.step_idx, np.int64),
+            "buckets": {f"{k[0]}x{k[1]}": b.bank_arrays()
+                        for k, b in self.buckets.items()},
+            "stores": {qid: self.stores[qid].to_arrays()
+                       for qid in self._order},
+        }
+        if self.pem is not None:
+            d["pem"] = {"community_size": np.asarray(self.pem.c, np.int64)}
+            if self.pem.agent is not None:
+                d["pem"]["agent"] = self.pem.agent.state_dict()
+        return d
+
+    def save(self, state: EngineState, directory: str,
+             step: Optional[int] = None) -> None:
+        ckpt = Checkpointer(directory, async_save=False)
+        ckpt.save(state.step_idx if step is None else step,
+                  self.state_dict(state))
+
+    def load(self, state: EngineState, directory: str,
+             step: Optional[int] = None) -> Tuple[EngineState, int]:
+        """Restore a checkpoint saved by :meth:`save`. The same queries
+        must be registered (the registry is code+configuration; the
+        checkpoint carries data). Returns (state, step)."""
+        ckpt = Checkpointer(directory, async_save=False)
+        tree, step = ckpt.restore(self.state_dict(state), step=step)
+        graph = DynamicGraph(**{f: jnp.asarray(tree["graph"][f])
+                                for f in DynamicGraph._fields})
+        for key_s, arrays in tree["buckets"].items():
+            q, qe = (int(x) for x in key_s.split("x"))
+            self.buckets[(q, qe)].load_bank_arrays(arrays)
+        for qid, arrays in tree["stores"].items():
+            self.stores[qid].load_arrays(arrays)
+        if self.pem is not None:
+            self.pem.c = int(tree["pem"]["community_size"])
+            if self.pem.agent is not None:
+                self.pem.agent.load_state_dict(tree["pem"]["agent"])
+        self._seed_memo.clear()
+        # the ELL mirror resyncs on the next _apply (graph identity changed)
+        return EngineState(
+            graph=graph,
+            r_lab=(jnp.asarray(tree["r_lab"]) if bool(tree["has_rlab"])
+                   else None),
+            rlab_events=int(tree["rlab_events"]),
+            rlab_version=0,
+            step_idx=int(tree["step_idx"])), step
+
+
+def _n_events(upd: UpdateBatch) -> int:
+    """Masked update entries in a batch (host-side; staleness accounting)."""
+    return int(np.asarray(upd.add_mask).sum()
+               + np.asarray(upd.rem_mask).sum()
+               + np.asarray(upd.lab_mask).sum())
+
+
+def engine_step(eng: Engine, state: EngineState,
+                upd: UpdateBatch) -> Tuple[EngineState, StepOutput]:
+    """THE shared step pipeline (module docstring). Pure in the functional-
+    core sense: evolving data is read from ``state`` and returned in the
+    new state; Engine-held host caches are rebuilt-on-demand views."""
+    cfg, ecfg = eng.cfg, eng.ecfg
+    g, refresh_s = eng._apply(state.graph, upd)
+    n_events = _n_events(upd)
+    rlab_events = state.rlab_events + n_events
+    rlab_version = state.rlab_version
+    upd_ids = None
+    if ecfg.mode != "batch":
+        ids, mask = updated_vertices(g, upd, ecfg.v_max)
+        upd_ids = np.asarray(jnp.where(mask, ids, -1))
+    jax.block_until_ready(g)
+
+    # -- store pruning (deletion-heavy streams; DESIGN.md §3) -----------------
+    n_pruned = 0
+    if (ecfg.mode != "batch"
+            and any(s.total for s in eng.stores.values())
+            and bool(np.asarray(upd.rem_mask).any())):
+        live = live_vertex_mask(g)
+        n_pruned = sum(s.prune(live) for s in eng.stores.values())
+
+    t0 = time.perf_counter()
+    n_live = max(int(np.asarray(g.node_mask).sum()), 1)
+    rlab_hit = seed_hit = False
+    community = 0
+    rl_loss = 0.0
+
+    if ecfg.mode == "batch":
+        # the paper's Batch oracle: full fresh pass, stores rebuilt
+        frac = 0.0
+        n_rec = n_live
+        storm = True
+        ell = eng._full_ell
+        r_lab = eng._label_table(g, ell=ell)
+        results = {shape: bucket.match(g, r_lab, ell=ell)
+                   for shape, bucket in eng.buckets.items()}
+        jax.block_until_ready(list(results.values()))
+        elapsed = time.perf_counter() - t0
+        deltas = eng._merge(results, rebuild=True)
+        sub_n = sub_e = 0
+        r_lab = None  # batch mode keeps no warm-start state
+        rlab_events = 0
+    else:
+        rec_mask, frac = eng.pem.recompute_mask(g, upd_ids)
+        n_rec = int(rec_mask.sum())
+        storm = n_rec > ecfg.full_graph_frac * n_live
+
+        if storm:
+            # update storm — full pass, warm-started label RWR (paper: "too
+            # many vertices updated to be re-computed" case), gated by the
+            # staleness-keyed seed cache
+            ell = eng._full_ell
+            if (ecfg.seed_cache_staleness > 0 and state.r_lab is not None
+                    and rlab_events <= ecfg.seed_cache_staleness):
+                r_lab = state.r_lab
+                rlab_hit = True
+                eng.rlab_hits += 1
+            else:
+                r_lab = eng._label_table(
+                    g, r0=state.r_lab,
+                    iters=(None if state.r_lab is None
+                           else cfg.rwr_iters_incremental),
+                    ell=ell)
+                rlab_events = 0
+                rlab_version += 1
+                eng.rlab_misses += 1
+            sf = jnp.asarray(rec_mask)
+            mask_key = hash(rec_mask.tobytes())
+            results = {}
+            bucket_hits = []
+            for shape, bucket in eng.buckets.items():
+                memo_key = (rlab_version, bucket.version, mask_key)
+                hit = eng._seed_memo.get(shape)
+                if hit is not None and hit[0] == memo_key:
+                    seeds = hit[1]
+                    bucket_hits.append(True)
+                    eng.seed_hits += 1
+                else:
+                    seeds = bucket.seeds(g, r_lab, sf)
+                    eng._seed_memo[shape] = (memo_key, seeds)
+                    bucket_hits.append(False)
+                    eng.seed_misses += 1
+                results[shape] = bucket.match(g, r_lab, seed_filter=sf,
+                                              ell=ell, seeds=seeds)
+            seed_hit = bool(bucket_hits) and all(bucket_hits)
+            jax.block_until_ready(list(results.values()))
+            elapsed = time.perf_counter() - t0
+            deltas = eng._merge(results)
+            sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
+        else:
+            sub = extract_induced(
+                g, rec_mask,
+                ell_k=cfg.ell_width if eng.ell_cache is not None else None)
+            r_sub = eng._label_table(sub.graph, ell=sub.ell)
+            results = {shape: bucket.match(sub.graph, r_sub, ell=sub.ell)
+                       for shape, bucket in eng.buckets.items()}
+            jax.block_until_ready(list(results.values()))
+            elapsed = time.perf_counter() - t0
+            deltas = eng._merge(results, remap=sub.local_to_global)
+            sub_n, sub_e = sub.n_nodes, sub.n_edges
+            r_lab = state.r_lab  # full-graph warm start unchanged
+
+        community, rl_loss = eng.pem.feedback(g, frac, elapsed)
+
+    new_state = state.evolve(graph=g, r_lab=r_lab, rlab_events=rlab_events,
+                             rlab_version=rlab_version,
+                             step_idx=state.step_idx + 1)
+    out = StepOutput(
+        step=state.step_idx, elapsed=elapsed, n_recompute=n_rec,
+        frac_affected=frac, community_size=community, rl_loss=rl_loss,
+        storm=storm, subgraph_nodes=sub_n, subgraph_edges=sub_e,
+        ell_refresh_s=refresh_s, n_pruned=n_pruned, n_events=n_events,
+        rlab_cache_hit=rlab_hit, seed_cache_hit=seed_hit, deltas=deltas)
+    return new_state, out

@@ -1,0 +1,105 @@
+"""Device-sharded bucket execution — the query axis over a 1-D mesh.
+
+Rows of a bucket bank are independent programs in the content-independent
+(``memo=False``) schedule, so the bank match parallelizes over the query
+axis with ZERO collectives: ``shard_map`` splits the bank tensors and the
+per-row seeds over a ``("q",)`` mesh, every device runs the same expansion
+on its row slice against the replicated graph, and the results concatenate
+back along the row axis. Bit-identical to the single-device vmap path —
+no cross-row reductions exist to reorder (pinned in
+``tests/test_engine_sharding.py`` under 4 forced host devices).
+
+Falls back to the plain jit path when one device is visible; shard counts
+are capped at the largest power of two dividing both the device count and
+``B_pad``, so every shard carries the same static row slice.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax ≥ 0.6 promoted shard_map out of experimental
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.graph import DynamicGraph
+from repro.core.gray import GRayResult
+from repro.core.query import QueryBank
+from repro.sparse.ell import EllGraph
+
+
+def query_shard_count(b_pad: int, shard: str = "auto") -> int:
+    """Shards for a ``b_pad``-row bucket: the largest pow-2 ≤ min(devices,
+    rows). 1 disables the shard_map path (plain jit + vmap)."""
+    if shard == "off":
+        return 1
+    if shard != "auto":
+        raise ValueError(f"unknown shard policy {shard!r}")
+    cap = min(len(jax.devices()), b_pad)
+    n = 1
+    while n * 2 <= cap:
+        n *= 2
+    return n
+
+
+class ShardedBankMatch:
+    """``shard_map`` wrapper around one bucket matcher's ``_match_impl``."""
+
+    def __init__(self, matcher, n_shards: int):
+        assert not matcher.memo, "sharded buckets require memo=False"
+        self.matcher = matcher
+        self.n_shards = n_shards
+        self.mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("q",))
+        self._fns = {}  # keyed by ell presence (distinct arg structure)
+
+    def _build(self, g: DynamicGraph, ell: Optional[EllGraph]):
+        rep, q = P(), P("q")
+        g_spec = jax.tree.map(lambda _: rep, g)
+        bank_specs = (q,) * 7  # labels, mask, anchor, order_* — all row-major
+        out_specs = GRayResult(q, q, q, q, q)
+        if ell is not None:
+            ell_spec = jax.tree.map(lambda _: rep, ell)
+
+            def f(g_, r_lab, seed_ids, seed_mask, ell_, labels, mask, anchor,
+                  osrc, odst, otree, omask):
+                return self.matcher._match_impl(
+                    g_, r_lab, seed_ids, seed_mask, ell_, labels, mask,
+                    anchor, osrc, odst, otree, omask)
+
+            in_specs = (g_spec, rep, q, q, ell_spec) + bank_specs
+        else:
+            def f(g_, r_lab, seed_ids, seed_mask, labels, mask, anchor,
+                  osrc, odst, otree, omask):
+                return self.matcher._match_impl(
+                    g_, r_lab, seed_ids, seed_mask, None, labels, mask,
+                    anchor, osrc, odst, otree, omask)
+
+            in_specs = (g_spec, rep, q, q) + bank_specs
+        return jax.jit(shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False))
+
+    def __call__(self, g: DynamicGraph, r_lab: jnp.ndarray,
+                 seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
+                 ell: Optional[EllGraph], bank: QueryBank) -> GRayResult:
+        key = ell is not None
+        if key not in self._fns:
+            self._fns[key] = self._build(g, ell)
+        args = (g, r_lab, seed_ids, seed_mask)
+        if ell is not None:
+            args = args + (ell,)
+        return self._fns[key](*args, bank.labels, bank.mask, bank.anchor,
+                              bank.order_src, bank.order_dst,
+                              bank.order_tree, bank.order_mask)
+
+    def trace_count(self) -> int:
+        n = 0
+        for fn in self._fns.values():
+            size = getattr(fn, "_cache_size", None)
+            n += size() if size is not None else 0
+        return n

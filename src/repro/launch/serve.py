@@ -70,20 +70,53 @@ def serve_bst(arch) -> None:
           f"probs[:4]={np.asarray(probs)[:4].round(3)}")
 
 
+def _parse_membership_events(register, retire):
+    """``--register STEP:SHAPE`` / ``--retire STEP:QID`` → {step: [action]}."""
+    events = {}
+    for kind, specs in (("register", register or ()),
+                        ("retire", retire or ())):
+        for item in specs:
+            step_s, _, arg = item.partition(":")
+            if not arg:
+                raise SystemExit(
+                    f"--{kind} wants STEP:{'SHAPE' if kind == 'register' else 'QID'}"
+                    f", got {item!r}")
+            events.setdefault(int(step_s), []).append((kind, arg))
+    return events
+
+
+def _occupancy_str(server) -> str:
+    return " ".join(f"{q}x{qe}x{b}:{live}/{pad}"
+                    for (q, qe, b), (live, pad)
+                    in sorted(server.occupancy().items()))
+
+
 def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
-               policy_dir: str = "") -> None:
+               policy_dir: str = "", register=(), retire=()) -> None:
     """Continuous multi-query match serving on a synthetic churn stream.
 
     One MatchServer serves a ``bank``-sized standing-query zoo against a
     generated update stream (deletion traffic via ``--churn``, periodic
-    bursts via ``--hotspot``); per-step match deltas and the closing
-    telemetry snapshot are printed. ``--policy-dir`` persists/restores the
-    learned PEM policy across invocations (DESIGN.md §3).
+    bursts via ``--hotspot``); per-step match deltas, per-bucket occupancy,
+    and the closing telemetry snapshot are printed. Scripted membership
+    events exercise the engine's dynamic banks from the CLI:
+
+      --register 3:triangle   register a triangle at step 3 (also: square,
+                              star5, clique4 — repeatable)
+      --retire 5:triangle#1   retire a query by qid at step 5 (qids are
+                              printed when registered)
+
+    ``--policy-dir`` persists/restores the learned PEM policy across
+    invocations (DESIGN.md §3/§4).
     """
     from repro.config.base import ServingConfig
-    from repro.core.query import query_zoo
+    from repro.core.query import clique4, query_zoo, square, star5, triangle
     from repro.data.temporal import TemporalGraphSpec, generate_stream
     from repro.serving import MatchServer
+
+    shapes = {"triangle": triangle, "square": square, "star5": star5,
+              "clique4": clique4}
+    membership = _parse_membership_events(register, retire)
 
     cfg = arch.model
     n = min(cfg.n_max, 1024)
@@ -93,6 +126,7 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
     stream = generate_stream(spec, n_measured_steps=steps, u_max=512,
                              n_max=cfg.n_max, e_max=cfg.e_max)
     server = MatchServer(cfg, query_zoo(bank), ServingConfig(), seed=0)
+    print(f"[serve] buckets: {_occupancy_str(server)}")
     if policy_dir:
         try:
             at = server.load_policy(policy_dir)
@@ -101,18 +135,37 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
         except FileNotFoundError:
             print(f"[serve] no policy in {policy_dir} — starting fresh")
 
-    g, stats = server.run(stream.graph, stream.updates)
+    g = stream.graph
+    stats = []
+    for t, upd in enumerate(stream.updates):
+        for kind, arg in membership.get(t, ()):
+            if kind == "register":
+                if arg not in shapes:
+                    raise SystemExit(f"unknown query shape {arg!r} "
+                                     f"(have: {sorted(shapes)})")
+                qid = server.register(shapes[arg]())
+                print(f"[serve] step {t}: registered {arg} as qid={qid}  "
+                      f"buckets: {_occupancy_str(server)}")
+            else:
+                server.retire(arg)
+                print(f"[serve] step {t}: retired qid={arg}  "
+                      f"buckets: {_occupancy_str(server)}")
+        server.submit_update(upd)
+        g, st = server.step(g)
+        stats.append(st)
     for st in stats:
-        top = max(st.deltas, key=lambda d: d.n_new)
+        top = (max(st.deltas, key=lambda d: d.n_new) if st.deltas else None)
+        top_s = f"top={top.query}(+{top.n_new})" if top else "no live queries"
         print(f"[serve] step {st.step}: {st.elapsed * 1e3:6.1f} ms  "
               f"events={st.n_events:4d} recompute={st.n_recompute:5d} "
               f"new={st.n_new_patterns:3d} pruned={st.n_pruned:2d} "
-              f"c={st.community_size}  top={top.query}(+{top.n_new})")
+              f"c={st.community_size}  {top_s}")
     snap = server.telemetry.snapshot()
-    print(f"[serve] bank={bank} steps={snap['steps']} "
+    print(f"[serve] bank={len(server.queries)} steps={snap['steps']} "
           f"p50={snap['p50_step_ms']:.1f}ms p99={snap['p99_step_ms']:.1f}ms "
           f"{snap['updates_per_s']:.0f} upd/s {snap['patterns_per_s']:.1f} "
           f"pat/s recompute={snap['recompute_frac']:.2f}")
+    print(f"[serve] buckets: {_occupancy_str(server)}")
     print(f"[serve] queue: {server.queue.stats()}")
     if policy_dir:
         server.save_policy(policy_dir)
@@ -133,6 +186,14 @@ def main() -> None:
                     help="igpm: periodic burst steps on a hot region")
     ap.add_argument("--policy-dir", default="",
                     help="igpm: persist/restore the PEM policy here")
+    ap.add_argument("--register", action="append", default=[],
+                    metavar="STEP:SHAPE",
+                    help="igpm: register a standing query mid-stream "
+                         "(triangle|square|star5|clique4); repeatable")
+    ap.add_argument("--retire", action="append", default=[],
+                    metavar="STEP:QID",
+                    help="igpm: retire a standing query mid-stream; "
+                         "repeatable")
     args = ap.parse_args()
     arch = get_arch(args.arch, smoke=True)
     if arch.family == "lm":
@@ -141,7 +202,8 @@ def main() -> None:
         serve_bst(arch)
     elif arch.family == "igpm":
         serve_igpm(arch, args.steps, args.bank, args.churn, args.hotspot,
-                   policy_dir=args.policy_dir)
+                   policy_dir=args.policy_dir, register=args.register,
+                   retire=args.retire)
     else:
         raise SystemExit(f"{args.arch} ({arch.family}) has no serve path")
 

@@ -1,21 +1,20 @@
-"""MatchServer — continuous multi-query match serving (DESIGN.md §3).
+"""MatchServer — continuous multi-query match serving (DESIGN.md §3/§4).
 
-One server owns a *bank* of standing queries and one update stream. Per
-serving step it drains a micro-batch from the bounded ingress queue and
-pays the expensive shared work exactly ONCE for the whole bank:
+One server owns a registry of *standing queries* and one update stream.
+It is the serving shell around the one :class:`repro.engine.Engine` step
+pipeline: per serving step it drains a micro-batch from the bounded
+ingress queue, hands the packed :class:`UpdateBatch` to
+``engine.step(state, batch)``, and fans the engine's per-query
+:class:`~repro.engine.QueryDelta`s out as :class:`MatchDelta`
+subscription payloads (StreamWorks-style standing queries, PAPERS.md).
 
-  1. ``apply_update`` + incremental ELL-mirror refresh (one graph state)
-  2. PEM recompute mask (one Louvain cut, one DQN-controlled threshold)
-  3. induced-subgraph extraction (or the full-graph storm fallback)
-  4. the label-conditioned RWR table ``r_lab`` (query-independent)
-  5. a :class:`~repro.core.gray.BankGRayMatcher` match — expansion vmapped
-     over the query axis, per-step RWR/BFS sweeps batched ``(n, B·k)``
-
-only the final host-side merge into per-query :class:`PatternStore`s is
-per-query, and it emits a :class:`MatchDelta` per registered query per
-step — the subscription payload of a continuous-query system (StreamWorks-
-style standing queries, PAPERS.md). Telemetry tracks p50/p99 step latency,
-updates/sec, patterns/sec, and the recompute fraction.
+The server owns ONLY serving concerns — ingress back-pressure/coalescing,
+telemetry (p50/p99 step latency, updates/sec, patterns/sec, the engine's
+seed-cache hit/miss counters), and dynamic membership (``register``/
+``retire`` standing queries mid-stream; inside a padded bucket these are
+device row writes, never recompilations). The matching pipeline — apply +
+ELL refresh, PEM mask, induced extraction, label RWR, per-bucket bank
+G-Ray sweep, store merge — lives in ``repro.engine.core.engine_step``.
 """
 
 from __future__ import annotations
@@ -24,19 +23,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.config.base import IGPMConfig, ServingConfig
-from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
-                              apply_update, updated_vertices)
-from repro.core.gray import BankGRayMatcher
-from repro.core.matcher import PatternStore, live_vertex_mask
-from repro.core.pem import PartialExecutionManager
-from repro.core.query import Query, stack_queries
-from repro.core.subgraph import extract_induced, remap_matched
+from repro.core.graph import DynamicGraph, UpdateBatch
+from repro.core.query import Query
+from repro.engine import Engine, EngineState, PatternStore
 from repro.serving.queue import UpdateEvent, UpdateQueue
 from repro.serving.telemetry import Telemetry
 
@@ -73,54 +66,71 @@ class ServingStepStats:
 
 
 class MatchServer:
-    """Serve a bank of standing queries against one update stream."""
+    """Serve a dynamic bank of standing queries against one update stream."""
 
     def __init__(self, cfg: IGPMConfig, queries: Sequence[Query],
                  serving: Optional[ServingConfig] = None, seed: int = 0):
         serving = serving or ServingConfig()
         self.cfg = cfg
         self.serving = serving
-        self.queries = tuple(queries)
-        self.bank = stack_queries(queries, q_max=serving.q_max,
-                                  qe_max=serving.qe_max)
-        self.matcher = BankGRayMatcher(
-            self.bank, cfg.n_labels, cfg.top_k_patterns,
-            rwr_iters=cfg.rwr_iters, restart=cfg.restart_prob,
-            bridge_hops=cfg.bridge_hops, backend=cfg.backend,
-            ell_width=cfg.ell_width)
-        self.pem = PartialExecutionManager(cfg, adaptive=serving.adaptive,
-                                           seed=seed)
+        self.engine = Engine(cfg, serving.engine(), seed=seed)
+        self._qids: List[str] = [self.engine.register(q) for q in queries]
         self.queue = UpdateQueue(depth=serving.queue_depth,
                                  policy=serving.drop_policy,
                                  coalesce=serving.coalesce)
         self.telemetry = Telemetry(serving.telemetry_window)
-        self.stores = [PatternStore() for _ in self.queries]
-        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width)
-                          if cfg.backend == "ell" else None)
         # every event lane is padded independently; undirected edges emit
         # two arcs, so a full window of one kind bounds the batch width
         self.u_max = 2 * serving.microbatch_window
-        self._r_lab: Optional[jnp.ndarray] = None
-        self._q_masks = [np.asarray(self.bank.mask[i])
-                         for i in range(self.bank.n_queries)]
-        self._v_max = 4 * 1024
-        self.step_idx = 0
+        self._state: Optional[EngineState] = None
         self._drops_seen = 0
+
+    # engine-owned pieces the historical API exposed -------------------------
+
+    @property
+    def queries(self) -> Tuple[Query, ...]:
+        return tuple(self.engine.query(qid) for qid in self._qids)
+
+    @property
+    def stores(self) -> List[PatternStore]:
+        return [self.engine.stores[qid] for qid in self._qids]
+
+    @property
+    def pem(self):
+        return self.engine.pem
+
+    @property
+    def step_idx(self) -> int:
+        return self._state.step_idx if self._state is not None else 0
 
     def reset(self) -> None:
         """Clear accumulated serving state but KEEP jit caches — benchmark
         warm/measure passes replay identical streams on one instance."""
-        self.stores = [PatternStore() for _ in self.queries]
+        self.engine.reset()
         self.telemetry = Telemetry(self.serving.telemetry_window)
         self.queue = UpdateQueue(depth=self.serving.queue_depth,
                                  policy=self.serving.drop_policy,
                                  coalesce=self.serving.coalesce)
-        self._r_lab = None
-        self.step_idx = 0
+        self._state = None
         self._drops_seen = 0
-        if self.ell_cache is not None:
-            self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
-                                      self.cfg.ell_width)
+
+    # -- dynamic membership ---------------------------------------------------
+
+    def register(self, query: Query, qid: Optional[str] = None) -> str:
+        """Register a standing query mid-stream; inside an existing bucket
+        this is a device row write (zero recompilations)."""
+        qid = self.engine.register(query, qid=qid)
+        self._qids.append(qid)
+        return qid
+
+    def retire(self, qid: str) -> None:
+        """Retire a standing query (and its pattern store) mid-stream."""
+        self.engine.retire(qid)
+        self._qids.remove(qid)
+
+    def occupancy(self) -> Dict[Tuple[int, int, int], Tuple[int, int]]:
+        """Per-bucket (live rows, padded rows), keyed (q_max, qe_max, B_pad)."""
+        return self.engine.occupancy()
 
     # -- ingress -------------------------------------------------------------
 
@@ -159,99 +169,33 @@ class MatchServer:
 
     # -- the serving step ----------------------------------------------------
 
-    def _apply(self, g: DynamicGraph,
-               upd: UpdateBatch) -> Tuple[DynamicGraph, float]:
-        if self.ell_cache is None:
-            return apply_update(g, upd), 0.0
-        if self.ell_cache._last is not g:
-            self.ell_cache.rebuild(g)
-        g2 = apply_update(g, upd)
-        t0 = time.perf_counter()
-        self.ell_cache.refresh(g, g2, upd)
-        jax.block_until_ready(self.ell_cache._cols_d)
-        return g2, time.perf_counter() - t0
-
-    @property
-    def _full_ell(self):
-        return None if self.ell_cache is None else self.ell_cache.ell
-
     def step(self, g: DynamicGraph) -> Tuple[DynamicGraph, ServingStepStats]:
-        """Drain one micro-batch and run the shared pipeline + bank match."""
+        """Drain one micro-batch and run the engine pipeline once."""
         t_start = time.perf_counter()
         events = self.queue.drain(self.serving.microbatch_window)
         upd = UpdateQueue.pack(events, self.u_max)
-        g, refresh_s = self._apply(g, upd)
-        ids, mask = updated_vertices(g, upd, self._v_max)
-        upd_ids = np.asarray(jnp.where(mask, ids, -1))
-        jax.block_until_ready(g)
+        if self._state is None or self._state.graph is not g:
+            # fresh stream (or caller-rebuilt graph): re-anchor the state
+            self._state = self.engine.init_state(g)
+        self._state, out = self.engine.step(self._state, upd)
 
-        n_pruned = 0
-        if (any(s.total for s in self.stores)
-                and bool(np.asarray(upd.rem_mask).any())):
-            live = live_vertex_mask(g)
-            n_pruned = sum(s.prune(live) for s in self.stores)
-
-        t0 = time.perf_counter()
-        rec_mask, frac = self.pem.recompute_mask(g, upd_ids)
-        n_live = max(int(np.asarray(g.node_mask).sum()), 1)
-        n_rec = int(rec_mask.sum())
-
-        if n_rec > self.serving.full_graph_frac * n_live:
-            # update storm — full pass, warm-started label RWR
-            ell = self._full_ell
-            if self._r_lab is None:
-                r_lab = self.matcher.label_table(g, ell=ell)
-            else:
-                r_lab = self.matcher.label_table(
-                    g, r0=self._r_lab,
-                    iters=self.cfg.rwr_iters_incremental, ell=ell)
-            self._r_lab = r_lab
-            res = self.matcher.match(g, r_lab,
-                                     seed_filter=jnp.asarray(rec_mask),
-                                     ell=ell)
-            jax.block_until_ready(res)
-            elapsed = time.perf_counter() - t0
-            matched = np.asarray(res.matched)
-            sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
-        else:
-            sub = extract_induced(
-                g, rec_mask,
-                ell_k=self.cfg.ell_width if self.ell_cache else None)
-            r_lab = self.matcher.label_table(sub.graph, ell=sub.ell)
-            res = self.matcher.match(sub.graph, r_lab, ell=sub.ell)
-            jax.block_until_ready(res)
-            matched = remap_matched(np.asarray(res.matched),
-                                    sub.local_to_global)
-            elapsed = time.perf_counter() - t0
-            sub_n, sub_e = sub.n_nodes, sub.n_edges
-
-        deltas = self._merge(matched, res)
-        c, loss = self.pem.feedback(g, frac, elapsed)
         st = ServingStepStats(
-            step=self.step_idx, elapsed=elapsed,
+            step=out.step, elapsed=out.elapsed,
             total_s=time.perf_counter() - t_start, n_events=len(events),
-            n_recompute=n_rec, frac_affected=frac, community_size=c,
-            rl_loss=loss, deltas=deltas, n_pruned=n_pruned,
-            ell_refresh_s=refresh_s, subgraph_nodes=sub_n,
-            subgraph_edges=sub_e)
+            n_recompute=out.n_recompute, frac_affected=out.frac_affected,
+            community_size=out.community_size, rl_loss=out.rl_loss,
+            deltas=[MatchDelta(d.name, d.n_new, d.total, d.exact)
+                    for d in out.deltas],
+            n_pruned=out.n_pruned, ell_refresh_s=out.ell_refresh_s,
+            subgraph_nodes=out.subgraph_nodes,
+            subgraph_edges=out.subgraph_edges)
         dropped = self.queue.n_dropped - self._drops_seen
         self._drops_seen = self.queue.n_dropped
         self.telemetry.record_step(st.total_s, len(events),
-                                   st.n_new_patterns, frac,
+                                   st.n_new_patterns, out.frac_affected,
                                    n_dropped=dropped)
-        self.step_idx += 1
-        return g, st
-
-    def _merge(self, matched: np.ndarray, res) -> List[MatchDelta]:
-        goodness = np.asarray(res.goodness)
-        exact = np.asarray(res.exact)
-        valid = np.asarray(res.valid)
-        deltas = []
-        for i, (q, store) in enumerate(zip(self.queries, self.stores)):
-            new = store.merge_arrays(matched[i], goodness[i], exact[i],
-                                     valid[i], self._q_masks[i])
-            deltas.append(MatchDelta(q.name, new, store.total, store.exact))
-        return deltas
+        self.telemetry.record_counters(self.engine.counters())
+        return self._state.graph, st
 
     def run(self, g: DynamicGraph,
             event_batches: Iterable[UpdateBatch] = (),
@@ -273,10 +217,31 @@ class MatchServer:
                 break
         return g, stats
 
-    # -- policy persistence (restarts) ---------------------------------------
+    # -- persistence (restarts) ----------------------------------------------
+
+    def save(self, directory: str, step: Optional[int] = None) -> None:
+        """Whole-engine checkpoint: graph, warm-start tables, bucket banks,
+        PEM/DQN state, pattern stores (DESIGN.md §4)."""
+        if self._state is None:
+            raise ValueError("nothing to save before the first step")
+        self.engine.save(self._state, directory, step=step)
+
+    def load(self, g: DynamicGraph, directory: str,
+             step: Optional[int] = None) -> int:
+        """Restore a whole-engine checkpoint (the same queries must be
+        registered); the restored graph replaces ``g``."""
+        self._state, step = self.engine.load(self.engine.init_state(g),
+                                             directory, step=step)
+        return step
+
+    @property
+    def graph(self) -> Optional[DynamicGraph]:
+        return self._state.graph if self._state is not None else None
+
+    # -- policy-only persistence (pre-engine compatibility) -------------------
 
     def policy_state(self) -> Dict:
-        if self.pem.agent is None:
+        if self.pem is None or self.pem.agent is None:
             raise ValueError("non-adaptive server has no policy to persist")
         return {"agent": self.pem.agent.state_dict(),
                 "community_size": np.asarray(self.pem.c, np.int64)}

@@ -26,6 +26,13 @@ class Telemetry:
         self.n_dropped = 0
         self._recompute_sum = 0.0
         self._t0: Optional[float] = None
+        # free-form monotone counters (e.g. the engine's storm seed-cache
+        # hit/miss counts) — merged into snapshot() verbatim
+        self.counters: Dict[str, int] = {}
+
+    def record_counters(self, counters: Dict[str, int]) -> None:
+        """Absorb a counter snapshot (values are absolutes, not deltas)."""
+        self.counters.update(counters)
 
     def record_step(self, latency_s: float, n_updates: int,
                     n_new_patterns: int, recompute_frac: float,
@@ -61,4 +68,5 @@ class Telemetry:
             "patterns_per_s": self.n_patterns / wall if wall > 0 else 0.0,
             "recompute_frac": self._recompute_sum / steps,
             "dropped_events": self.n_dropped,
+            **self.counters,
         }
