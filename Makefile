@@ -5,7 +5,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test fast bench-kernels bench-backends serve-smoke engine-smoke
+.PHONY: verify test fast bench-kernels bench-backends serve-smoke \
+    engine-smoke sweep-smoke
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -31,10 +32,17 @@ bench-backends:
 serve-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/serving_bench.py --smoke
 
-# engine multi-device smoke: sharded-vs-vmap equality under 4 forced host
+# engine multi-device smoke: query-axis sharded-vs-vmap equality AND the
+# graph-axis (2-D mesh) bitwise-equivalence suite under 4 forced host
 # devices, then the 1/2/4-device bank-16 sweep (each device count in its
 # own forced-platform subprocess) — what the CI multi-device job runs
 engine-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-	    $(PY) -m pytest tests/test_engine_sharding.py -q
-	PYTHONPATH=src:. $(PY) benchmarks/engine_bench.py --smoke
+	    $(PY) -m pytest tests/test_engine_sharding.py \
+	    tests/test_graph_sharding.py -q
+	PYTHONPATH=src:. $(PY) benchmarks/engine_bench.py --smoke --query-only
+
+# graph-axis n_max-scaling sweep in smoke mode: 1/2/4 forced devices ×
+# storm-forced serving with the vertices sharded over ("g",)
+sweep-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/engine_bench.py --smoke --graph-only

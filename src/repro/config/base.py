@@ -152,6 +152,22 @@ class BSTConfig:
     leaky_slope: float = 0.01
 
 
+def resolve_backend(backend: str) -> str:
+    """Resolve the ``'auto'`` sweep backend at config-resolve time.
+
+    ``'ell'`` on TPU (the Pallas kernels lower to Mosaic there); ``'coo'``
+    everywhere else — off-TPU the ELL kernels run under Pallas interpret
+    mode, which ``benchmarks/out/kernels_bench.json`` shows is ~5× slower
+    than the COO gather/segment path on CPU, so an unconditional ``'ell'``
+    default pessimizes every CPU run (CI, laptops).
+    """
+    if backend != "auto":
+        return backend
+    import jax  # local import keeps this module import-light
+
+    return "ell" if jax.default_backend() == "tpu" else "coo"
+
+
 @dataclass(frozen=True)
 class IGPMConfig:
     """The paper's own system configuration (§III–IV)."""
@@ -161,15 +177,22 @@ class IGPMConfig:
     e_max: int = 65536
     ell_width: int = 64  # padded neighbor-list width K
     # sparse-sweep backend for the RWR/G-Ray hot path:
-    #   'ell' — Pallas ELL SpMV/reach kernels over the incrementally
-    #           maintained ELL mirror (the production path, DESIGN.md §2)
-    #   'coo' — irregular gather/segment ops over the live COO arcs
-    backend: str = "ell"
+    #   'ell'  — Pallas ELL SpMV/reach kernels over the incrementally
+    #            maintained ELL mirror (the production path, DESIGN.md §2)
+    #   'coo'  — irregular gather/segment ops over the live COO arcs
+    #   'auto' — 'ell' on TPU, 'coo' elsewhere (see :func:`resolve_backend`)
+    backend: str = "auto"
     n_labels: int = 4
     # RWR
     restart_prob: float = 0.15  # c in the paper's RWR
     rwr_iters: int = 30
     rwr_iters_incremental: int = 5  # warm-started sweeps
+    # residual-adaptive RWR: tol > 0 replaces the fixed-count sweep scan
+    # with a lax.while_loop that stops once the ∞-norm residual
+    # ‖r − (c·e + (1−c)·Pᵀr)‖∞ drops to tol (rwr_iters stays the hard cap),
+    # so warm-started incremental steps converge in a few sweeps instead of
+    # paying the full fixed count. 0 keeps the exact fixed-iteration path.
+    rwr_tol: float = 0.0
     # G-Ray
     max_query_nodes: int = 8
     bridge_hops: int = 4
@@ -210,24 +233,38 @@ class EngineConfig:
     ``seed_cache_staleness`` bounds the storm-fallback seed cache: when a
     storm step finds the label-RWR table at most this many applied update
     events stale, the (n, L) warm-start sweeps are skipped and the cached
-    per-bucket seed top-k is reused as long as the recompute mask is
-    unchanged too. 0 disables the cache (every storm step refreshes, the
+    per-bucket seed top-k is reused as long as the recompute mask is close
+    enough too — within ``seed_cache_hamming`` flipped vertices of the mask
+    the cached seeds were computed for (0 = the exact-match memo). 0
+    staleness disables the cache (every storm step refreshes, the
     pre-engine behavior). ``shard="auto"`` runs each bucket's match through
     ``shard_map`` over the query axis when >1 device is visible (vmap on
     one device); ``"off"`` pins the single-device path.
+
+    ``graph_shard="auto"`` adds the second mesh axis: vertices partition
+    over a ``"g"`` axis, the full-graph RWR/BFS sweeps run shard-local
+    (COO: receiver-masked partial segment-sum + psum; ELL: per-shard row
+    blocks + all_gather) and each bucket's storm/batch match runs on a 2-D
+    ``(q, g)`` mesh. Bit-identical to the replicated path by construction
+    (DESIGN.md §5); ``"off"`` (default) keeps the graph replicated. When
+    both axes are ``"auto"`` the device pool splits between them
+    (graph axis ≤ √devices); with ``shard="off"`` the graph axis may take
+    every device.
     """
 
     mode: str = "incremental"        # | 'batch'
     adaptive: bool = True
     full_graph_frac: float = 0.5     # update-storm full-pass threshold
     seed_cache_staleness: int = 0    # events; 0 = always refresh
+    seed_cache_hamming: int = 0      # mask Hamming bound for seed reuse
     # bucket padding: pow-2 roundup of (query vertices, schedule length)
     # with these floors, capped by (q_cap, qe_cap)
     q_floor: int = 4
     qe_floor: int = 4
     q_cap: int = 8
     qe_cap: int = 16
-    shard: str = "auto"              # | 'off'
+    shard: str = "auto"              # query axis: | 'off'
+    graph_shard: str = "off"         # graph axis: | 'auto'
     v_max: int = 4096                # updated-vertex buffer width
 
 
@@ -259,7 +296,9 @@ class ServingConfig:
     qe_max: int = 16
     # storm-fallback seed cache bound (events; 0 = off — see EngineConfig)
     seed_cache_staleness: int = 0
-    shard: str = "auto"               # bucket execution: 'auto' | 'off'
+    seed_cache_hamming: int = 0       # mask Hamming bound for seed reuse
+    shard: str = "auto"               # query-axis bucket execution | 'off'
+    graph_shard: str = "off"          # graph-axis sweep sharding | 'auto'
 
     def engine(self) -> EngineConfig:
         """The engine configuration this serving configuration implies."""
@@ -267,7 +306,9 @@ class ServingConfig:
             mode="incremental", adaptive=self.adaptive,
             full_graph_frac=self.full_graph_frac,
             seed_cache_staleness=self.seed_cache_staleness,
-            q_cap=self.q_max, qe_cap=self.qe_max, shard=self.shard)
+            seed_cache_hamming=self.seed_cache_hamming,
+            q_cap=self.q_max, qe_cap=self.qe_max, shard=self.shard,
+            graph_shard=self.graph_shard)
 
 
 # ---------------------------------------------------------------------------

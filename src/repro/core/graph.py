@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sparse.ell import EllGraph, build_ell, ell_row_capacity
+from repro.sparse.ell import (EllGraph, build_ell, build_ell_sharded,
+                              ell_block_capacity, ell_row_capacity)
 
 
 class DynamicGraph(NamedTuple):
@@ -280,18 +281,26 @@ def transition_weights(g: DynamicGraph) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def ell_from_graph(g: DynamicGraph, k: int,
-                   r_cap: Optional[int] = None) -> EllGraph:
+                   r_cap: Optional[int] = None,
+                   n_shards: int = 1) -> EllGraph:
     """Fresh *incoming*-adjacency ELL of the live arcs (host-side build).
 
     Row owner = receiver, columns = senders, unit weights: exactly the
     gather direction of the RWR sweep (``agg[v] = Σ_{u→v} …``) and the
     bounded-BFS frontier sweep. ``r_cap`` defaults to the graph's static
     worst case so every graph with the same (n_max, e_max, k) shares one
-    jit signature.
+    jit signature. ``n_shards > 1`` emits the shard-local row-block layout
+    of the graph mesh axis instead (``build_ell_sharded`` — per-slice row
+    blocks, local ``row_ids``, ``r_cap`` then caps one block).
     """
     em = np.asarray(g.edge_mask)
     s = np.asarray(g.senders)[em]
     r = np.asarray(g.receivers)[em]
+    if n_shards > 1:
+        if r_cap is None:
+            r_cap = ell_block_capacity(g.n_max, g.e_max, k, n_shards)
+        return build_ell_sharded(r, s, g.n_max, n_shards, k=k,
+                                 r_cap_block=r_cap)
     if r_cap is None:
         r_cap = ell_row_capacity(g.n_max, g.e_max, k)
     return build_ell(r, s, g.n_max, k=k, r_cap=r_cap)
@@ -311,13 +320,28 @@ class EllCache:
     The device arrays always have the static bucket shape
     ``(ell_row_capacity(n_max, e_max, k), k)``, so the jitted matcher
     compiles once per graph bucket, not per step.
+
+    ``n_shards > 1`` maintains the shard-local row-block layout of the
+    graph mesh axis (DESIGN.md §5): the row axis splits into ``n_shards``
+    equal blocks, block ``d`` holds the rows of vertex slice
+    ``[d·n_loc, (d+1)·n_loc)`` with slice-local ``row_ids`` and its own
+    spill cursor, and ``ell.n`` is the slice width ``n_loc`` — splitting
+    the row axis into ``n_shards`` parts hands each device exactly its
+    block. The per-vertex entry layout (and therefore every reduction
+    order) is identical to the unsharded mirror.
     """
 
-    def __init__(self, n_max: int, e_max: int, k: int):
+    def __init__(self, n_max: int, e_max: int, k: int, n_shards: int = 1):
+        if n_max % n_shards:
+            raise ValueError(
+                f"n_max {n_max} not divisible by n_shards {n_shards}")
         self.n_max = n_max
         self.e_max = e_max
         self.k = k
-        self.r_cap = ell_row_capacity(n_max, e_max, k)
+        self.n_shards = n_shards
+        self.n_loc = n_max // n_shards
+        self.r_cap_block = ell_block_capacity(n_max, e_max, k, n_shards)
+        self.r_cap = n_shards * self.r_cap_block
         self._vals = jnp.ones((self.r_cap, k), jnp.float32)
         self._last: Optional[DynamicGraph] = None
         self.n_rebuilds = 0
@@ -332,23 +356,32 @@ class EllCache:
         n, k = self.n_max, self.k
         deg_in = np.bincount(r, minlength=n)
         rows_per_v = np.maximum(1, -(-deg_in // k))
-        row_start = np.concatenate([[0], np.cumsum(rows_per_v)])
+        # physical start row of every vertex: per-shard compact packing,
+        # each shard based at its block offset, with its own spill cursor
+        start_v = np.zeros(n, np.int64)
+        self._next_row: List[int] = []
+        for d in range(self.n_shards):
+            lo, hi = d * self.n_loc, (d + 1) * self.n_loc
+            cs = (d * self.r_cap_block
+                  + np.concatenate([[0], np.cumsum(rows_per_v[lo:hi])]))
+            start_v[lo:hi] = cs[:-1]
+            self._next_row.append(int(cs[-1]))
         self._rows: List[List[int]] = [
-            list(range(row_start[v], row_start[v + 1])) for v in range(n)]
+            list(range(start_v[v], start_v[v] + rows_per_v[v]))
+            for v in range(n)]
         self._fill = deg_in.astype(np.int64)
-        self._next_row = int(row_start[-1])
         self._cursor = int(np.asarray(g.n_edges))
 
         cols = np.zeros((self.r_cap, k), np.int32)
         mask = np.zeros((self.r_cap, k), bool)
         row_ids = np.zeros(self.r_cap, np.int32)
         for v in range(n):
-            row_ids[row_start[v]:row_start[v + 1]] = v
+            row_ids[start_v[v]:start_v[v] + rows_per_v[v]] = v % self.n_loc
         order = np.argsort(r, kind="stable")
         rs, ss = r[order], s[order]
         pos = np.arange(len(rs)) - np.concatenate([[0], np.cumsum(deg_in)])[rs]
-        cols[row_start[rs] + pos // k, pos % k] = ss
-        mask[row_start[rs] + pos // k, pos % k] = True
+        cols[start_v[rs] + pos // k, pos % k] = ss
+        mask[start_v[rs] + pos // k, pos % k] = True
         self._cols_h, self._mask_h, self._row_ids_h = cols, mask, row_ids
         self._cols_d = jnp.asarray(cols)
         self._mask_d = jnp.asarray(mask)
@@ -363,12 +396,13 @@ class EllCache:
         p = int(self._fill[v])
         ri = p // self.k
         if ri == len(self._rows[v]):
-            if self._next_row >= self.r_cap:
+            shard = v // self.n_loc
+            if self._next_row[shard] >= (shard + 1) * self.r_cap_block:
                 return False
-            row = self._next_row
-            self._next_row += 1
+            row = self._next_row[shard]
+            self._next_row[shard] += 1
             self._rows[v].append(row)
-            self._row_ids_h[row] = v
+            self._row_ids_h[row] = v % self.n_loc
             new_rows.add(row)
         row = self._rows[v][ri]
         slot = p % self.k
@@ -480,5 +514,8 @@ class EllCache:
 
     @property
     def ell(self) -> EllGraph:
+        """The mirror as an :class:`EllGraph`. ``n`` is the per-shard
+        segment count: the global vertex count when unsharded, the vertex
+        slice width under the graph mesh axis (row blocks + local ids)."""
         return EllGraph(self._cols_d, self._vals, self._row_ids_d,
-                        self._mask_d, self.n_max)
+                        self._mask_d, self.n_loc)

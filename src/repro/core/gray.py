@@ -40,9 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config.base import resolve_backend
 from repro.core.graph import DynamicGraph, ell_from_graph
+from repro.core.rwr import (_owned_mask, label_rwr, label_rwr_adaptive, rwr,
+                            rwr_adaptive)
 from repro.core.query import Query, QueryBank, stack_queries
-from repro.core.rwr import label_rwr, rwr
 from repro.kernels.spmv_ell.ops import ell_reach_kernel
 from repro.sparse.ell import EllGraph
 
@@ -89,12 +91,21 @@ def _find_seeds_arrays(g: DynamicGraph, r_lab: jnp.ndarray, k: int,
 
 
 def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
-                    ell: Optional[EllGraph] = None) -> jnp.ndarray:
+                    ell: Optional[EllGraph] = None,
+                    axis: Optional[str] = None) -> jnp.ndarray:
     """hops[k_idx, v] = min #edges from sources[k_idx] to v (≤ max_hops),
     else max_hops+1. Batched bounded BFS — the bridge function's path-length
     oracle. The frontier sweep is either an edge-gather/segment-max (COO) or
     the masked-gather max kernel on the ELL layout; both propagate exact 0/1
-    indicators, so the backends are bit-identical."""
+    indicators, so the backends are bit-identical.
+
+    ``axis`` shards the frontier sweep over the graph mesh axis (the
+    receiver-slice partition of DESIGN.md §5): COO masks messages to the
+    shard's slice and combines with a ``pmax``, ELL runs the kernel on the
+    shard-local row block and ``all_gather``-s the slices. Max is
+    idempotent over the indicator range [0, 1] and the non-owner shards
+    contribute exact zeros absorbed by the ``maximum`` against the current
+    frontier, so the sharded sweep stays bit-identical too."""
     k = sources.shape[0]
     reached = jax.nn.one_hot(sources, g.n_max, dtype=jnp.float32).T  # (n,k)
     hops = jnp.where(reached.T > 0, 0, max_hops + 1).astype(jnp.int32)
@@ -104,12 +115,22 @@ def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
 
         def sweep(reached):
             msg = reached[g.senders] * live                  # (E, k)
-            return jax.ops.segment_max(msg, g.receivers,
-                                       num_segments=g.n_max)
+            if axis is not None:
+                msg = jnp.where(
+                    _owned_mask(g.receivers, g.n_max, axis)[:, None],
+                    msg, 0.0)
+            agg = jax.ops.segment_max(msg, g.receivers,
+                                      num_segments=g.n_max)
+            if axis is not None:
+                agg = jax.lax.pmax(agg, axis)
+            return agg
     else:
         def sweep(reached):
-            return ell_reach_kernel(ell.cols, ell.mask, ell.row_ids,
-                                    reached, ell.n)
+            agg = ell_reach_kernel(ell.cols, ell.mask, ell.row_ids,
+                                   reached, ell.n)
+            if axis is not None:
+                agg = jax.lax.all_gather(agg, axis, axis=0, tiled=True)
+            return agg
 
     def body(carry, h):
         reached, hops = carry
@@ -153,7 +174,9 @@ class BankGRayMatcher:
     def __init__(self, bank: QueryBank, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
                  bridge_hops: int = 4, backend: str = "coo",
-                 ell_width: int = 64, memo: bool = True):
+                 ell_width: int = 64, memo: bool = True,
+                 rwr_tol: float = 0.0):
+        backend = resolve_backend(backend)
         if backend not in ("coo", "ell"):
             raise ValueError(f"unknown backend {backend!r}")
         self.bank = bank
@@ -165,6 +188,9 @@ class BankGRayMatcher:
         self.backend = backend
         self.ell_width = ell_width
         self.memo = memo
+        # tol > 0: the per-step expansion sweeps run residual-adaptive
+        # (rwr_iters stays the hard cap) — see IGPMConfig.rwr_tol
+        self.rwr_tol = rwr_tol
         B = bank.n_queries
         if memo:
             # host-static schedule structure: unroll to the longest schedule
@@ -203,7 +229,8 @@ class BankGRayMatcher:
             self.n_steps = bank.qe_max
             self.t_max = bank.q_max
             self.n_tables = B * bank.q_max
-        self._match = jax.jit(self._match_impl)
+        self._match = jax.jit(self._match_impl,
+                              static_argnames=("graph_axis",))
         self._seeds = jax.jit(self._seeds_impl)
 
     # -- public API ---------------------------------------------------------
@@ -221,10 +248,19 @@ class BankGRayMatcher:
                     iters: Optional[int] = None,
                     ell: Optional[EllGraph] = None) -> jnp.ndarray:
         """Label-conditioned RWR table — query-independent, computed ONCE
-        per graph state and shared by every query in the bank."""
-        return label_rwr(g, self.n_labels,
-                         iters=iters if iters is not None else self.rwr_iters,
-                         c=self.restart, r0=r0, ell=self._ell_for(g, ell))
+        per graph state and shared by every query in the bank. Honors
+        ``rwr_tol`` like the expansion sweeps (an explicit ``iters``
+        overrides the cap either way; ``iters=0`` stays the warm-start
+        pass-through)."""
+        iters = iters if iters is not None else self.rwr_iters
+        ell = self._ell_for(g, ell)
+        if self.rwr_tol > 0:
+            r, _ = label_rwr_adaptive(g, self.n_labels, max_iters=iters,
+                                      tol=self.rwr_tol, c=self.restart,
+                                      r0=r0, ell=ell)
+            return r
+        return label_rwr(g, self.n_labels, iters=iters, c=self.restart,
+                         r0=r0, ell=ell)
 
     def seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
               seed_filter: Optional[jnp.ndarray] = None,
@@ -264,13 +300,27 @@ class BankGRayMatcher:
                                                   seed_filter, lq, mq, aq)
         )(q_labels, q_mask, anchor)
 
+    def _rwr(self, g: DynamicGraph, e: jnp.ndarray,
+             ell: Optional[EllGraph],
+             graph_axis: Optional[str]) -> jnp.ndarray:
+        """One shared expansion sweep block — fixed-count or residual-
+        adaptive per ``rwr_tol`` (the hard cap is ``rwr_iters`` either
+        way)."""
+        if self.rwr_tol > 0:
+            r, _ = rwr_adaptive(g, e, max_iters=self.rwr_iters,
+                                tol=self.rwr_tol, c=self.restart, ell=ell,
+                                axis=graph_axis)
+            return r
+        return rwr(g, e, iters=self.rwr_iters, c=self.restart, ell=ell,
+                   axis=graph_axis)
+
     def _match_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
                     seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
                     ell: Optional[EllGraph], q_labels: jnp.ndarray,
                     q_mask: jnp.ndarray, anchor: jnp.ndarray,
                     order_src: jnp.ndarray, order_dst: jnp.ndarray,
-                    order_tree: jnp.ndarray, order_mask: jnp.ndarray
-                    ) -> GRayResult:
+                    order_tree: jnp.ndarray, order_mask: jnp.ndarray,
+                    graph_axis: Optional[str] = None) -> GRayResult:
         B, k = seed_ids.shape
         n = g.n_max
         q_max = q_labels.shape[1]
@@ -310,11 +360,11 @@ class BankGRayMatcher:
                     flat = srcs.reshape(p * k)
                     e = jax.nn.one_hot(flat, n,
                                        dtype=jnp.float32).T      # (n, P·k)
-                    r_new = rwr(g, e, iters=self.rwr_iters, c=self.restart,
-                                ell=ell)
+                    r_new = self._rwr(g, e, ell, graph_axis)
                     r_new = jnp.transpose(r_new.reshape(n, p, k), (1, 0, 2))
                     h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
-                                            ell=ell).reshape(p, k, n)
+                                            ell=ell,
+                                            axis=graph_axis).reshape(p, k, n)
                     b_idx = jnp.asarray([b for b, _, _ in pairs])
                     t_idx = jnp.asarray([t for _, t, _ in pairs])
                     tables_r = tables_r.at[b_idx, t_idx].set(r_new)
@@ -346,11 +396,11 @@ class BankGRayMatcher:
                     flat = srcs.reshape(B * k)
                     e = jax.nn.one_hot(flat, n,
                                        dtype=jnp.float32).T      # (n, B·k)
-                    r_new = rwr(g, e, iters=self.rwr_iters,
-                                c=self.restart, ell=ell)
+                    r_new = self._rwr(g, e, ell, graph_axis)
                     r_new = jnp.transpose(r_new.reshape(n, B, k), (1, 0, 2))
                     h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
-                                            ell=ell).reshape(B, k, n)
+                                            ell=ell,
+                                            axis=graph_axis).reshape(B, k, n)
                     rows = jnp.arange(B)
                     return (t_r.at[rows, src].set(r_new),
                             t_h.at[rows, src].set(h_new))
@@ -416,14 +466,14 @@ class GRayMatcher:
     def __init__(self, query: Query, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
                  bridge_hops: int = 4, backend: str = "coo",
-                 ell_width: int = 64):
+                 ell_width: int = 64, rwr_tol: float = 0.0):
         self.query = query
         self.n_labels = n_labels
         self.k = k
         self.rwr_iters = rwr_iters
         self.restart = restart
         self.bridge_hops = bridge_hops
-        self.backend = backend
+        self.backend = resolve_backend(backend)
         self.ell_width = ell_width
         # host-static expansion schedule (introspection + tests)
         om = np.asarray(query.order_mask)
@@ -436,7 +486,8 @@ class GRayMatcher:
             stack_queries([query], q_max=query.q_max,
                           qe_max=int(query.order_src.shape[0])),
             n_labels, k, rwr_iters=rwr_iters, restart=restart,
-            bridge_hops=bridge_hops, backend=backend, ell_width=ell_width)
+            bridge_hops=bridge_hops, backend=self.backend,
+            ell_width=ell_width, rwr_tol=rwr_tol)
 
     # -- public API ---------------------------------------------------------
 
@@ -476,7 +527,7 @@ def gray_match(g: DynamicGraph, query: Query, n_labels: int, k: int = 20,
     """One-shot batch G-Ray (builds a matcher; prefer GRayMatcher in loops)."""
     m = GRayMatcher(query, n_labels, k, rwr_iters, restart, bridge_hops,
                     backend=backend)
-    if backend == "ell" and ell is None:
+    if m.backend == "ell" and ell is None:
         ell = ell_from_graph(g, m.ell_width)
     if r_lab is None:
         r_lab = m.label_table(g, ell=ell)

@@ -4,8 +4,7 @@
 row-stochastic transition ``P = D⁻¹A``. Two interchangeable sweep backends:
 
   * ``coo`` — irregular gather/segment-sum over the live COO arcs (the
-    seed implementation; under pjit the edge dimension shards over
-    ("pod","data") and the scatter becomes a psum),
+    seed implementation),
   * ``ell`` — the Pallas ELL SpMM kernel (``repro.kernels.spmv_ell``) over
     the incoming-adjacency ELL mirror: fully regular gathers that tile into
     VMEM (DESIGN.md §2). Pass the mirror as ``ell=`` (see
@@ -13,16 +12,30 @@ row-stochastic transition ``P = D⁻¹A``. Two interchangeable sweep backends:
     pre-scaling the iterate with 1/deg, so the mirror only needs structural
     refreshes.
 
+Both backends shard the sweep over a ``"g"`` graph mesh axis when called
+with ``axis=`` inside a ``shard_map`` (DESIGN.md §5): vertices partition
+into equal receiver slices, the COO path masks messages to the shard's
+slice and combines partial segment-sums with a ``psum``, and the ELL path
+launches the kernel on the shard-local row block and ``all_gather``-s the
+vertex slices back. Either way the per-vertex accumulation order is
+exactly the replicated order (non-owners contribute exact zeros;
+concatenation does no arithmetic), so the sharded sweep is bit-identical
+to the replicated one — see ``_combine`` for the one rounding hazard.
+
 Either way, many restart vectors run as one ``(n, S)`` dense block
 (MXU-friendly), and the *incremental* variant warm-starts from the previous
 fixed point and needs only a few sweeps (DESIGN.md §2 — iteration-count
-sparsity, the TPU-native replacement for per-vertex push).
+sparsity, the TPU-native replacement for per-vertex push). With
+``rwr_adaptive`` the sweep count is no longer assumed but *measured*: a
+``lax.while_loop`` stops as soon as the ∞-norm residual drops to ``tol``
+(a hard cap bounds the trip count), so warm-started recomputation pays
+exactly the handful of sweeps the paper's incremental claim promises.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,51 +45,136 @@ from repro.kernels.spmv_ell.ops import ell_spmm_kernel
 from repro.sparse.ell import EllGraph
 
 
+def _combine(e: jnp.ndarray, agg: jnp.ndarray, c: float) -> jnp.ndarray:
+    """``c·e + (1−c)·agg`` with both products fenced from the add.
+
+    XLA may contract a multiply feeding an add into one fused
+    multiply-add, and whether it does depends on the surrounding program —
+    a replicated jit and a shard_map body can round this combine
+    differently by 1 ulp, which is exactly the drift the bit-identical
+    sharding contract forbids. The barrier pins mul-then-add rounding in
+    every compilation.
+    """
+    ce, scaled = jax.lax.optimization_barrier((c * e, (1.0 - c) * agg))
+    return ce + scaled
+
+
+def _owned_mask(receivers: jnp.ndarray, n_max: int, axis: str) -> jnp.ndarray:
+    """True for arcs whose receiver lands in this shard's vertex slice."""
+    idx = jax.lax.axis_index(axis)
+    n_loc = n_max // jax.lax.psum(1, axis)
+    return (receivers // n_loc) == idx
+
+
 def _sweep(g: DynamicGraph, w: jnp.ndarray, r: jnp.ndarray,
-           e: jnp.ndarray, c: float) -> jnp.ndarray:
-    """One power-iteration sweep over all restart columns: (n, S) → (n, S)."""
+           e: jnp.ndarray, c: float,
+           axis: Optional[str] = None) -> jnp.ndarray:
+    """One power-iteration sweep over all restart columns: (n, S) → (n, S).
+
+    Under ``axis`` (a bound mesh axis name) each shard owns one contiguous
+    receiver slice: messages to other slices are zeroed and the partial
+    segment-sums combine with a ``psum``. Every vertex's sum comes entirely
+    from its owner shard — the other shards add exact zeros — so the
+    result is bitwise the replicated one.
+    """
     msg = r[g.senders] * w[:, None]                      # (E, S)
+    if axis is not None:
+        msg = jnp.where(_owned_mask(g.receivers, g.n_max, axis)[:, None],
+                        msg, 0.0)
     agg = jax.ops.segment_sum(msg, g.receivers, num_segments=g.n_max)
-    return c * e + (1.0 - c) * agg
+    if axis is not None:
+        agg = jax.lax.psum(agg, axis)
+    return _combine(e, agg, c)
 
 
 def _sweep_ell(ell: EllGraph, inv_deg: jnp.ndarray, r: jnp.ndarray,
-               e: jnp.ndarray, c: float) -> jnp.ndarray:
+               e: jnp.ndarray, c: float,
+               axis: Optional[str] = None) -> jnp.ndarray:
     """ELL-backend sweep: agg[v] = Σ_{u→v} r[u]/deg(u) via the Pallas kernel.
 
     The per-arc weight 1/deg(sender) depends only on the *column* vertex, so
     it factors out of the gather: A_in @ (r ⊙ inv_deg) — the mirror carries
     unit weights and never needs a weight refresh.
+
+    Under ``axis`` the mirror is the shard-local row-block layout
+    (``ell.n`` is the slice width, ``row_ids`` local — DESIGN.md §5): the
+    kernel touches only this shard's rows and the vertex slices concatenate
+    back with an ``all_gather`` — no cross-shard arithmetic at all.
     """
     agg = ell_spmm_kernel(ell.cols, ell.vals, ell.mask, ell.row_ids,
                           r * inv_deg[:, None], ell.n)
-    return c * e + (1.0 - c) * agg
+    if axis is not None:
+        agg = jax.lax.all_gather(agg, axis, axis=0, tiled=True)
+    return _combine(e, agg, c)
 
 
-@partial(jax.jit, static_argnames=("iters", "c"))
+def _sweep_fn(g: DynamicGraph, e: jnp.ndarray, c: float,
+              ell: Optional[EllGraph], axis: Optional[str]):
+    """The per-iteration sweep closure for either backend."""
+    if ell is None:
+        w = transition_weights(g)
+        return lambda r: _sweep(g, w, r, e, c, axis=axis)
+    inv_deg = 1.0 / jnp.maximum(g.degree, 1.0)
+    return lambda r: _sweep_ell(ell, inv_deg, r, e, c, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("iters", "c", "axis"))
 def rwr(g: DynamicGraph, e: jnp.ndarray, iters: int = 30, c: float = 0.15,
         r0: Optional[jnp.ndarray] = None,
-        ell: Optional[EllGraph] = None) -> jnp.ndarray:
+        ell: Optional[EllGraph] = None,
+        axis: Optional[str] = None) -> jnp.ndarray:
     """Batched RWR. ``e``: (n_max, S) restart distributions (columns sum ≤ 1).
 
     ``r0`` warm-starts the iteration (incremental mode); defaults to ``e``.
     ``ell`` selects the Pallas ELL sweep backend (must mirror ``g``'s live
-    arcs); ``None`` keeps the COO gather/segment-sum path.
+    arcs); ``None`` keeps the COO gather/segment-sum path. ``axis`` names
+    the graph mesh axis when called inside a ``shard_map`` (module
+    docstring).
     """
     r = e if r0 is None else r0
-    if ell is None:
-        w = transition_weights(g)
+    sweep = _sweep_fn(g, e, c, ell, axis)
 
-        def body(r, _):
-            return _sweep(g, w, r, e, c), None
-    else:
-        inv_deg = 1.0 / jnp.maximum(g.degree, 1.0)
-
-        def body(r, _):
-            return _sweep_ell(ell, inv_deg, r, e, c), None
+    def body(r, _):
+        return sweep(r), None
 
     r, _ = jax.lax.scan(body, r, None, length=iters)
     return r
+
+
+@partial(jax.jit, static_argnames=("max_iters", "c", "tol", "axis"))
+def rwr_adaptive(g: DynamicGraph, e: jnp.ndarray, max_iters: int = 30,
+                 tol: float = 1e-4, c: float = 0.15,
+                 r0: Optional[jnp.ndarray] = None,
+                 ell: Optional[EllGraph] = None,
+                 axis: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual-adaptive RWR → ``(r, n_sweeps)``.
+
+    Sweeps until ``‖r_new − r‖∞ ≤ tol`` or ``max_iters``, whichever first
+    (a ``lax.while_loop`` — the sweep count is data-dependent, which is
+    the whole point: warm starts exit after a handful of sweeps while the
+    fixed-count path pays every one). The exit residual bounds the
+    distance to the true fixed point by ``tol/c`` (the sweep operator is a
+    ``(1−c)``-contraction in the ∞-norm). Under graph sharding the sweep
+    results are replicated across the axis, so every shard computes the
+    identical residual and the loop stays in lockstep with no extra
+    collective.
+    """
+    r = e if r0 is None else r0
+    sweep = _sweep_fn(g, e, c, ell, axis)
+
+    def cond(carry):
+        _, i, res = carry
+        return (i < max_iters) & (res > tol)
+
+    def body(carry):
+        r, i, _ = carry
+        r_new = sweep(r)
+        return r_new, i + 1, jnp.abs(r_new - r).max()
+
+    r, n, _ = jax.lax.while_loop(
+        cond, body, (r, jnp.int32(0), jnp.float32(jnp.inf)))
+    return r, n
 
 
 def restart_onehot(ids: jnp.ndarray, n_max: int) -> jnp.ndarray:
@@ -84,29 +182,47 @@ def restart_onehot(ids: jnp.ndarray, n_max: int) -> jnp.ndarray:
     return jax.nn.one_hot(ids, n_max, dtype=jnp.float32).T
 
 
-@partial(jax.jit, static_argnames=("n_labels", "iters", "c"))
+def label_restarts(g: DynamicGraph, n_labels: int) -> jnp.ndarray:
+    """(n_max, L) restart matrix: column ℓ uniform over live label-ℓ."""
+    onehot = jax.nn.one_hot(g.labels, n_labels, dtype=jnp.float32)
+    onehot = onehot * g.node_mask[:, None]
+    counts = jnp.maximum(onehot.sum(axis=0, keepdims=True), 1.0)
+    return onehot / counts
+
+
+@partial(jax.jit, static_argnames=("n_labels", "iters", "c", "axis"))
 def label_rwr(g: DynamicGraph, n_labels: int, iters: int = 30,
               c: float = 0.15, r0: Optional[jnp.ndarray] = None,
-              ell: Optional[EllGraph] = None) -> jnp.ndarray:
+              ell: Optional[EllGraph] = None,
+              axis: Optional[str] = None) -> jnp.ndarray:
     """Label-conditioned RWR table r_lab: (n_max, L).
 
     Column ℓ is the RWR fixed point whose restart distribution is uniform
     over live vertices with label ℓ; r_lab[v, ℓ] is the proximity between v
     and the label-ℓ population — the seed-finder goodness input.
     """
-    onehot = jax.nn.one_hot(g.labels, n_labels, dtype=jnp.float32)
-    onehot = onehot * g.node_mask[:, None]
-    counts = jnp.maximum(onehot.sum(axis=0, keepdims=True), 1.0)
-    e = onehot / counts
-    return rwr(g, e, iters=iters, c=c, r0=r0, ell=ell)
+    e = label_restarts(g, n_labels)
+    return rwr(g, e, iters=iters, c=c, r0=r0, ell=ell, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("n_labels", "max_iters", "c", "tol",
+                                   "axis"))
+def label_rwr_adaptive(g: DynamicGraph, n_labels: int, max_iters: int = 30,
+                       tol: float = 1e-4, c: float = 0.15,
+                       r0: Optional[jnp.ndarray] = None,
+                       ell: Optional[EllGraph] = None,
+                       axis: Optional[str] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual-adaptive :func:`label_rwr` → ``(r_lab, n_sweeps)``."""
+    e = label_restarts(g, n_labels)
+    return rwr_adaptive(g, e, max_iters=max_iters, tol=tol, c=c, r0=r0,
+                        ell=ell, axis=axis)
 
 
 def rwr_residual(g: DynamicGraph, r: jnp.ndarray, e: jnp.ndarray,
                  c: float = 0.15,
-                 ell: Optional[EllGraph] = None) -> jnp.ndarray:
+                 ell: Optional[EllGraph] = None,
+                 axis: Optional[str] = None) -> jnp.ndarray:
     """‖r − (c·e + (1−c)·Pᵀr)‖∞ per column — convergence diagnostics."""
-    if ell is None:
-        nxt = _sweep(g, transition_weights(g), r, e, c)
-    else:
-        nxt = _sweep_ell(ell, 1.0 / jnp.maximum(g.degree, 1.0), r, e, c)
+    nxt = _sweep_fn(g, e, c, ell, axis)(r)
     return jnp.abs(nxt - r).max(axis=0)

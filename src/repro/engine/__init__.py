@@ -9,12 +9,15 @@ project its :class:`StepOutput` into their historical stats types.
 
 from repro.engine.buckets import QueryBucket, bucket_shape
 from repro.engine.core import Engine, engine_step
-from repro.engine.sharding import ShardedBankMatch, query_shard_count
+from repro.engine.sharding import (ShardedBankMatch, ShardedSweep,
+                                   device_split, graph_shard_count,
+                                   query_shard_count)
 from repro.engine.state import EngineState, QueryDelta, StepOutput
 from repro.engine.store import PatternStore, live_vertex_mask
 
 __all__ = [
     "Engine", "engine_step", "EngineState", "StepOutput", "QueryDelta",
-    "QueryBucket", "bucket_shape", "ShardedBankMatch", "query_shard_count",
+    "QueryBucket", "bucket_shape", "ShardedBankMatch", "ShardedSweep",
+    "device_split", "graph_shard_count", "query_shard_count",
     "PatternStore", "live_vertex_mask",
 ]

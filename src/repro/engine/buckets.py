@@ -61,20 +61,30 @@ def _empty_bank(q_max: int, qe_max: int, b_pad: int) -> QueryBank:
 
 
 class QueryBucket:
-    """One padded bank of standing queries sharing a jit signature."""
+    """One padded bank of standing queries sharing a jit signature.
+
+    ``g_shards > 1`` adds the graph mesh axis: the storm/batch full-graph
+    match runs on a 2-D ``(q, g)`` mesh against the shard-local ELL
+    row-block mirror (``match(..., graph_sharded=True)``), while the
+    induced-subgraph path keeps the graph replicated. ``q_budget`` caps
+    the query-axis device share (the engine hands each axis its split)."""
 
     def __init__(self, cfg: IGPMConfig, q_max: int, qe_max: int, b_pad: int,
-                 shard: str = "auto"):
+                 shard: str = "auto", g_shards: int = 1,
+                 q_budget: Optional[int] = None):
         self.q_max, self.qe_max, self.b_pad = q_max, qe_max, b_pad
         self.bank = _empty_bank(q_max, qe_max, b_pad)
         self.matcher = BankGRayMatcher(
             self.bank, cfg.n_labels, cfg.top_k_patterns,
             rwr_iters=cfg.rwr_iters, restart=cfg.restart_prob,
             bridge_hops=cfg.bridge_hops, backend=cfg.backend,
-            ell_width=cfg.ell_width, memo=False)
-        self.n_shards = query_shard_count(b_pad, shard)
-        self._sharded = (ShardedBankMatch(self.matcher, self.n_shards)
-                         if self.n_shards > 1 else None)
+            ell_width=cfg.ell_width, memo=False, rwr_tol=cfg.rwr_tol)
+        self.n_shards = query_shard_count(b_pad, shard,
+                                          max_devices=q_budget)
+        self.g_shards = g_shards
+        self._sharded = (
+            ShardedBankMatch(self.matcher, self.n_shards, g_shards)
+            if self.n_shards > 1 or g_shards > 1 else None)
         self.qids: List[Optional[str]] = [None] * b_pad
         self._queries: List[Optional[Query]] = [None] * b_pad
         self._row_masks: List[Optional[np.ndarray]] = [None] * b_pad
@@ -156,17 +166,20 @@ class QueryBucket:
     def match(self, g: DynamicGraph, r_lab: jnp.ndarray,
               seed_filter: Optional[jnp.ndarray] = None,
               ell: Optional[EllGraph] = None,
-              seeds: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
-              ) -> GRayResult:
+              seeds: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              graph_sharded: bool = False) -> GRayResult:
         """Match every row against ``g`` — vmap on one device, shard_map
-        over the row axis otherwise. ``seeds`` short-circuits the top-k
-        (the storm seed cache path)."""
+        over the mesh otherwise. ``seeds`` short-circuits the top-k
+        (the storm seed cache path). ``graph_sharded`` marks a full-graph
+        call whose ``ell`` is the shard-local row-block mirror (the graph
+        axis engages; only meaningful when the bucket has ``g_shards >
+        1``)."""
         if seeds is None:
             seeds = self.seeds(g, r_lab, seed_filter)
         seed_ids, seed_mask = seeds
         if self._sharded is not None:
             return self._sharded(g, r_lab, seed_ids, seed_mask, ell,
-                                 self.bank)
+                                 self.bank, graph_sharded=graph_sharded)
         return self.matcher.match_from_seeds(g, r_lab, seed_ids, seed_mask,
                                              ell=ell, bank=self.bank)
 

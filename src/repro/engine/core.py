@@ -24,6 +24,7 @@ functions of the state (ELL mirror, Louvain dendrogram, storm seed memo).
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -32,14 +33,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.config.base import EngineConfig, IGPMConfig
+from repro.config.base import EngineConfig, IGPMConfig, resolve_backend
 from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
                               apply_update, updated_vertices)
 from repro.core.pem import PartialExecutionManager
 from repro.core.query import Query
-from repro.core.rwr import label_rwr
+from repro.core.rwr import label_rwr, label_rwr_adaptive
 from repro.core.subgraph import extract_induced, remap_matched
 from repro.engine.buckets import QueryBucket, bucket_shape
+from repro.engine.sharding import ShardedSweep, device_split
 from repro.engine.state import EngineState, QueryDelta, StepOutput
 from repro.engine.store import PatternStore, live_vertex_mask
 
@@ -52,6 +54,9 @@ class Engine:
         ecfg = ecfg or EngineConfig()
         if ecfg.mode not in ("incremental", "batch"):
             raise ValueError(f"unknown engine mode {ecfg.mode!r}")
+        if cfg.backend == "auto":
+            cfg = dataclasses.replace(cfg,
+                                      backend=resolve_backend(cfg.backend))
         self.cfg = cfg
         self.ecfg = ecfg
         self.seed = seed
@@ -59,19 +64,34 @@ class Engine:
             None if ecfg.mode == "batch"
             else PartialExecutionManager(cfg, adaptive=ecfg.adaptive,
                                          seed=seed))
-        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width)
+        # graph mesh axis: how the visible devices split between the query
+        # and graph axes (DESIGN.md §5); 1/1 on a single device
+        self.q_budget, self.g_shards = device_split(
+            ecfg.shard, ecfg.graph_shard, cfg.n_max)
+        self._sweeps = (ShardedSweep(self.g_shards)
+                        if self.g_shards > 1 else None)
+        self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width,
+                                   n_shards=self.g_shards)
                           if cfg.backend == "ell" else None)
         self.buckets: Dict[Tuple[int, int], QueryBucket] = {}
         self.stores: Dict[str, PatternStore] = {}
         self._where: Dict[str, Tuple[int, int]] = {}  # qid → bucket (q, qe)
         self._order: List[str] = []                   # registration order
         # storm seed cache (satellite: consecutive storm steps stop paying
-        # the full-graph seed recompute) — see EngineConfig
-        self._seed_memo: Dict[Tuple[int, int], Tuple[tuple, tuple]] = {}
+        # the full-graph seed recompute) — see EngineConfig. Entries are
+        # (version key, recompute mask, seeds): a step reuses the seeds
+        # when the versions match and its mask is within
+        # ``seed_cache_hamming`` flips of the cached one (0 = exact).
+        self._seed_memo: Dict[Tuple[int, int],
+                              Tuple[tuple, np.ndarray, tuple]] = {}
         self.rlab_hits = 0
         self.rlab_misses = 0
         self.seed_hits = 0
+        self.seed_hits_exact = 0
+        self.seed_hits_bounded = 0
         self.seed_misses = 0
+        self.rwr_sweeps = 0  # label-RWR sweeps actually run (adaptive)
+        self._last_sweeps = 0
 
     # -- standing-query registry ----------------------------------------------
 
@@ -91,7 +111,9 @@ class Engine:
         bucket = self.buckets.get(shape)
         if bucket is None:
             bucket = QueryBucket(self.cfg, *shape, b_pad=1,
-                                 shard=self.ecfg.shard)
+                                 shard=self.ecfg.shard,
+                                 g_shards=self.g_shards,
+                                 q_budget=self.q_budget)
             self.buckets[shape] = bucket
         elif bucket.full:
             bucket = self._grow(bucket)
@@ -104,24 +126,39 @@ class Engine:
 
     def retire(self, qid: str) -> None:
         """Drop a standing query (device row clear — zero recompilations).
-        Its pattern store goes with it."""
+        Its pattern store goes with it. A bucket left EMPTY is dropped
+        outright (no reason to keep sweeping a dead bank); one left at
+        ≤ quarter occupancy compacts to half its row capacity (the shrink
+        mirror of the growth doubling, so churn-heavy servers stop
+        sweeping dead rows; amortized exactly like the doubling)."""
         if qid not in self._where:
             raise KeyError(f"unknown qid {qid!r}; live: {self._order}")
         shape = self._where.pop(qid)
-        self.buckets[shape].retire(qid)
+        bucket = self.buckets[shape]
+        bucket.retire(qid)
         self._seed_memo.pop(shape, None)
         del self.stores[qid]
         self._order.remove(qid)
+        if bucket.n_live == 0:
+            del self.buckets[shape]
+        elif bucket.b_pad > 1 and bucket.n_live <= bucket.b_pad // 4:
+            self._rebuild(bucket, bucket.b_pad // 2)
+
+    def _rebuild(self, bucket: QueryBucket, b_pad: int) -> QueryBucket:
+        """Repack a bucket's live rows into a ``b_pad``-row bank — the one
+        membership change that recompiles, by design. ``_grow`` doubles a
+        full bucket; ``retire`` halves one at ≤ quarter occupancy (the
+        ≤1/4 ↔ ×2 hysteresis keeps both amortized O(1) per change)."""
+        fresh = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
+                            b_pad=b_pad, shard=self.ecfg.shard,
+                            g_shards=self.g_shards, q_budget=self.q_budget)
+        for slot, qid in bucket.rows():
+            fresh.register(qid, bucket.query(slot))
+        self.buckets[(bucket.q_max, bucket.qe_max)] = fresh
+        return fresh
 
     def _grow(self, bucket: QueryBucket) -> QueryBucket:
-        """Double a full bucket's row capacity (new jit signature — the one
-        membership change that does recompile, by design)."""
-        grown = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
-                            b_pad=2 * bucket.b_pad, shard=self.ecfg.shard)
-        for slot, qid in bucket.rows():
-            grown.register(qid, bucket.query(slot))
-        self.buckets[(bucket.q_max, bucket.qe_max)] = grown
-        return grown
+        return self._rebuild(bucket, 2 * bucket.b_pad)
 
     def query(self, qid: str) -> Query:
         shape = self._where[qid]
@@ -145,7 +182,10 @@ class Engine:
         return {"rlab_cache_hits": self.rlab_hits,
                 "rlab_cache_misses": self.rlab_misses,
                 "seed_cache_hits": self.seed_hits,
-                "seed_cache_misses": self.seed_misses}
+                "seed_cache_hits_exact": self.seed_hits_exact,
+                "seed_cache_hits_bounded": self.seed_hits_bounded,
+                "seed_cache_misses": self.seed_misses,
+                "rwr_sweeps": self.rwr_sweeps}
 
     # -- state lifecycle -------------------------------------------------------
 
@@ -160,9 +200,12 @@ class Engine:
         self._seed_memo.clear()
         self.rlab_hits = self.rlab_misses = 0
         self.seed_hits = self.seed_misses = 0
+        self.seed_hits_exact = self.seed_hits_bounded = 0
+        self.rwr_sweeps = 0
         if self.ell_cache is not None:
             self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
-                                      self.cfg.ell_width)
+                                      self.cfg.ell_width,
+                                      n_shards=self.g_shards)
 
     # -- the ONE step pipeline -------------------------------------------------
 
@@ -192,11 +235,41 @@ class Engine:
 
     def _label_table(self, g: DynamicGraph,
                      r0: Optional[jnp.ndarray] = None,
-                     iters: Optional[int] = None, ell=None) -> jnp.ndarray:
-        return label_rwr(
-            g, self.cfg.n_labels,
-            iters=iters if iters is not None else self.cfg.rwr_iters,
-            c=self.cfg.restart_prob, r0=r0, ell=ell)
+                     iters: Optional[int] = None, ell=None,
+                     sharded: bool = False) -> jnp.ndarray:
+        """The per-step label-RWR table — the single biggest sweep cost.
+
+        ``sharded`` marks a FULL-graph call (storm/batch), which runs over
+        the graph mesh axis when one is configured (``ell`` then being the
+        shard-local mirror); induced-subgraph tables stay replicated.
+        ``cfg.rwr_tol > 0`` swaps the fixed-count scan for the residual-
+        adaptive loop (hard cap = the fixed count), and the sweeps
+        actually run are accounted in ``self.rwr_sweeps``.
+        """
+        cfg = self.cfg
+        iters = iters if iters is not None else cfg.rwr_iters
+        if sharded and self._sweeps is not None:
+            r, n = self._sweeps.label_table(
+                g, cfg.n_labels, iters, cfg.restart_prob, r0, ell,
+                tol=cfg.rwr_tol)
+            self.rwr_sweeps += int(n)
+            self._last_sweeps = int(n)
+            # decommit from the sweep mesh: bucket meshes may span a
+            # different device set, and multi-device-committed inputs do
+            # not transfer implicitly. The (n, L) table is tiny next to
+            # the sweeps it took to produce.
+            return jnp.asarray(np.asarray(r))
+        if cfg.rwr_tol > 0:
+            r, n = label_rwr_adaptive(
+                g, cfg.n_labels, max_iters=iters, tol=cfg.rwr_tol,
+                c=cfg.restart_prob, r0=r0, ell=ell)
+            self.rwr_sweeps += int(n)
+            self._last_sweeps = int(n)
+            return r
+        self.rwr_sweeps += iters
+        self._last_sweeps = iters
+        return label_rwr(g, cfg.n_labels, iters=iters,
+                         c=cfg.restart_prob, r0=r0, ell=ell)
 
     def _merge(self, results, remap=None,
                rebuild: bool = False) -> Tuple[QueryDelta, ...]:
@@ -323,14 +396,16 @@ def engine_step(eng: Engine, state: EngineState,
     community = 0
     rl_loss = 0.0
 
+    eng._last_sweeps = 0
     if ecfg.mode == "batch":
         # the paper's Batch oracle: full fresh pass, stores rebuilt
         frac = 0.0
         n_rec = n_live
         storm = True
         ell = eng._full_ell
-        r_lab = eng._label_table(g, ell=ell)
-        results = {shape: bucket.match(g, r_lab, ell=ell)
+        r_lab = eng._label_table(g, ell=ell, sharded=True)
+        results = {shape: bucket.match(g, r_lab, ell=ell,
+                                       graph_sharded=True)
                    for shape, bucket in eng.buckets.items()}
         jax.block_until_ready(list(results.values()))
         elapsed = time.perf_counter() - t0
@@ -354,32 +429,44 @@ def engine_step(eng: Engine, state: EngineState,
                 rlab_hit = True
                 eng.rlab_hits += 1
             else:
+                # warm starts under the residual-adaptive loop keep the
+                # full hard cap — convergence is measured, not assumed
                 r_lab = eng._label_table(
                     g, r0=state.r_lab,
-                    iters=(None if state.r_lab is None
+                    iters=(None if (state.r_lab is None or cfg.rwr_tol > 0)
                            else cfg.rwr_iters_incremental),
-                    ell=ell)
+                    ell=ell, sharded=True)
                 rlab_events = 0
                 rlab_version += 1
                 eng.rlab_misses += 1
             sf = jnp.asarray(rec_mask)
-            mask_key = hash(rec_mask.tobytes())
+            mask_arr = np.asarray(rec_mask, bool)
             results = {}
             bucket_hits = []
             for shape, bucket in eng.buckets.items():
-                memo_key = (rlab_version, bucket.version, mask_key)
+                ver_key = (rlab_version, bucket.version)
                 hit = eng._seed_memo.get(shape)
-                if hit is not None and hit[0] == memo_key:
-                    seeds = hit[1]
+                # bounded-divergence reuse: same table/bank versions and a
+                # recompute mask within seed_cache_hamming flips of the
+                # one the cached seeds were ranked under (0 = exact match)
+                ham = (int(np.count_nonzero(hit[1] != mask_arr))
+                       if hit is not None and hit[0] == ver_key else None)
+                if ham is not None and ham <= ecfg.seed_cache_hamming:
+                    seeds = hit[2]
                     bucket_hits.append(True)
                     eng.seed_hits += 1
+                    if ham == 0:
+                        eng.seed_hits_exact += 1
+                    else:
+                        eng.seed_hits_bounded += 1
                 else:
                     seeds = bucket.seeds(g, r_lab, sf)
-                    eng._seed_memo[shape] = (memo_key, seeds)
+                    eng._seed_memo[shape] = (ver_key, mask_arr, seeds)
                     bucket_hits.append(False)
                     eng.seed_misses += 1
                 results[shape] = bucket.match(g, r_lab, seed_filter=sf,
-                                              ell=ell, seeds=seeds)
+                                              ell=ell, seeds=seeds,
+                                              graph_sharded=True)
             seed_hit = bool(bucket_hits) and all(bucket_hits)
             jax.block_until_ready(list(results.values()))
             elapsed = time.perf_counter() - t0
@@ -408,5 +495,6 @@ def engine_step(eng: Engine, state: EngineState,
         frac_affected=frac, community_size=community, rl_loss=rl_loss,
         storm=storm, subgraph_nodes=sub_n, subgraph_edges=sub_e,
         ell_refresh_s=refresh_s, n_pruned=n_pruned, n_events=n_events,
-        rlab_cache_hit=rlab_hit, seed_cache_hit=seed_hit, deltas=deltas)
+        rlab_cache_hit=rlab_hit, seed_cache_hit=seed_hit,
+        rwr_sweeps=eng._last_sweeps, deltas=deltas)
     return new_state, out

@@ -69,6 +69,7 @@ class StepOutput(NamedTuple):
     n_events: int             # masked update entries applied this step
     rlab_cache_hit: bool      # storm step reused r_lab without refreshing
     seed_cache_hit: bool      # storm step reused every bucket's seed top-k
+    rwr_sweeps: int = 0       # label-RWR sweeps run (measured if adaptive)
     deltas: Tuple[QueryDelta, ...] = ()
 
     @property

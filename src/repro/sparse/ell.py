@@ -69,6 +69,16 @@ def ell_row_capacity(n: int, e_cap: int, k: int) -> int:
     return n + -(-e_cap // k)
 
 
+def ell_block_capacity(n: int, e_cap: int, k: int, n_shards: int = 1) -> int:
+    """Static row capacity of ONE vertex-slice block of a sharded ELL.
+
+    The slice owns ``n/n_shards`` vertices but, in the worst case, every
+    live arc: ``n/n_shards + ceil(E/k)`` rows (the :func:`ell_row_capacity`
+    bound applied to the slice).
+    """
+    return n // n_shards + -(-e_cap // k)
+
+
 def build_ell(senders: np.ndarray, receivers: np.ndarray, n: int,
               weights: Optional[np.ndarray] = None, k: int = 64,
               r_cap: Optional[int] = None) -> EllGraph:
@@ -109,6 +119,50 @@ def build_ell(senders: np.ndarray, receivers: np.ndarray, n: int,
     mask[rr, cc] = True
     return EllGraph(jnp.asarray(cols), jnp.asarray(vals),
                     jnp.asarray(row_ids), jnp.asarray(mask), n)
+
+
+def build_ell_sharded(senders: np.ndarray, receivers: np.ndarray, n: int,
+                      n_shards: int, weights: Optional[np.ndarray] = None,
+                      k: int = 64,
+                      r_cap_block: Optional[int] = None) -> EllGraph:
+    """Shard-local row-block ELL over ``n_shards`` equal vertex slices.
+
+    The row-owner axis (``senders`` here, matching :func:`build_ell`'s
+    convention) partitions into contiguous slices of ``n // n_shards``
+    vertices; slice ``d`` occupies the row block
+    ``[d·r_cap_block, (d+1)·r_cap_block)`` with ``row_ids`` LOCAL to the
+    slice and column ids still global. ``EllGraph.n`` becomes the slice
+    width — each shard's segment reduction produces its vertex slice and
+    the slices concatenate back (``all_gather``) with no arithmetic, which
+    is what keeps graph-sharded sweeps bit-identical (DESIGN.md §5).
+    Splitting the row axis into ``n_shards`` equal parts (e.g. shard_map
+    ``P("g")``) hands every device exactly its block.
+
+    Within a slice the layout algorithm is :func:`build_ell` verbatim, so
+    a vertex's entries land in the same relative (row, slot) positions as
+    in the unsharded layout — the per-vertex reduction order is preserved.
+    """
+    if n % n_shards:
+        raise ValueError(f"n {n} not divisible by n_shards {n_shards}")
+    n_loc = n // n_shards
+    if r_cap_block is None:
+        r_cap_block = ell_block_capacity(n, len(np.asarray(senders)) or 1,
+                                         k, n_shards)
+    senders = np.asarray(senders, np.int64)
+    receivers = np.asarray(receivers, np.int64)
+    if weights is None:
+        weights = np.ones(senders.shape[0], np.float32)
+    blocks = []
+    for d in range(n_shards):
+        sel = (senders >= d * n_loc) & (senders < (d + 1) * n_loc)
+        blocks.append(build_ell(senders[sel] - d * n_loc, receivers[sel],
+                                n_loc, weights=weights[sel], k=k,
+                                r_cap=r_cap_block))
+    return EllGraph(
+        jnp.concatenate([b.cols for b in blocks]),
+        jnp.concatenate([b.vals for b in blocks]),
+        jnp.concatenate([b.row_ids for b in blocks]),
+        jnp.concatenate([b.mask for b in blocks]), n_loc)
 
 
 def ell_spmm(g: EllGraph, x: jnp.ndarray) -> jnp.ndarray:

@@ -106,6 +106,78 @@ def test_duplicate_names_get_unique_qids():
         eng.register(triangle(), qid=a)
 
 
+# -- backend auto-resolution --------------------------------------------------
+
+def test_backend_auto_resolves_per_platform():
+    from repro.config.base import resolve_backend
+    assert resolve_backend("coo") == "coo"
+    assert resolve_backend("ell") == "ell"
+    import jax
+    expect = "ell" if jax.default_backend() == "tpu" else "coo"
+    assert resolve_backend("auto") == expect
+    eng = Engine(_cfg(backend="auto"), EngineConfig(adaptive=False))
+    assert eng.cfg.backend == expect
+    # on this CPU container: the interpreted ELL path is deselected, so no
+    # mirror is maintained
+    if expect == "coo":
+        assert eng.ell_cache is None
+
+
+# -- occupancy-driven bucket compaction ---------------------------------------
+
+def test_bucket_shrinks_at_quarter_occupancy_and_regrows():
+    eng = Engine(_cfg(), EngineConfig(adaptive=False))
+    for i in range(5):
+        eng.register(triangle(labels=(i % 4, (i + 1) % 4, (i + 2) % 4)),
+                     qid=f"t{i}")
+    assert eng.occupancy() == {(4, 4, 8): (5, 8)}  # doublings 1→2→4→8
+    eng.retire("t4")
+    eng.retire("t3")
+    assert eng.occupancy() == {(4, 4, 8): (3, 8)}  # 3 > 8/4: no shrink yet
+    eng.retire("t2")
+    assert eng.occupancy() == {(4, 4, 4): (2, 4)}  # 2 ≤ 8/4: halved
+    eng.retire("t1")
+    assert eng.occupancy() == {(4, 4, 2): (1, 2)}  # 1 ≤ 4/4: halved again
+    # regrow: registering past capacity doubles as before
+    eng.register(triangle(labels=(1, 1, 1)), qid="t5")
+    eng.register(triangle(labels=(2, 2, 2)), qid="t6")
+    assert eng.occupancy() == {(4, 4, 4): (3, 4)}
+    # retiring the last query drops the bucket outright — an empty bank
+    # must not keep paying per-step seeds+match
+    for qid in list(eng.qids):
+        eng.retire(qid)
+    assert eng.occupancy() == {}
+    assert eng.buckets == {}
+
+
+@pytest.mark.slow
+def test_shrunk_bucket_still_matches_like_fresh_engine():
+    """A shrink mid-stream must not change results: the survivor queries
+    end with the stores a fresh engine with just those queries builds."""
+    cfg = _cfg()
+    ecfg = EngineConfig(adaptive=False)
+    a = Engine(cfg, ecfg)
+    for i in range(4):
+        a.register(triangle(labels=(3, 3, 3)), qid=f"pad{i}")
+    a.register(triangle(labels=(0, 1, 2)), qid="tri")
+    sa = a.init_state(_planted_graph())
+    batches = _stream()
+    for t, upd in enumerate(batches):
+        if t == 2:  # retire down to 1 live row → shrink 8→4→2 fires
+            for i in range(4):
+                a.retire(f"pad{i}")
+            assert a.buckets[(4, 4)].b_pad < 8
+        sa, _ = a.step(sa, upd)
+
+    b = Engine(cfg, ecfg)
+    b.register(triangle(labels=(0, 1, 2)), qid="tri")
+    sb = b.init_state(_planted_graph())
+    for upd in _stream():
+        sb, _ = b.step(sb, upd)
+    assert a.stores["tri"].total >= 1
+    assert a.stores["tri"]._patterns == b.stores["tri"]._patterns
+
+
 # -- membership equivalence (acceptance criterion) ----------------------------
 
 @pytest.mark.slow
@@ -282,6 +354,45 @@ def test_seed_cache_hits_and_determinism():
 
 
 @pytest.mark.slow
+def test_bounded_seed_cache_hamming_key():
+    """δ > 0 turns the exact recompute-mask memo into a bounded-divergence
+    one: a storm step whose mask differs from the cached mask by ≤ δ flips
+    reuses the cached seed top-k (counted separately from exact hits);
+    δ = 0 reproduces the exact-match behavior on the same stream."""
+    cfg = _cfg()
+    upd_a = UpdateBatch.additions(np.array([4, 5]), np.array([6, 7]),
+                                  u_max=64)
+    upd_b = UpdateBatch.additions(np.array([8, 9]), np.array([10, 11]),
+                                  u_max=64)
+
+    def run(hamming):
+        eng = Engine(cfg, EngineConfig(adaptive=False, full_graph_frac=-1.0,
+                                       seed_cache_staleness=10 ** 6,
+                                       seed_cache_hamming=hamming))
+        eng.register(triangle(labels=(3, 3, 3)))
+        st = eng.init_state(_planted_graph())
+        for upd in (upd_a, upd_a, upd_b):
+            st, out = eng.step(st, upd)
+        return eng, out
+
+    exact, _ = run(0)
+    assert exact.seed_hits_exact >= 1      # repeated mask
+    assert exact.seed_hits_bounded == 0    # changed mask missed
+    assert exact.seed_misses >= 2
+
+    bounded, out = run(cfg.n_max)          # δ covers any divergence
+    assert bounded.seed_hits_exact >= 1
+    assert bounded.seed_hits_bounded >= 1  # changed mask reused
+    assert out.seed_cache_hit
+    assert "seed_cache_hits_bounded" in bounded.counters()
+
+    # deterministic: replaying the stream agrees exactly
+    bounded2, _ = run(cfg.n_max)
+    (s1,), (s2,) = bounded.stores.values(), bounded2.stores.values()
+    assert s1._patterns == s2._patterns
+
+
+@pytest.mark.slow
 def test_seed_cache_seed_memo_hits_on_repeated_mask():
     """Identical update endpoints → identical recompute mask → the per-
     bucket seed top-k is reused, not just the r_lab table."""
@@ -295,6 +406,43 @@ def test_seed_cache_seed_memo_hits_on_repeated_mask():
         st, out = eng.step(st, upd)
     assert eng.seed_hits >= 1
     assert out.seed_cache_hit
+
+
+@pytest.mark.slow
+def test_adaptive_label_rwr_in_engine_converges_and_counts_sweeps():
+    """rwr_tol > 0 swaps the storm label-RWR for the residual-adaptive
+    loop: warm-started steps must run strictly fewer sweeps than the hard
+    cap, the counters must account them, and the planted pattern must
+    still be found exactly as the fixed-iteration engine finds it."""
+    def run(tol):
+        # cap high enough that 1e-4 at contraction (1−c) is reachable —
+        # the adaptive loop needs headroom to show its early exit
+        cfg = _cfg(rwr_tol=tol, rwr_iters=40)
+        eng = Engine(cfg, EngineConfig(adaptive=False,
+                                       full_graph_frac=-1.0))
+        eng.register(triangle(labels=(0, 1, 2)), qid="tri")
+        st = eng.init_state(_planted_graph())
+        sweeps = []
+        for upd in _stream():
+            st, out = eng.step(st, upd)
+            sweeps.append(out.rwr_sweeps)
+        return eng, sweeps
+
+    eng_fix, sweeps_fix = run(0.0)
+    eng_ad, sweeps_ad = run(1e-4)
+    cap = 40
+    assert sweeps_fix[0] == cap           # cold fixed pays the cap
+    assert all(0 < s <= cap for s in sweeps_ad)
+    # warm-started adaptive steps beat the full fixed count — convergence
+    # measured to tol, instead of either paying the cap every storm step
+    # or trusting the unverified rwr_iters_incremental shortcut
+    assert max(sweeps_ad[1:]) < cap
+    assert eng_ad.rwr_sweeps == sum(sweeps_ad)
+    assert eng_ad.rwr_sweeps < cap * len(sweeps_ad)
+    # both engines find the planted triangle
+    assert eng_fix.stores["tri"].total >= 1
+    assert eng_ad.stores["tri"].total >= 1
+    assert any({0, 1, 2} == set(k) for k in eng_ad.stores["tri"]._patterns)
 
 
 def test_server_telemetry_exposes_cache_counters():

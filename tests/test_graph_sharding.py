@@ -1,0 +1,228 @@
+"""Graph-axis sharded sweep equivalence (DESIGN.md §5).
+
+Runs ONLY under a forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m pytest tests/test_graph_sharding.py -q
+
+(`make engine-smoke` / the CI multi-device job do exactly that.) On the
+default single-device container every test here skips — the tier-1 suite
+stays single-device as conftest.py requires.
+
+The contract: partitioning vertices over the ``"g"`` mesh axis is a pure
+distribution of the replicated sweeps — ``rwr`` / ``label_rwr`` / the
+bounded-BFS reach, the residual-adaptive variants, the 2-D ``(q, g)``
+bucket match, and whole served streams produce BIT-IDENTICAL results on
+both backends. The COO path masks messages to each shard's receiver slice
+(non-owners contribute exact zeros) and combines with psum/pmax; the ELL
+path runs the kernels on shard-local row blocks and concatenates slices —
+no cross-shard arithmetic exists to reorder.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import IGPMConfig, ServingConfig
+from repro.core.graph import EllCache, UpdateBatch, ell_from_graph, new_graph
+from repro.core.gray import _bfs_reach_hops
+from repro.core.query import query_zoo
+from repro.core.rwr import label_rwr, restart_onehot, rwr, rwr_adaptive
+from repro.data.temporal import TemporalGraphSpec, generate_stream
+from repro.engine import ShardedSweep, device_split, graph_shard_count
+from repro.engine.buckets import QueryBucket
+from repro.serving import MatchServer
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4)")
+
+G = len(jax.devices())
+N, K = 256, 8
+
+
+def _graph(seed=0, ne=1500):
+    rng = np.random.default_rng(seed)
+    g = new_graph(N, 4096, labels=rng.integers(0, 4, N).astype(np.int32),
+                  senders=rng.integers(0, N, ne),
+                  receivers=rng.integers(0, N, ne))
+    return g, rng
+
+
+def _mirrors(g, backend):
+    """(replicated ell, shard-local ell) — None/None on the COO backend."""
+    if backend == "coo":
+        return None, None
+    return ell_from_graph(g, K), ell_from_graph(g, K, n_shards=G)
+
+
+def _cfg(backend):
+    return IGPMConfig(n_max=N, e_max=8192, ell_width=K, rwr_iters=8,
+                      rwr_iters_incremental=3, top_k_patterns=6,
+                      init_community_size=32, backend=backend)
+
+
+def test_graph_shard_count_divides_n():
+    assert graph_shard_count(N, "off") == 1
+    gc = graph_shard_count(N, "auto")
+    # largest pow-2 ≤ devices that divides N (N is a pow-2 here, so = the
+    # pow-2 floor of the device count)
+    assert gc == 1 << (G.bit_length() - 1)
+    assert N % gc == 0
+    assert graph_shard_count(6, "auto") == 2  # pow-2 divisor only
+    with pytest.raises(ValueError):
+        graph_shard_count(N, "bogus")
+
+
+def test_device_split_budgets():
+    nd = len(jax.devices())
+    assert device_split("auto", "off", N) == (nd, 1)
+    q_budget, g = device_split("off", "auto", N)
+    assert g == graph_shard_count(N, "auto") and q_budget * g <= nd
+    q_budget, g = device_split("auto", "auto", N)
+    assert q_budget * g <= nd and g * g <= nd  # balanced split
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_rwr_sharded_bitwise(backend):
+    g, _ = _graph()
+    ell, ell_sh = _mirrors(g, backend)
+    e = restart_onehot(jnp.asarray([3, 77, 130]), N)
+    sweeps = ShardedSweep(G)
+
+    ref = rwr(g, e, iters=12, ell=ell)
+    got, n = sweeps.run_rwr(g, e, iters=12, ell=ell_sh)
+    assert int(n) == 12
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    # warm-started sweeps distribute identically
+    ref_w = rwr(g, e, iters=4, r0=ref, ell=ell)
+    got_w, _ = sweeps.run_rwr(g, e, iters=4, r0=ref, ell=ell_sh)
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(ref_w))
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_adaptive_rwr_sharded_bitwise_and_same_trip_count(backend):
+    g, _ = _graph()
+    ell, ell_sh = _mirrors(g, backend)
+    e = restart_onehot(jnp.asarray([0, 9]), N)
+    ref, n_ref = rwr_adaptive(g, e, max_iters=40, tol=1e-5, ell=ell)
+    got, n_got = ShardedSweep(G).run_rwr(g, e, iters=40, tol=1e-5,
+                                         ell=ell_sh)
+    # sweep results replicate exactly across the axis, so every shard sees
+    # the identical residual and the while_loop exits on the same sweep
+    assert int(n_got) == int(n_ref)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_label_rwr_sharded_bitwise(backend):
+    g, _ = _graph(seed=2)
+    ell, ell_sh = _mirrors(g, backend)
+    ref = label_rwr(g, 4, iters=10, ell=ell)
+    got, n = ShardedSweep(G).label_table(g, 4, 10, 0.15, None, ell_sh)
+    assert int(n) == 10
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_reach_sharded_bitwise(backend):
+    g, rng = _graph(seed=3)
+    ell, ell_sh = _mirrors(g, backend)
+    src = jnp.asarray(rng.integers(0, N, 6).astype(np.int32))
+    ref = _bfs_reach_hops(g, src, 4, ell=ell)
+    got = ShardedSweep(G).reach(g, src, 4, ell=ell_sh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def _dense_from_blocks(ell, n_shards):
+    """Densify a shard-local row-block ELL into the global (n, n) matrix."""
+    n_loc = ell.n
+    r_cap_b = ell.cols.shape[0] // n_shards
+    a = np.zeros((n_loc * n_shards, n_loc * n_shards), np.float32)
+    cols = np.asarray(ell.cols)
+    vals = np.where(np.asarray(ell.mask), np.asarray(ell.vals), 0.0)
+    rows = np.asarray(ell.row_ids)
+    for r_ in range(ell.cols.shape[0]):
+        v = (r_ // r_cap_b) * n_loc + rows[r_]
+        np.add.at(a[v], cols[r_], vals[r_])
+    return a
+
+
+def test_sharded_ell_cache_incremental_matches_fresh_build():
+    rng = np.random.default_rng(7)
+    g = new_graph(N, 4096, n_nodes=N)
+    cache = EllCache(N, 4096, K, n_shards=G)
+    for _ in range(4):
+        upd = UpdateBatch.additions(rng.integers(0, N, 40),
+                                    rng.integers(0, N, 40), u_max=128)
+        em = np.asarray(g.edge_mask)
+        ls = np.asarray(g.senders)[em]
+        lr = np.asarray(g.receivers)[em]
+        if len(ls):
+            idx = rng.choice(len(ls), size=min(10, len(ls)), replace=False)
+            pad = 128 - len(idx)
+            upd = upd._replace(
+                rem_src=jnp.asarray(
+                    np.pad(ls[idx], (0, pad)).astype(np.int32)),
+                rem_dst=jnp.asarray(
+                    np.pad(lr[idx], (0, pad)).astype(np.int32)),
+                rem_mask=jnp.asarray(np.arange(128) < len(idx)))
+        g = cache.update(g, upd)
+        fresh = ell_from_graph(g, K, n_shards=G)
+        np.testing.assert_array_equal(
+            _dense_from_blocks(cache.ell, G),
+            _dense_from_blocks(fresh, G))
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_bucket_2d_mesh_match_equals_plain(backend):
+    g, _ = _graph(seed=1, ne=500)
+    cfg = _cfg(backend)
+    g_shards = min(2, G)
+    ell = ell_from_graph(g, K) if backend == "ell" else None
+    ell_sh = (ell_from_graph(g, K, n_shards=g_shards)
+              if backend == "ell" else None)
+    two_d = QueryBucket(cfg, 8, 8, 4, shard="auto", g_shards=g_shards,
+                        q_budget=len(jax.devices()) // g_shards)
+    plain = QueryBucket(cfg, 8, 8, 4, shard="off")
+    assert two_d.g_shards > 1
+    for i, q in enumerate(query_zoo(4)):
+        two_d.register(f"q{i}", q)
+        plain.register(f"q{i}", q)
+    r_lab = label_rwr(g, cfg.n_labels, iters=cfg.rwr_iters, ell=ell)
+    ra = two_d.match(g, r_lab, ell=ell_sh, graph_sharded=True)
+    rb = plain.match(g, r_lab, ell=ell)
+    for f in ra._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ra, f)),
+                                      np.asarray(getattr(rb, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+@pytest.mark.parametrize("shard", ["off", "auto"])
+def test_server_stores_identical_graph_sharded_vs_off(backend, shard):
+    """End-to-end acceptance pin: a served stream (storms forced, so every
+    step exercises the graph axis) ends with identical per-query stores
+    whether the graph is sharded or replicated — including the mixed 2-D
+    mesh when the query axis shards too."""
+    spec = TemporalGraphSpec("toy", "sparse_dense", n_vertices=N,
+                             n_edges=2048, n_steps=24, seed=5, churn=0.2)
+    cfg = _cfg(backend)
+    stores = {}
+    for graph_shard in ("auto", "off"):
+        srv = MatchServer(cfg, query_zoo(4),
+                          ServingConfig(microbatch_window=256,
+                                        adaptive=False, shard=shard,
+                                        graph_shard=graph_shard,
+                                        full_graph_frac=-1.0),
+                          seed=0)
+        if graph_shard == "auto":
+            assert srv.engine.g_shards > 1
+        stream = generate_stream(spec, n_measured_steps=3, u_max=128)
+        srv.run(stream.graph, stream.updates)
+        stores[graph_shard] = [dict(s._patterns) for s in srv.stores]
+    for a, b in zip(stores["auto"], stores["off"]):
+        assert a == b

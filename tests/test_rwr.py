@@ -1,11 +1,14 @@
-"""RWR vs dense linear-algebra oracle + incremental warm-start behavior."""
+"""RWR vs dense linear-algebra oracle + incremental warm-start behavior +
+the residual-adaptive loop (tolerance-bounded result, measured sweep
+counts, hard cap)."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.graph import UpdateBatch, apply_update, new_graph
-from repro.core.rwr import label_rwr, restart_onehot, rwr, rwr_residual
+from repro.core.rwr import (label_rwr, label_rwr_adaptive, restart_onehot,
+                            rwr, rwr_adaptive, rwr_residual)
 
 pytestmark = pytest.mark.fast
 
@@ -69,3 +72,48 @@ def test_warm_start_converges_faster():
     res_cold = float(rwr_residual(g2, cold, e)[0])
     res_warm = float(rwr_residual(g2, warm, e)[0])
     assert res_warm < res_cold
+
+
+# -- residual-adaptive loop ----------------------------------------------------
+
+def test_adaptive_rwr_within_tol_of_fixed():
+    g = _ring()
+    e = restart_onehot(jnp.array([0, 5]), g.n_max)
+    tol = 1e-5
+    r_fixed = rwr(g, e, iters=200)
+    r_ad, n = rwr_adaptive(g, e, max_iters=200, tol=tol)
+    assert 0 < int(n) < 200  # converged well before the cap
+    # exit residual ≤ tol bounds the fixed-point distance by tol/c; both
+    # iterates sit within that ball of the same fixed point
+    np.testing.assert_allclose(np.asarray(r_ad), np.asarray(r_fixed),
+                               atol=2 * tol / 0.15)
+    # the residual the loop stopped on really is ≤ tol
+    assert float(rwr_residual(g, r_ad, e).max()) <= tol
+
+
+def test_adaptive_rwr_warm_start_uses_fewer_sweeps():
+    g = _ring()
+    e = restart_onehot(jnp.array([0]), g.n_max)
+    r_star = rwr(g, e, iters=80)
+    upd = UpdateBatch.additions(np.array([0]), np.array([6]), u_max=4)
+    g2 = apply_update(g, upd)
+    _, n_cold = rwr_adaptive(g2, e, max_iters=60, tol=1e-5)
+    _, n_warm = rwr_adaptive(g2, e, max_iters=60, tol=1e-5, r0=r_star)
+    assert int(n_warm) < int(n_cold)  # the paper's incremental claim, measured
+
+
+def test_adaptive_rwr_respects_hard_cap():
+    g = _ring()
+    e = restart_onehot(jnp.array([2]), g.n_max)
+    _, n = rwr_adaptive(g, e, max_iters=7, tol=1e-30)  # unreachable tol
+    assert int(n) == 7
+
+
+def test_label_rwr_adaptive_matches_label_rwr():
+    g = _ring()
+    tol = 1e-6
+    r_fixed = label_rwr(g, n_labels=3, iters=60)
+    r_ad, n = label_rwr_adaptive(g, n_labels=3, max_iters=60, tol=tol)
+    assert int(n) < 60  # converged before the cap
+    np.testing.assert_allclose(np.asarray(r_ad), np.asarray(r_fixed),
+                               atol=2 * tol / 0.15)
