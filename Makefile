@@ -6,7 +6,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
-    engine-smoke sweep-smoke
+    engine-smoke sweep-smoke runtime-smoke bench-collect
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -46,3 +46,16 @@ engine-smoke:
 # storm-forced serving with the vertices sharded over ("g",)
 sweep-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/engine_bench.py --smoke --graph-only
+
+# async serving-runtime smoke: the determinism/drain/no-deadlock suite
+# (timeout-bounded — a runtime deadlock must fail CI, not hang it), then
+# the threaded runtime end-to-end on a flash-crowd scenario via the CLI
+runtime-smoke:
+	timeout 900 $(PY) -m pytest tests/test_runtime.py -q
+	PYTHONPATH=src timeout 300 $(PY) -m repro.launch.serve \
+	    --arch igpm-pem --async --scenario flash_crowd \
+	    --rate 3000 --ticks 12 --bank 4
+
+# merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
+bench-collect:
+	PYTHONPATH=src:. $(PY) benchmarks/collect.py

@@ -1,0 +1,62 @@
+"""Merge ``benchmarks/out/*.json`` into one top-level ``BENCH_SUMMARY.json``.
+
+Every bench suite writes its rows to ``benchmarks/out/<suite>.json`` (see
+``benchmarks.common.write_json``). This collector folds them into a single
+machine-readable summary at the repo root so the perf trajectory is
+greppable across PRs without knowing which suite owns which row:
+
+  {
+    "suites": {"<suite>": [{"name", "us_per_call", "derived"}, ...]},
+    "rows":   {"<suite>/<row name>": <us_per_call>, ...},   # flat index
+    "n_suites": ..., "n_rows": ...
+  }
+
+  PYTHONPATH=src:. python benchmarks/collect.py [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_SUMMARY.json")
+
+
+def collect(out_path: str = DEFAULT_OUT) -> dict:
+    suites = {}
+    flat = {}
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        suite = os.path.splitext(os.path.basename(path))[0]
+        with open(path) as f:
+            rows = json.load(f)
+        suites[suite] = rows
+        for r in rows:
+            flat[f"{suite}/{r['name']}"] = r["us_per_call"]
+    summary = {
+        "suites": suites,
+        "rows": flat,
+        "n_suites": len(suites),
+        "n_rows": len(flat),
+    }
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    summary = collect(args.out)
+    print(f"[collect] {summary['n_suites']} suites, "
+          f"{summary['n_rows']} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -311,6 +311,59 @@ class ServingConfig:
             graph_shard=self.graph_shard)
 
 
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Async serving-runtime knobs (DESIGN.md §6).
+
+    The runtime splits one :class:`~repro.serving.server.MatchServer` into
+    two threads: an *ingress* thread that paces the workload by an injected
+    clock, offers events into the bounded/coalescing ``UpdateQueue``, and
+    assembles micro-batches; and a *device-executor* thread that runs
+    ``MatchServer.step_packed`` on each batch and fans the per-query match
+    deltas out to subscribers. A bounded handoff of ``handoff_depth``
+    staged batches connects them; the executor *pops* a batch before
+    running it, so depth 1 is the classic double buffer — one batch in
+    flight on the device while the ingress assembles micro-batch *k+1*
+    into the slot. Deeper handoffs absorb burstier assembly at a direct
+    tail-latency cost: a staged batch is committed work that back-pressure
+    eviction can no longer refresh, so every extra slot adds up to one
+    device step of end-to-end latency under saturation.
+
+    ``ingress`` picks what happens when the executor falls behind and the
+    handoff is full:
+      - ``lockstep`` — the ingress thread blocks pushing its packed batch
+        (arrivals of later ticks wait; executor timing never sheds
+        anything — though a single tick larger than ``queue_depth`` still
+        overflows the queue bound, deterministically). Batch composition
+        is then a pure function of the event sequence, so the async store
+        is bit-identical to the sync replay — the determinism contract
+        ``tests/test_runtime.py`` pins.
+      - ``shed`` — the ingress thread keeps accepting arrivals; pending
+        events pile into the ``UpdateQueue`` where coalescing and the
+        ``queue_depth`` bound apply (drop/evict counters surface in
+        telemetry). Real-time load shedding: under overload the *accepted*
+        event set becomes timing-dependent, by design.
+
+    Micro-batches are cut at workload tick boundaries (a tick with more
+    events than ``ServingConfig.microbatch_window`` splits into
+    deterministic window-sized chunks) — never merged across the point an
+    executor happens to be busy, which is what keeps composition
+    scheduling-independent.
+
+    ``drain_timeout_s`` bounds the graceful ``stop(drain=True)`` flush;
+    ``checkpoint_dir`` (when set) makes the drain checkpoint the whole
+    engine via ``Engine.save`` (``checkpoint_every`` > 0 adds a periodic
+    cadence in steps).
+    """
+
+    handoff_depth: int = 1           # staged batches; 1 = double buffer
+    ingress: str = "lockstep"        # | 'shed'
+    drain_timeout_s: float = 60.0
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0        # steps; 0 = only on drain
+    subscriber_depth: int = 4096     # per-subscriber delta buffer bound
+
+
 # ---------------------------------------------------------------------------
 # Arch + run configs
 # ---------------------------------------------------------------------------

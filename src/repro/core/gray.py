@@ -255,9 +255,9 @@ class BankGRayMatcher:
         iters = iters if iters is not None else self.rwr_iters
         ell = self._ell_for(g, ell)
         if self.rwr_tol > 0:
-            r, _ = label_rwr_adaptive(g, self.n_labels, max_iters=iters,
-                                      tol=self.rwr_tol, c=self.restart,
-                                      r0=r0, ell=ell)
+            r, _, _ = label_rwr_adaptive(g, self.n_labels, max_iters=iters,
+                                         tol=self.rwr_tol, c=self.restart,
+                                         r0=r0, ell=ell)
             return r
         return label_rwr(g, self.n_labels, iters=iters, c=self.restart,
                          r0=r0, ell=ell)
@@ -307,9 +307,9 @@ class BankGRayMatcher:
         adaptive per ``rwr_tol`` (the hard cap is ``rwr_iters`` either
         way)."""
         if self.rwr_tol > 0:
-            r, _ = rwr_adaptive(g, e, max_iters=self.rwr_iters,
-                                tol=self.rwr_tol, c=self.restart, ell=ell,
-                                axis=graph_axis)
+            r, _, _ = rwr_adaptive(g, e, max_iters=self.rwr_iters,
+                                   tol=self.rwr_tol, c=self.restart,
+                                   ell=ell, axis=graph_axis)
             return r
         return rwr(g, e, iters=self.rwr_iters, c=self.restart, ell=ell,
                    axis=graph_axis)

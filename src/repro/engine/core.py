@@ -91,7 +91,9 @@ class Engine:
         self.seed_hits_bounded = 0
         self.seed_misses = 0
         self.rwr_sweeps = 0  # label-RWR sweeps actually run (adaptive)
+        self.rwr_cols_skipped = 0  # converged-column sweeps retired
         self._last_sweeps = 0
+        self._last_cols_skipped = 0
 
     # -- standing-query registry ----------------------------------------------
 
@@ -185,7 +187,8 @@ class Engine:
                 "seed_cache_hits_exact": self.seed_hits_exact,
                 "seed_cache_hits_bounded": self.seed_hits_bounded,
                 "seed_cache_misses": self.seed_misses,
-                "rwr_sweeps": self.rwr_sweeps}
+                "rwr_sweeps": self.rwr_sweeps,
+                "rwr_cols_skipped": self.rwr_cols_skipped}
 
     # -- state lifecycle -------------------------------------------------------
 
@@ -202,6 +205,7 @@ class Engine:
         self.seed_hits = self.seed_misses = 0
         self.seed_hits_exact = self.seed_hits_bounded = 0
         self.rwr_sweeps = 0
+        self.rwr_cols_skipped = 0
         if self.ell_cache is not None:
             self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
                                       self.cfg.ell_width,
@@ -249,27 +253,30 @@ class Engine:
         cfg = self.cfg
         iters = iters if iters is not None else cfg.rwr_iters
         if sharded and self._sweeps is not None:
-            r, n = self._sweeps.label_table(
+            r, n, skipped = self._sweeps.label_table(
                 g, cfg.n_labels, iters, cfg.restart_prob, r0, ell,
                 tol=cfg.rwr_tol)
-            self.rwr_sweeps += int(n)
-            self._last_sweeps = int(n)
+            self._account_sweeps(int(n), int(skipped))
             # decommit from the sweep mesh: bucket meshes may span a
             # different device set, and multi-device-committed inputs do
             # not transfer implicitly. The (n, L) table is tiny next to
             # the sweeps it took to produce.
             return jnp.asarray(np.asarray(r))
         if cfg.rwr_tol > 0:
-            r, n = label_rwr_adaptive(
+            r, n, skipped = label_rwr_adaptive(
                 g, cfg.n_labels, max_iters=iters, tol=cfg.rwr_tol,
                 c=cfg.restart_prob, r0=r0, ell=ell)
-            self.rwr_sweeps += int(n)
-            self._last_sweeps = int(n)
+            self._account_sweeps(int(n), int(skipped))
             return r
-        self.rwr_sweeps += iters
-        self._last_sweeps = iters
+        self._account_sweeps(iters, 0)
         return label_rwr(g, cfg.n_labels, iters=iters,
                          c=cfg.restart_prob, r0=r0, ell=ell)
+
+    def _account_sweeps(self, n: int, skipped: int) -> None:
+        self.rwr_sweeps += n
+        self.rwr_cols_skipped += skipped
+        self._last_sweeps = n
+        self._last_cols_skipped = skipped
 
     def _merge(self, results, remap=None,
                rebuild: bool = False) -> Tuple[QueryDelta, ...]:
@@ -397,6 +404,7 @@ def engine_step(eng: Engine, state: EngineState,
     rl_loss = 0.0
 
     eng._last_sweeps = 0
+    eng._last_cols_skipped = 0
     if ecfg.mode == "batch":
         # the paper's Batch oracle: full fresh pass, stores rebuilt
         frac = 0.0
@@ -496,5 +504,6 @@ def engine_step(eng: Engine, state: EngineState,
         storm=storm, subgraph_nodes=sub_n, subgraph_edges=sub_e,
         ell_refresh_s=refresh_s, n_pruned=n_pruned, n_events=n_events,
         rlab_cache_hit=rlab_hit, seed_cache_hit=seed_hit,
-        rwr_sweeps=eng._last_sweeps, deltas=deltas)
+        rwr_sweeps=eng._last_sweeps,
+        rwr_cols_skipped=eng._last_cols_skipped, deltas=deltas)
     return new_state, out

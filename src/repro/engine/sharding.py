@@ -213,10 +213,12 @@ class ShardedSweep:
 
     def label_table(self, g: DynamicGraph, n_labels: int, iters: int,
                     c: float, r0: Optional[jnp.ndarray],
-                    ell: Optional[EllGraph],
-                    tol: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Sharded :func:`label_rwr` → ``(r_lab, n_sweeps)`` (the sweep
-        count is ``iters`` on the fixed path, measured when ``tol > 0``)."""
+                    ell: Optional[EllGraph], tol: float = 0.0
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Sharded :func:`label_rwr` → ``(r_lab, n_sweeps, n_col_skipped)``
+        (the sweep count is ``iters`` on the fixed path, measured when
+        ``tol > 0``; the converged-column skip count is 0 on the fixed
+        path)."""
         has_r0, has_ell = r0 is not None, ell is not None
         key = ("lab", has_ell, has_r0, n_labels, iters, c, tol)
 
@@ -229,20 +231,22 @@ class ShardedSweep:
                         g_, n_labels, max_iters=iters, tol=tol, c=c,
                         r0=r0_, ell=ell_, axis="g")
                 return (label_rwr(g_, n_labels, iters=iters, c=c, r0=r0_,
-                                  ell=ell_, axis="g"), jnp.int32(iters))
+                                  ell=ell_, axis="g"), jnp.int32(iters),
+                        jnp.int32(0))
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh, in_specs=self._specs(has_r0, ell, g),
-                out_specs=(_REP, _REP), check_rep=False))
+                out_specs=(_REP, _REP, _REP), check_rep=False))
 
         args = (g,) + ((r0,) if has_r0 else ()) + ((ell,) if has_ell else ())
         return self._call(key, build, *args)
 
     def run_rwr(self, g: DynamicGraph, e: jnp.ndarray, iters: int,
                 c: float = 0.15, r0: Optional[jnp.ndarray] = None,
-                ell: Optional[EllGraph] = None,
-                tol: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Sharded :func:`rwr` / :func:`rwr_adaptive` → ``(r, n_sweeps)``."""
+                ell: Optional[EllGraph] = None, tol: float = 0.0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Sharded :func:`rwr` / :func:`rwr_adaptive` →
+        ``(r, n_sweeps, n_col_skipped)``."""
         has_r0, has_ell = r0 is not None, ell is not None
         key = ("rwr", has_ell, has_r0, iters, c, tol)
 
@@ -254,11 +258,11 @@ class ShardedSweep:
                     return rwr_adaptive(g_, e_, max_iters=iters, tol=tol,
                                         c=c, r0=r0_, ell=ell_, axis="g")
                 return (rwr(g_, e_, iters=iters, c=c, r0=r0_, ell=ell_,
-                            axis="g"), jnp.int32(iters))
+                            axis="g"), jnp.int32(iters), jnp.int32(0))
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh, in_specs=self._specs(has_r0, ell, g, e),
-                out_specs=(_REP, _REP), check_rep=False))
+                out_specs=(_REP, _REP, _REP), check_rep=False))
 
         args = (g, e) + ((r0,) if has_r0 else ()) + ((ell,) if has_ell else ())
         return self._call(key, build, *args)

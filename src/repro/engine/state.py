@@ -70,6 +70,7 @@ class StepOutput(NamedTuple):
     rlab_cache_hit: bool      # storm step reused r_lab without refreshing
     seed_cache_hit: bool      # storm step reused every bucket's seed top-k
     rwr_sweeps: int = 0       # label-RWR sweeps run (measured if adaptive)
+    rwr_cols_skipped: int = 0  # converged-column sweeps retired (adaptive)
     deltas: Tuple[QueryDelta, ...] = ()
 
     @property

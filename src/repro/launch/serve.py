@@ -6,6 +6,8 @@ pattern-match server (IGPM), on the reduced configs.
   PYTHONPATH=src python -m repro.launch.serve --arch bst
   PYTHONPATH=src python -m repro.launch.serve --arch igpm-pem \\
       --bank 8 --steps 12 --churn 0.25 --hotspot
+  PYTHONPATH=src python -m repro.launch.serve --arch igpm-pem \\
+      --async --scenario flash_crowd --rate 4000 --ticks 24
 """
 
 from __future__ import annotations
@@ -172,6 +174,75 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
         print(f"[serve] saved PEM policy to {policy_dir}")
 
 
+def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
+                     bank: int, sync_too: bool = False,
+                     checkpoint_dir: str = "") -> None:
+    """Async serving runtime on a seeded workload scenario (DESIGN.md §6):
+    a dedicated ingress thread replays the arrival process against the
+    wall clock while the device-executor thread runs double-buffered
+    micro-batches; match deltas stream to a subscriber and the closing
+    drain flushes in-flight batches (whole-engine ``Engine.save`` when
+    ``--checkpoint-dir`` names a directory — distinct from the sync
+    path's policy-only ``--policy-dir`` artifacts). ``--sync-too``
+    replays the identical workload
+    through the single-threaded reference driver first, so the two
+    tail-latency snapshots print side by side."""
+    from repro.config.base import RuntimeConfig, ServingConfig
+    from repro.core.query import query_zoo
+    from repro.runtime import (SCENARIOS, ServingRuntime, VirtualClock,
+                               WallClock, build_workload, run_workload_sync)
+    from repro.serving import MatchServer
+
+    if scenario not in SCENARIOS:
+        raise SystemExit(f"unknown scenario {scenario!r} "
+                         f"(have: {sorted(SCENARIOS)})")
+    sc = SCENARIOS[scenario](rate=rate, tick_s=0.05, n_ticks=ticks,
+                             n_vertices=min(arch.model.n_max, 1024), seed=0)
+    wl = build_workload(sc, u_max=512)
+    print(f"[serve] scenario={scenario} rate={rate:.0f}/s "
+          f"ticks={ticks} events={wl.n_events} "
+          f"duration={sc.duration_s:.1f}s")
+    import dataclasses
+    cfg = dataclasses.replace(arch.model, n_max=wl.graph.n_max,
+                              e_max=wl.graph.e_max)
+    serving = ServingConfig(microbatch_window=256, queue_depth=2048)
+
+    def _report(tag: str, server: MatchServer) -> None:
+        snap = server.telemetry.snapshot()
+        print(f"[serve] {tag}: steps={snap['steps']} "
+              f"p50_step={snap['p50_step_ms']:.1f}ms "
+              f"p99_step={snap['p99_step_ms']:.1f}ms "
+              f"p99_e2e={snap.get('p99_e2e_ms', 0):.1f}ms "
+              f"p999_e2e={snap.get('p999_e2e_ms', 0):.1f}ms "
+              f"dropped={snap['dropped_events']} "
+              f"(evicted={snap['evicted_events']} "
+              f"rejected={snap['rejected_events']})")
+
+    if sync_too:
+        ref = MatchServer(cfg, query_zoo(bank), serving, seed=0)
+        run_workload_sync(ref, wl, clock=VirtualClock())  # warm
+        ref.reset()
+        run_workload_sync(ref, wl, clock=WallClock())
+        _report("sync ", ref)
+
+    server = MatchServer(cfg, query_zoo(bank), serving, seed=0)
+    run_workload_sync(server, wl, clock=VirtualClock())  # warm
+    server.reset()
+    rt = ServingRuntime(server,
+                        RuntimeConfig(ingress="shed",
+                                      checkpoint_dir=checkpoint_dir),
+                        clock=WallClock())
+    sub = rt.subscribe()
+    rt.serve(wl)
+    _report("async", server)
+    deltas = sub.drain()
+    new = sum(d.n_new for _, d in deltas)
+    print(f"[serve] subscriber saw {len(deltas)} deltas, {new} new patterns"
+          + (f"; drained checkpoint -> {checkpoint_dir}"
+             if checkpoint_dir else ""))
+    print(f"[serve] queue: {server.queue.stats()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -194,6 +265,22 @@ def main() -> None:
                     metavar="STEP:QID",
                     help="igpm: retire a standing query mid-stream; "
                          "repeatable")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="igpm: threaded ingress + double-buffered device "
+                         "executor on a workload scenario (DESIGN.md §6)")
+    ap.add_argument("--scenario", default="flash_crowd",
+                    help="igpm --async: poisson|flash_crowd|diurnal|"
+                         "churn_heavy")
+    ap.add_argument("--rate", type=float, default=4000.0,
+                    help="igpm --async: mean event arrivals per second")
+    ap.add_argument("--ticks", type=int, default=24,
+                    help="igpm --async: arrival-process ticks (50 ms each)")
+    ap.add_argument("--sync-too", action="store_true",
+                    help="igpm --async: also run the single-threaded "
+                         "reference driver for a side-by-side snapshot")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="igpm --async: drain checkpoints the whole "
+                         "engine here via Engine.save")
     args = ap.parse_args()
     arch = get_arch(args.arch, smoke=True)
     if arch.family == "lm":
@@ -201,9 +288,14 @@ def main() -> None:
     elif arch.family == "recsys":
         serve_bst(arch)
     elif arch.family == "igpm":
-        serve_igpm(arch, args.steps, args.bank, args.churn, args.hotspot,
-                   policy_dir=args.policy_dir, register=args.register,
-                   retire=args.retire)
+        if args.use_async:
+            serve_igpm_async(arch, args.scenario, args.rate, args.ticks,
+                             args.bank, sync_too=args.sync_too,
+                             checkpoint_dir=args.checkpoint_dir)
+        else:
+            serve_igpm(arch, args.steps, args.bank, args.churn,
+                       args.hotspot, policy_dir=args.policy_dir,
+                       register=args.register, retire=args.retire)
     else:
         raise SystemExit(f"{args.arch} ({arch.family}) has no serve path")
 

@@ -1,0 +1,25 @@
+"""Async serving runtime (DESIGN.md §6).
+
+Threaded ingress + double-buffered device executor around one
+:class:`~repro.serving.server.MatchServer`: the host assembles micro-batch
+*k+1* while the device runs step *k*, match deltas fan out to subscribers,
+and a graceful drain flushes in-flight batches and checkpoints via
+``Engine.save``. Workload scenarios (Poisson steady state, flash crowd,
+diurnal ramp, churn-heavy) layer seeded arrival processes on the temporal
+stream generators so tail-latency SLOs are measured against reproducible
+traffic.
+"""
+
+from repro.runtime.clock import Clock, VirtualClock, WallClock
+from repro.runtime.runtime import (PackedBatch, ServingRuntime, Subscription,
+                                   run_workload_sync)
+from repro.runtime.scenarios import (SCENARIOS, ScenarioConfig, Tick,
+                                     Workload, build_workload, churn_heavy,
+                                     diurnal, flash_crowd, poisson)
+
+__all__ = [
+    "Clock", "VirtualClock", "WallClock",
+    "PackedBatch", "ServingRuntime", "Subscription", "run_workload_sync",
+    "SCENARIOS", "ScenarioConfig", "Tick", "Workload", "build_workload",
+    "churn_heavy", "diurnal", "flash_crowd", "poisson",
+]

@@ -1,0 +1,435 @@
+"""The async serving runtime — threaded ingress + double-buffered executor.
+
+``ServingRuntime`` splits one :class:`~repro.serving.server.MatchServer`
+into the two halves a real-time deployment needs to overlap
+(DESIGN.md §6):
+
+  * the **ingress thread** replays a :class:`~repro.runtime.scenarios.
+    Workload` against the injected clock: it offers each tick's events
+    into the server's bounded/coalescing ``UpdateQueue``, then assembles
+    the tick into micro-batches (window-sized chunks) and pushes the
+    packed batches into the handoff. All host-side stream handling —
+    drain, coalesce, pack — happens here, overlapped with device work.
+  * the **device-executor thread** pops packed batches and runs
+    ``MatchServer.step_packed`` (the ONE engine pipeline), fans the
+    per-query :class:`~repro.serving.server.MatchDelta`s out to
+    subscribers, and stamps queue-wait / end-to-end latencies.
+
+The **handoff** between them is a bounded buffer of staged batches; the
+executor pops a batch before running it, so the default depth 1 is the
+classic double buffer — one batch in flight on the device while the host
+assembles micro-batch *k+1* into the freed slot. (Deeper handoffs trade
+tail latency for assembly slack: a staged batch is committed work that
+eviction can no longer refresh.) When the executor falls behind,
+``RuntimeConfig.ingress`` picks the back-pressure story: ``lockstep``
+blocks the ingress push (executor timing never sheds anything — a single
+tick larger than ``queue_depth`` can still overflow the bound,
+deterministically — and because only the ingress thread ever touches the
+queue and assembly points are tick-deterministic, the async store is
+bit-identical to the sync replay); ``shed`` keeps ingesting while
+pending events pile into the ``UpdateQueue``, where coalescing and the
+depth bound drop the overflow (counted, surfaced in telemetry).
+
+Micro-batches are cut at tick boundaries and never merged across whenever
+an executor happened to be busy — composition is scheduling-independent,
+which is the whole determinism contract: threading changes *when* work
+runs, never *what* it computes.
+
+``run_workload_sync`` is the single-threaded reference driver: same
+workload, same stamps, same step entry point — the baseline the
+sync-vs-async benchmarks and the bit-identical tests compare against.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, List, NamedTuple, Optional, Tuple
+
+from repro.config.base import RuntimeConfig
+from repro.core.graph import DynamicGraph, UpdateBatch
+from repro.runtime.clock import Clock, VirtualClock, WallClock
+from repro.runtime.scenarios import Workload
+from repro.serving.queue import UpdateQueue
+from repro.serving.server import MatchDelta, MatchServer, ServingStepStats
+
+
+class PackedBatch(NamedTuple):
+    """One assembled micro-batch in the ingress → executor handoff."""
+
+    upd: UpdateBatch
+    n_events: int
+    arrivals: Tuple[float, ...]  # nominal arrival stamps of packed events
+    t_packed: float
+    assembly_s: float
+
+
+class _Handoff:
+    """Bounded FIFO of packed batches — the double buffer."""
+
+    def __init__(self, depth: int):
+        self.depth = depth
+        self._items: Deque[PackedBatch] = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def wait_space(self, block: bool, interrupt: threading.Event) -> bool:
+        """True when a push will succeed. ``block=False`` (shed) just
+        peeks; ``block=True`` (lockstep) waits until the executor frees a
+        slot or ``interrupt`` fires."""
+        with self._cv:
+            while len(self._items) >= self.depth and not self._closed:
+                if not block or interrupt.is_set():
+                    return False
+                self._cv.wait(0.05)
+            return not self._closed
+
+    def push(self, item: PackedBatch) -> None:
+        with self._cv:
+            self._items.append(item)
+            self._cv.notify_all()
+
+    def pop(self, timeout: float) -> Optional[PackedBatch]:
+        with self._cv:
+            if not self._items:
+                self._cv.wait(timeout)
+            if not self._items:
+                return None
+            item = self._items.popleft()
+            self._cv.notify_all()
+            return item
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._items)
+
+
+class Subscription:
+    """One subscriber's bounded delta stream (oldest evicted past
+    ``depth``; evictions counted — a slow consumer never stalls the
+    executor)."""
+
+    def __init__(self, query: Optional[str], depth: int):
+        self.query = query
+        self._items: Deque[Tuple[int, MatchDelta]] = deque()
+        self.depth = depth
+        self.n_evicted = 0
+        self._cv = threading.Condition()
+
+    def _put(self, step: int, delta: MatchDelta) -> None:
+        with self._cv:
+            if len(self._items) >= self.depth:
+                self._items.popleft()
+                self.n_evicted += 1
+            self._items.append((step, delta))
+            self._cv.notify_all()
+
+    def get(self, timeout: float = 1.0) -> Optional[Tuple[int, MatchDelta]]:
+        with self._cv:
+            if not self._items:
+                self._cv.wait(timeout)
+            return self._items.popleft() if self._items else None
+
+    def drain(self) -> List[Tuple[int, MatchDelta]]:
+        with self._cv:
+            out = list(self._items)
+            self._items.clear()
+            return out
+
+
+class _StampedIngress:
+    """The server's UpdateQueue plus a parallel ring of nominal arrival
+    stamps, kept count-consistent through offers, coalescing annihilation,
+    back-pressure eviction, and drains (annihilation pops the newest
+    stamp, eviction the oldest — the stamp-to-event pairing is
+    approximate under coalescing, the counts are exact)."""
+
+    def __init__(self, queue: UpdateQueue):
+        self.queue = queue
+        self._stamps: Deque[float] = deque()
+
+    def offer(self, ev, t_arrival: float) -> bool:
+        before = len(self.queue)
+        ok = self.queue.offer(ev)
+        delta = len(self.queue) - before
+        if delta == 1:             # entered and stayed pending
+            self._stamps.append(t_arrival)
+        elif delta == -1:          # annihilated a pending opposite event
+            if self._stamps:
+                self._stamps.pop()
+        elif not ok and self.queue.policy == "drop_oldest":
+            # overflow: the stalest pending event was evicted for this one
+            if self._stamps:
+                self._stamps.popleft()
+            self._stamps.append(t_arrival)
+        # remaining case — drop_newest rejection: nothing entered
+        return ok
+
+    def assemble(self, window: int, u_max: int,
+                 t_packed: float) -> Optional[PackedBatch]:
+        """Drain one window-sized chunk into a packed batch."""
+        if len(self.queue) == 0:
+            return None
+        t0 = time.perf_counter()
+        events = self.queue.drain(window)
+        stamps = tuple(self._stamps.popleft() if self._stamps else t_packed
+                       for _ in events)
+        upd = UpdateQueue.pack(events, u_max)
+        return PackedBatch(upd, len(events), stamps, t_packed,
+                           time.perf_counter() - t0)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+
+def _record_batch_latencies(tel, item: PackedBatch, t_done: float) -> None:
+    """Stamp one executed batch's latency channels — shared by the async
+    executor and the sync reference driver so the sync-vs-async benchmark
+    always compares structurally identical channels."""
+    tel.record_latency("assembly", item.assembly_s)
+    tel.record_latency("queue_wait",
+                       *(item.t_packed - a for a in item.arrivals))
+    tel.record_latency("e2e", *(t_done - a for a in item.arrivals))
+
+
+class ServingRuntime:
+    """Threaded async serving around one MatchServer (module docstring)."""
+
+    def __init__(self, server: MatchServer,
+                 rcfg: Optional[RuntimeConfig] = None,
+                 clock: Optional[Clock] = None):
+        if rcfg is not None:
+            if rcfg.ingress not in ("lockstep", "shed"):
+                raise ValueError(f"unknown ingress policy {rcfg.ingress!r}")
+            if rcfg.handoff_depth < 1:
+                raise ValueError(
+                    f"handoff_depth must be >= 1 (one staged batch is the "
+                    f"double buffer), got {rcfg.handoff_depth}")
+        self.server = server
+        self.rcfg = rcfg or RuntimeConfig()
+        self.clock = clock or WallClock()
+        self.telemetry = server.telemetry
+        self.stats: List[ServingStepStats] = []
+        self._ingress = _StampedIngress(server.queue)
+        self._handoff = _Handoff(self.rcfg.handoff_depth)
+        self._subs: List[Subscription] = []
+        self._stop_now = threading.Event()     # abort: drop in-flight work
+        self._stop_ingest = threading.Event()  # any stop: halt/wake pacing
+        self._threads: List[threading.Thread] = []
+        self._graph: Optional[DynamicGraph] = None
+        self._exc: List[BaseException] = []
+        self.n_checkpoints = 0
+
+    # -- subscriptions --------------------------------------------------------
+
+    def subscribe(self, query: Optional[str] = None) -> Subscription:
+        """Stream ``(step, MatchDelta)`` pairs; ``query`` filters by
+        standing-query name (None = all)."""
+        sub = Subscription(query, self.rcfg.subscriber_depth)
+        self._subs.append(sub)
+        return sub
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self, workload: Workload) -> None:
+        if self._threads:
+            raise RuntimeError("runtime already started")
+        # re-read the server's queue/telemetry: MatchServer.reset()
+        # rebinds both, and a runtime constructed before a reset must not
+        # keep feeding the orphaned pre-reset queue (the drop counters
+        # would silently desync from the one step_packed reads)
+        self._ingress = _StampedIngress(self.server.queue)
+        self.telemetry = self.server.telemetry
+        self._graph = workload.graph
+        t_in = threading.Thread(target=self._guard, name="rt-ingress",
+                                args=(self._ingress_main, workload))
+        t_ex = threading.Thread(target=self._guard, name="rt-executor",
+                                args=(self._executor_main,))
+        self._threads = [t_in, t_ex]
+        for t in self._threads:
+            t.start()
+
+    def serve(self, workload: Workload) -> List[ServingStepStats]:
+        """Blocking convenience: start, replay the whole workload, drain,
+        checkpoint (when configured), join. Returns the per-step stats."""
+        self.start(workload)
+        if not self.join(timeout=self.rcfg.drain_timeout_s
+                         + workload.scenario.duration_s):
+            self.stop(drain=False)
+            raise TimeoutError("serving runtime did not finish the workload")
+        return self.stats
+
+    def stop(self, drain: bool = True) -> bool:
+        """Stop serving. ``drain=True`` flushes every accepted event
+        through the pipeline first (bounded by ``drain_timeout_s``), then
+        checkpoints; ``drain=False`` aborts in place."""
+        if drain:
+            self._stop_ingest.set()
+            if self.join(timeout=self.rcfg.drain_timeout_s):
+                return True
+        self._stop_now.set()
+        self._stop_ingest.set()
+        # even an abort must wait out the one in-flight device step —
+        # jax compute (or a first-step compile) cannot be interrupted
+        return self.join(timeout=self.rcfg.drain_timeout_s)
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait for both threads; True when the runtime fully stopped."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for t in self._threads:
+            t.join(None if deadline is None
+                   else max(deadline - time.monotonic(), 0.0))
+        alive = any(t.is_alive() for t in self._threads)
+        if not alive and self._exc:
+            raise self._exc[0]
+        return not alive
+
+    @property
+    def graph(self) -> Optional[DynamicGraph]:
+        return self._graph
+
+    # -- thread bodies --------------------------------------------------------
+
+    def _guard(self, fn, *args) -> None:
+        try:
+            fn(*args)
+        except BaseException as e:  # surface thread crashes to join()
+            self._exc.append(e)
+            self._stop_now.set()
+            self._stop_ingest.set()
+            self._handoff.close()
+
+    def _flush(self, block: bool) -> None:
+        """Assemble pending events into packed batches while the handoff
+        (and lockstep policy) allows."""
+        window = self.server.serving.microbatch_window
+        while len(self._ingress) > 0 and not self._stop_now.is_set():
+            if not self._handoff.wait_space(block, self._stop_now):
+                return
+            item = self._ingress.assemble(window, self.server.u_max,
+                                          self.clock.now())
+            if item is None:
+                return
+            self._handoff.push(item)
+
+    def _ingress_main(self, workload: Workload) -> None:
+        lockstep = self.rcfg.ingress == "lockstep"
+        for tick in workload.ticks:
+            if self._stop_ingest.is_set():
+                break
+            self.clock.wait_until(tick.t, self._stop_ingest)
+            if self._stop_ingest.is_set():
+                break
+            for ev in tick.events:
+                # nominal arrival stamp: open-loop arrivals, so a late
+                # ingress can't hide queueing delay (no coordinated
+                # omission)
+                self._ingress.offer(ev, tick.t)
+            self._flush(block=lockstep)
+        # graceful drain: everything still pending goes through, with
+        # blocking pushes (the executor is consuming; stop(drain=False)
+        # interrupts via _stop_now)
+        if not self._stop_now.is_set():
+            self._flush(block=True)
+        self._handoff.close()
+
+    def _executor_main(self) -> None:
+        srv = self.server
+        g = self._graph
+        every = self.rcfg.checkpoint_every
+        while not self._stop_now.is_set():
+            item = self._handoff.pop(timeout=0.05)
+            if item is None:
+                if self._handoff.closed and len(self._handoff) == 0:
+                    break
+                continue
+            g, st = srv.step_packed(g, item.upd, item.n_events)
+            self._graph = g
+            _record_batch_latencies(self.telemetry, item, self.clock.now())
+            self.stats.append(st)
+            for sub in self._subs:
+                for d in st.deltas:
+                    if sub.query is None or sub.query == d.query:
+                        sub._put(st.step, d)
+            if every > 0 and self.rcfg.checkpoint_dir \
+                    and len(self.stats) % every == 0:
+                srv.save(self.rcfg.checkpoint_dir)
+                self.n_checkpoints += 1
+        if (not self._stop_now.is_set() and self.rcfg.checkpoint_dir
+                and srv._state is not None):
+            # drain checkpoint: the whole engine (graph, banks, PEM/DQN,
+            # stores) via Engine.save — a restarted runtime resumes here
+            srv.save(self.rcfg.checkpoint_dir)
+            self.n_checkpoints += 1
+
+
+def run_workload_sync(server: MatchServer, workload: Workload,
+                      clock: Optional[Clock] = None, ingest: str = "open"
+                      ) -> Tuple[DynamicGraph, List[ServingStepStats]]:
+    """The synchronous reference driver: identical workload replay, event
+    stamps, chunking rule, queue bound, and ``step_packed`` entry point —
+    but ingress and device execution interleave on ONE thread.
+
+    ``ingest`` picks which single-threaded server this models:
+
+    * ``"open"`` — between device steps, every tick whose nominal time
+      has passed is offered into the bounded queue, where coalescing and
+      the depth bound shed overload exactly as they do for the async
+      runtime (a poll-between-steps server). The strongest sync baseline:
+      same queue bound, same window chunking over whatever is pending
+      (under backlog both it and the shed-mode runtime pack batches that
+      span ticks) — what it lacks is only the ingress/execution overlap.
+    * ``"closed"`` — the pre-runtime ``MatchServer`` serving loop: each
+      tick is ingested only once the whole prior backlog has been
+      processed, so the server never *sees* arrivals while it is busy.
+      Overload therefore accumulates as unbounded pacing lag the queue
+      bound cannot shed — the structural deficiency the async runtime
+      exists to fix, kept here as the historical baseline the benchmark
+      quotes.
+
+    Under a ``VirtualClock`` the two modes coincide (time only advances
+    when the queue runs dry), and batch composition is per-tick
+    deterministic — identical to the lockstep async runtime's, the
+    property the bit-identical tests build on."""
+    if ingest not in ("open", "closed"):
+        raise ValueError(f"unknown ingest mode {ingest!r}")
+    clock = clock or VirtualClock()
+    ingress = _StampedIngress(server.queue)
+    window = server.serving.microbatch_window
+    never = threading.Event()
+    tel = server.telemetry
+    g = workload.graph
+    stats: List[ServingStepStats] = []
+    ticks = workload.ticks
+    ti = 0
+    while ti < len(ticks) or len(ingress) > 0:
+        if ti < len(ticks) and len(ingress) == 0:
+            clock.wait_until(ticks[ti].t, never)   # idle until next arrival
+        if ingest == "open":
+            now = clock.now()
+            while ti < len(ticks) and ticks[ti].t <= now:
+                for ev in ticks[ti].events:
+                    ingress.offer(ev, ticks[ti].t)
+                ti += 1
+        elif len(ingress) == 0:    # closed: one tick at a time, backlog
+            for ev in ticks[ti].events:   # first (already waited above)
+                ingress.offer(ev, ticks[ti].t)
+            ti += 1
+        if len(ingress) == 0:
+            continue
+        item = ingress.assemble(window, server.u_max, clock.now())
+        g, st = server.step_packed(g, item.upd, item.n_events)
+        _record_batch_latencies(tel, item, clock.now())
+        stats.append(st)
+    return g, stats

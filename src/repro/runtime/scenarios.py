@@ -1,0 +1,168 @@
+"""Workload scenarios — seeded arrival processes over temporal streams.
+
+A *scenario* layers an arrival process on a
+:class:`~repro.data.temporal.TemporalGraphSpec` stream: the stream decides
+WHAT the events are (edge adds/removes with the paper's graph structure,
+churn, hotspot content), the arrival process decides WHEN they reach the
+serving runtime. Time quantizes into ``tick_s`` quanta; each tick carries
+the events the (seeded) arrival process emits in that quantum, so a
+workload is a deterministic list of ``Tick(t, events)`` the ingress thread
+replays against the injected clock — identical across runs and identical
+for the sync and async drivers (DESIGN.md §6).
+
+The four shipped shapes target the serving regimes the tail-latency SLOs
+are written against (StreamWorks-style continuous-query serving,
+PAPERS.md):
+
+  * ``poisson``      — steady state: events ~ Poisson(rate · tick_s).
+  * ``flash_crowd``  — baseline Poisson with periodic bursts of
+    ``burst_amplitude``× the rate whose *content* is a hotspot stream
+    (every burst lands in one small vertex region) — the back-pressure
+    sizing scenario.
+  * ``diurnal``      — the rate rides a day-cycle ramp between ~25% and
+    100% of ``rate`` (capacity planning: the runtime must not queue up
+    at the peak of the ramp).
+  * ``churn_heavy``  — steady arrivals, but every step deletes as many
+    live edges as it adds (store pruning + coalescing under fire).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, NamedTuple
+
+import numpy as np
+
+from repro.data.temporal import (TemporalGraphSpec, TemporalStream,
+                                 generate_stream)
+from repro.serving.queue import UpdateEvent, batch_to_events
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """One workload scenario: arrival process + underlying stream shape."""
+
+    name: str
+    kind: str                    # poisson | flash_crowd | diurnal | churn_heavy
+    rate: float = 20_000.0       # mean event arrivals per second
+    tick_s: float = 0.01         # arrival-process integration quantum
+    n_ticks: int = 64
+    seed: int = 0
+    # flash crowd
+    burst_amplitude: float = 8.0
+    burst_period: int = 16       # ticks between burst onsets
+    burst_len: int = 4           # ticks a burst lasts
+    # diurnal
+    diurnal_periods: float = 1.0  # day cycles across the run
+    # underlying stream shape
+    n_vertices: int = 256
+    graph_kind: str = "sparse_dense"
+    churn: float = 0.0
+    hotspot: bool = False
+
+    @property
+    def duration_s(self) -> float:
+        return self.n_ticks * self.tick_s
+
+
+class Tick(NamedTuple):
+    """Events the arrival process emits in one quantum, at time ``t``."""
+
+    t: float
+    events: List[UpdateEvent]
+
+
+class Workload(NamedTuple):
+    scenario: ScenarioConfig
+    spec: TemporalGraphSpec
+    stream: TemporalStream       # carries the warmed-up starting graph
+    ticks: List[Tick]
+    n_events: int
+
+    @property
+    def graph(self):
+        return self.stream.graph
+
+
+def _tick_rates(sc: ScenarioConfig) -> np.ndarray:
+    """Mean arrivals per tick, per the scenario's rate shape."""
+    base = sc.rate * sc.tick_s
+    t = np.arange(sc.n_ticks, dtype=np.float64)
+    if sc.kind in ("poisson", "churn_heavy"):
+        return np.full(sc.n_ticks, base)
+    if sc.kind == "flash_crowd":
+        in_burst = (t % sc.burst_period) < sc.burst_len
+        return np.where(in_burst, sc.burst_amplitude * base, base)
+    if sc.kind == "diurnal":
+        phase = 2.0 * np.pi * sc.diurnal_periods * t / max(sc.n_ticks, 1)
+        # ramp between ~25% and 100% of the configured rate
+        return base * (0.25 + 0.75 * 0.5 * (1.0 - np.cos(phase)))
+    raise ValueError(f"unknown scenario kind {sc.kind!r}")
+
+
+def build_workload(sc: ScenarioConfig, n_max: int | None = None,
+                   e_max: int | None = None,
+                   u_max: int = 512) -> Workload:
+    """Materialize a scenario: seeded per-tick arrival counts, then the
+    matching number of stream events (in stream order) dealt out tick by
+    tick. Everything downstream of the two seeds is deterministic."""
+    rng = np.random.default_rng(sc.seed + 1)
+    counts = rng.poisson(_tick_rates(sc)).astype(np.int64)
+    need = int(counts.sum())
+
+    churn = 1.0 if sc.kind == "churn_heavy" else sc.churn
+    hotspot = sc.kind == "flash_crowd" or sc.hotspot
+    # additions the measured stream must carry (removals ride along at
+    # `churn` per addition and count as events too)
+    need_adds = max(int(np.ceil(need / (1.0 + churn))), 1)
+    per_step = u_max // 2
+    if churn > 0:
+        per_step = min(per_step, int(u_max / (2.0 * churn)))
+    n_meas = int(np.ceil(need_adds / max(per_step, 1))) + 1
+    n_edges = max(8 * sc.n_vertices, 4 * need_adds)
+    # keep edges_per_step ≥ the per-step cap so every measured batch is full
+    n_steps = max(4, n_edges // (2 * per_step))
+    spec = TemporalGraphSpec(
+        sc.name, sc.graph_kind, n_vertices=sc.n_vertices, n_edges=n_edges,
+        n_steps=n_steps, seed=sc.seed, churn=churn, hotspot=hotspot,
+        hotspot_period=1 if sc.kind == "flash_crowd" else 4)
+    stream = generate_stream(spec, n_max=n_max, e_max=e_max,
+                             n_measured_steps=n_meas, u_max=u_max)
+    flat: List[UpdateEvent] = []
+    for upd in stream.updates:
+        flat.extend(batch_to_events(upd))
+
+    ticks: List[Tick] = []
+    cursor = 0
+    for i, k in enumerate(counts):
+        take = min(int(k), len(flat) - cursor)
+        ticks.append(Tick(t=i * sc.tick_s,
+                          events=flat[cursor:cursor + take]))
+        cursor += take
+    return Workload(sc, spec, stream, ticks, cursor)
+
+
+# -- the shipped scenario shapes ----------------------------------------------
+
+def poisson(**kw) -> ScenarioConfig:
+    return ScenarioConfig(name="poisson", kind="poisson", **kw)
+
+
+def flash_crowd(**kw) -> ScenarioConfig:
+    return ScenarioConfig(name="flash_crowd", kind="flash_crowd", **kw)
+
+
+def diurnal(**kw) -> ScenarioConfig:
+    return ScenarioConfig(name="diurnal", kind="diurnal", **kw)
+
+
+def churn_heavy(**kw) -> ScenarioConfig:
+    return ScenarioConfig(name="churn_heavy", kind="churn_heavy", **kw)
+
+
+SCENARIOS: Dict[str, Callable[..., ScenarioConfig]] = {
+    "poisson": poisson,
+    "flash_crowd": flash_crowd,
+    "diurnal": diurnal,
+    "churn_heavy": churn_heavy,
+}

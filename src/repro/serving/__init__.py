@@ -7,11 +7,12 @@ the bank and vmapping G-Ray over the stacked query axis.
 """
 
 from repro.serving.queue import (ADD, RELABEL, REMOVE, UpdateEvent,
-                                 UpdateQueue)
+                                 UpdateQueue, batch_to_events)
 from repro.serving.server import (MatchDelta, MatchServer, ServingStepStats)
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
     "ADD", "REMOVE", "RELABEL", "UpdateEvent", "UpdateQueue",
-    "MatchDelta", "MatchServer", "ServingStepStats", "Telemetry",
+    "batch_to_events", "MatchDelta", "MatchServer", "ServingStepStats",
+    "Telemetry",
 ]

@@ -53,7 +53,9 @@ class UpdateQueue:
         self._edge_balance: Dict[Tuple[int, int], int] = {}
         self._dead: set = set()  # annihilated event identities
         self.n_offered = 0
-        self.n_dropped = 0
+        self.n_dropped = 0    # total back-pressure casualties (= ev + rej)
+        self.n_evicted = 0    # drop_oldest: stale pending events pushed out
+        self.n_rejected = 0   # drop_newest: offered events turned away
         self.n_coalesced = 0
 
     def __len__(self) -> int:
@@ -95,8 +97,10 @@ class UpdateQueue:
         if len(self) >= self.depth:
             self.n_dropped += 1
             if self.policy == "drop_newest":
+                self.n_rejected += 1
                 self._unbalance(ev)
                 return False
+            self.n_evicted += 1
             self._evict_oldest()
             accepted = False
         self._pending.append(ev)
@@ -164,4 +168,33 @@ class UpdateQueue:
 
     def stats(self) -> Dict[str, int]:
         return {"pending": len(self), "offered": self.n_offered,
-                "dropped": self.n_dropped, "coalesced": self.n_coalesced}
+                "dropped": self.n_dropped, "evicted": self.n_evicted,
+                "rejected": self.n_rejected, "coalesced": self.n_coalesced}
+
+
+def batch_to_events(upd: UpdateBatch) -> List[UpdateEvent]:
+    """Unpack a padded :class:`UpdateBatch` into the stream events that
+    would reproduce it. The two arcs of one undirected edge pair up into
+    ONE event (multiplicity-aware: a genuinely duplicated edge stays two
+    events); relabels pass through. This is the inverse of :meth:`
+    UpdateQueue.pack` and the shared ingress path of ``MatchServer.
+    submit_update`` and the workload scenario generator."""
+    out: List[UpdateEvent] = []
+    pending: Dict[Tuple[int, int], int] = {}
+    for kind, ss, dd, mm in ((ADD, upd.add_src, upd.add_dst, upd.add_mask),
+                             (REMOVE, upd.rem_src, upd.rem_dst,
+                              upd.rem_mask)):
+        ss, dd, mm = np.asarray(ss), np.asarray(dd), np.asarray(mm)
+        pending.clear()
+        for u, v in zip(ss[mm], dd[mm]):
+            key = (min(int(u), int(v)), max(int(u), int(v)))
+            if pending.get(key, 0) > 0:
+                pending[key] -= 1  # mirrored arc of an earlier event
+                continue
+            pending[key] = pending.get(key, 0) + 1
+            out.append(UpdateEvent(kind, int(u), int(v)))
+    li, lv, lm = (np.asarray(upd.lab_ids), np.asarray(upd.lab_vals),
+                  np.asarray(upd.lab_mask))
+    for i, val in zip(li[lm], lv[lm]):
+        out.append(UpdateEvent(RELABEL, int(i), value=int(val)))
+    return out

@@ -30,7 +30,7 @@ from repro.config.base import IGPMConfig, ServingConfig
 from repro.core.graph import DynamicGraph, UpdateBatch
 from repro.core.query import Query
 from repro.engine import Engine, EngineState, PatternStore
-from repro.serving.queue import UpdateEvent, UpdateQueue
+from repro.serving.queue import UpdateEvent, UpdateQueue, batch_to_events
 from repro.serving.telemetry import Telemetry
 
 
@@ -59,6 +59,12 @@ class ServingStepStats:
     ell_refresh_s: float = 0.0
     subgraph_nodes: int = 0
     subgraph_edges: int = 0
+    # back-pressure casualties since the previous step (queue deltas):
+    # dropped = evicted (drop_oldest pushed out a stale pending event)
+    #         + rejected (drop_newest turned the offer away)
+    n_dropped: int = 0
+    n_evicted: int = 0
+    n_rejected: int = 0
 
     @property
     def n_new_patterns(self) -> int:
@@ -84,6 +90,8 @@ class MatchServer:
         self.u_max = 2 * serving.microbatch_window
         self._state: Optional[EngineState] = None
         self._drops_seen = 0
+        self._evicted_seen = 0
+        self._rejected_seen = 0
 
     # engine-owned pieces the historical API exposed -------------------------
 
@@ -113,6 +121,8 @@ class MatchServer:
                                  coalesce=self.serving.coalesce)
         self._state = None
         self._drops_seen = 0
+        self._evicted_seen = 0
+        self._rejected_seen = 0
 
     # -- dynamic membership ---------------------------------------------------
 
@@ -140,32 +150,13 @@ class MatchServer:
         return self.queue.offer(UpdateEvent(kind, u, v, value))
 
     def submit_update(self, upd: UpdateBatch) -> int:
-        """Unpack a padded UpdateBatch into queued events. The two arcs of
-        one undirected edge pair up into ONE event (multiplicity-aware: a
-        genuinely duplicated edge stays two events). Returns events queued.
-        """
-        n = 0
-        pending: Dict[Tuple[int, int], int] = {}
-        for kind, ss, dd, mm in (("add", upd.add_src, upd.add_dst,
-                                  upd.add_mask),
-                                 ("remove", upd.rem_src, upd.rem_dst,
-                                  upd.rem_mask)):
-            ss, dd, mm = np.asarray(ss), np.asarray(dd), np.asarray(mm)
-            pending.clear()
-            for u, v in zip(ss[mm], dd[mm]):
-                key = (min(int(u), int(v)), max(int(u), int(v)))
-                if pending.get(key, 0) > 0:
-                    pending[key] -= 1  # mirrored arc of an earlier event
-                    continue
-                pending[key] = pending.get(key, 0) + 1
-                self.submit(kind, int(u), int(v))
-                n += 1
-        li, lv, lm = (np.asarray(upd.lab_ids), np.asarray(upd.lab_vals),
-                      np.asarray(upd.lab_mask))
-        for i, val in zip(li[lm], lv[lm]):
-            self.submit("relabel", int(i), value=int(val))
-            n += 1
-        return n
+        """Unpack a padded UpdateBatch into queued events (see
+        :func:`~repro.serving.queue.batch_to_events`). Returns events
+        queued."""
+        events = batch_to_events(upd)
+        for ev in events:
+            self.queue.offer(ev)
+        return len(events)
 
     # -- the serving step ----------------------------------------------------
 
@@ -174,26 +165,44 @@ class MatchServer:
         t_start = time.perf_counter()
         events = self.queue.drain(self.serving.microbatch_window)
         upd = UpdateQueue.pack(events, self.u_max)
+        return self.step_packed(g, upd, len(events), t_start=t_start)
+
+    def step_packed(self, g: DynamicGraph, upd: UpdateBatch, n_events: int,
+                    t_start: Optional[float] = None
+                    ) -> Tuple[DynamicGraph, ServingStepStats]:
+        """Run the engine pipeline on an already-packed micro-batch — the
+        handoff point the async runtime's device-executor thread drives
+        (its ingress thread owns the queue and packs; DESIGN.md §6). The
+        sync :meth:`step` is drain + pack + this, so both paths share
+        every line of engine/merge/telemetry bookkeeping."""
+        t_start = time.perf_counter() if t_start is None else t_start
         if self._state is None or self._state.graph is not g:
             # fresh stream (or caller-rebuilt graph): re-anchor the state
             self._state = self.engine.init_state(g)
         self._state, out = self.engine.step(self._state, upd)
 
+        q = self.queue
+        dropped = q.n_dropped - self._drops_seen
+        evicted = q.n_evicted - self._evicted_seen
+        rejected = q.n_rejected - self._rejected_seen
+        self._drops_seen = q.n_dropped
+        self._evicted_seen = q.n_evicted
+        self._rejected_seen = q.n_rejected
         st = ServingStepStats(
             step=out.step, elapsed=out.elapsed,
-            total_s=time.perf_counter() - t_start, n_events=len(events),
+            total_s=time.perf_counter() - t_start, n_events=n_events,
             n_recompute=out.n_recompute, frac_affected=out.frac_affected,
             community_size=out.community_size, rl_loss=out.rl_loss,
             deltas=[MatchDelta(d.name, d.n_new, d.total, d.exact)
                     for d in out.deltas],
             n_pruned=out.n_pruned, ell_refresh_s=out.ell_refresh_s,
             subgraph_nodes=out.subgraph_nodes,
-            subgraph_edges=out.subgraph_edges)
-        dropped = self.queue.n_dropped - self._drops_seen
-        self._drops_seen = self.queue.n_dropped
-        self.telemetry.record_step(st.total_s, len(events),
+            subgraph_edges=out.subgraph_edges,
+            n_dropped=dropped, n_evicted=evicted, n_rejected=rejected)
+        self.telemetry.record_step(st.total_s, n_events,
                                    st.n_new_patterns, out.frac_affected,
-                                   n_dropped=dropped)
+                                   n_dropped=dropped, n_evicted=evicted,
+                                   n_rejected=rejected)
         self.telemetry.record_counters(self.engine.counters())
         return self._state.graph, st
 

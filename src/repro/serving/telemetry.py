@@ -1,29 +1,62 @@
-"""Serving telemetry — step-latency percentiles and throughput counters.
+"""Serving telemetry — latency percentiles and throughput counters.
 
-A ring of the last ``window`` step-latency samples gives p50/p99 without
-unbounded memory; throughput counters (updates, patterns, recompute
-fraction) accumulate over the server's lifetime. Everything is host-side
-numpy; ``snapshot()`` is what the CLI prints and the benchmark serializes.
+A ring of the last ``window`` samples per *channel* gives p50/p99/p999
+without unbounded memory; throughput counters (updates, patterns,
+recompute fraction, back-pressure drop/evict/reject) accumulate over the
+server's lifetime. Everything is host-side numpy; ``snapshot()`` is what
+the CLI prints and the benchmark serializes.
+
+Channels (DESIGN.md §6): ``step`` is the classic serving-step latency the
+sync loop records; the async runtime adds per-event ``queue_wait`` (offer
+→ packed into a micro-batch), per-batch ``assembly`` (drain + pack host
+time), and per-event ``e2e`` (offer → match delta fanned out) — the
+end-to-end latency an SLO is written against, so tails run out to p999.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import numpy as np
+
+
+class _Ring:
+    """Bounded latency-sample ring with percentile views."""
+
+    def __init__(self, window: int):
+        self.window = window
+        self._buf = np.zeros(window, np.float64)
+        self._fill = 0
+        self._cursor = 0
+        self.count = 0
+
+    def add(self, sample_s: float) -> None:
+        self._buf[self._cursor] = sample_s
+        self._cursor = (self._cursor + 1) % self.window
+        self._fill = min(self._fill + 1, self.window)
+        self.count += 1
+
+    def extend(self, samples_s: Iterable[float]) -> None:
+        for s in samples_s:
+            self.add(float(s))
+
+    def percentile(self, q: float) -> float:
+        if self._fill == 0:
+            return 0.0
+        return float(np.percentile(self._buf[: self._fill], q))
 
 
 class Telemetry:
     def __init__(self, window: int = 512):
         self.window = window
-        self._lat = np.zeros(window, np.float64)
-        self._fill = 0
-        self._cursor = 0
+        self._chan: Dict[str, _Ring] = {"step": _Ring(window)}
         self.n_steps = 0
         self.n_updates = 0
         self.n_patterns = 0
         self.n_dropped = 0
+        self.n_evicted = 0
+        self.n_rejected = 0
         self._recompute_sum = 0.0
         self._t0: Optional[float] = None
         # free-form monotone counters (e.g. the engine's storm seed-cache
@@ -34,33 +67,50 @@ class Telemetry:
         """Absorb a counter snapshot (values are absolutes, not deltas)."""
         self.counters.update(counters)
 
+    def record_latency(self, channel: str, *samples_s: float) -> None:
+        """Append latency samples to a named channel (created on first
+        use); the snapshot reports its p50/p99/p999 once populated."""
+        ring = self._chan.get(channel)
+        if ring is None:
+            ring = self._chan[channel] = _Ring(self.window)
+        ring.extend(samples_s)
+
+    def record_drops(self, n_dropped: int = 0, n_evicted: int = 0,
+                     n_rejected: int = 0) -> None:
+        """Accumulate back-pressure casualties (deltas, not absolutes)."""
+        self.n_dropped += n_dropped
+        self.n_evicted += n_evicted
+        self.n_rejected += n_rejected
+
     def record_step(self, latency_s: float, n_updates: int,
                     n_new_patterns: int, recompute_frac: float,
-                    n_dropped: int = 0) -> None:
+                    n_dropped: int = 0, n_evicted: int = 0,
+                    n_rejected: int = 0) -> None:
         if self._t0 is None:
             # wall clock spans from the START of the first recorded step,
             # so small step counts don't inflate the throughput rates
             self._t0 = time.perf_counter() - latency_s
-        self._lat[self._cursor] = latency_s
-        self._cursor = (self._cursor + 1) % self.window
-        self._fill = min(self._fill + 1, self.window)
+        self._chan["step"].add(latency_s)
         self.n_steps += 1
         self.n_updates += n_updates
         self.n_patterns += n_new_patterns
-        self.n_dropped += n_dropped
+        self.record_drops(n_dropped, n_evicted, n_rejected)
         self._recompute_sum += recompute_frac
 
     # -- views ---------------------------------------------------------------
 
-    def latency_percentile(self, q: float) -> float:
-        if self._fill == 0:
-            return 0.0
-        return float(np.percentile(self._lat[: self._fill], q))
+    def latency_percentile(self, q: float, channel: str = "step") -> float:
+        ring = self._chan.get(channel)
+        return ring.percentile(q) if ring is not None else 0.0
+
+    def channel_count(self, channel: str) -> int:
+        ring = self._chan.get(channel)
+        return ring.count if ring is not None else 0
 
     def snapshot(self) -> Dict[str, float]:
         wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
         steps = max(self.n_steps, 1)
-        return {
+        snap = {
             "steps": self.n_steps,
             "p50_step_ms": 1e3 * self.latency_percentile(50),
             "p99_step_ms": 1e3 * self.latency_percentile(99),
@@ -68,5 +118,14 @@ class Telemetry:
             "patterns_per_s": self.n_patterns / wall if wall > 0 else 0.0,
             "recompute_frac": self._recompute_sum / steps,
             "dropped_events": self.n_dropped,
-            **self.counters,
+            "evicted_events": self.n_evicted,
+            "rejected_events": self.n_rejected,
         }
+        for name, ring in self._chan.items():
+            if name == "step" or ring.count == 0:
+                continue
+            snap[f"p50_{name}_ms"] = 1e3 * ring.percentile(50)
+            snap[f"p99_{name}_ms"] = 1e3 * ring.percentile(99)
+            snap[f"p999_{name}_ms"] = 1e3 * ring.percentile(99.9)
+        snap.update(self.counters)
+        return snap

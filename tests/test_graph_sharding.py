@@ -94,13 +94,13 @@ def test_rwr_sharded_bitwise(backend):
     sweeps = ShardedSweep(G)
 
     ref = rwr(g, e, iters=12, ell=ell)
-    got, n = sweeps.run_rwr(g, e, iters=12, ell=ell_sh)
+    got, n, _ = sweeps.run_rwr(g, e, iters=12, ell=ell_sh)
     assert int(n) == 12
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
     # warm-started sweeps distribute identically
     ref_w = rwr(g, e, iters=4, r0=ref, ell=ell)
-    got_w, _ = sweeps.run_rwr(g, e, iters=4, r0=ref, ell=ell_sh)
+    got_w, _, _ = sweeps.run_rwr(g, e, iters=4, r0=ref, ell=ell_sh)
     np.testing.assert_array_equal(np.asarray(got_w), np.asarray(ref_w))
 
 
@@ -109,12 +109,14 @@ def test_adaptive_rwr_sharded_bitwise_and_same_trip_count(backend):
     g, _ = _graph()
     ell, ell_sh = _mirrors(g, backend)
     e = restart_onehot(jnp.asarray([0, 9]), N)
-    ref, n_ref = rwr_adaptive(g, e, max_iters=40, tol=1e-5, ell=ell)
-    got, n_got = ShardedSweep(G).run_rwr(g, e, iters=40, tol=1e-5,
-                                         ell=ell_sh)
+    ref, n_ref, sk_ref = rwr_adaptive(g, e, max_iters=40, tol=1e-5, ell=ell)
+    got, n_got, sk_got = ShardedSweep(G).run_rwr(g, e, iters=40, tol=1e-5,
+                                                 ell=ell_sh)
     # sweep results replicate exactly across the axis, so every shard sees
-    # the identical residual and the while_loop exits on the same sweep
+    # the identical residuals and converged-column masks and the
+    # while_loop exits on the same sweep
     assert int(n_got) == int(n_ref)
+    assert int(sk_got) == int(sk_ref)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
@@ -123,7 +125,7 @@ def test_label_rwr_sharded_bitwise(backend):
     g, _ = _graph(seed=2)
     ell, ell_sh = _mirrors(g, backend)
     ref = label_rwr(g, 4, iters=10, ell=ell)
-    got, n = ShardedSweep(G).label_table(g, 4, 10, 0.15, None, ell_sh)
+    got, n, _ = ShardedSweep(G).label_table(g, 4, 10, 0.15, None, ell_sh)
     assert int(n) == 10
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 

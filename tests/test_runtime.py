@@ -1,0 +1,257 @@
+"""Async serving-runtime tests (DESIGN.md §6).
+
+Pins the runtime's acceptance contract:
+  * determinism — the async (threaded ingress + double-buffered executor)
+    path produces pattern stores and a graph BIT-IDENTICAL to the sync
+    replay of the same seeded workload, on both sweep backends and on
+    churn-heavy and flash-crowd (hotspot burst) scenarios: threading
+    changes when work runs, never what it computes;
+  * graceful drain — stop(drain=True) flushes every event that entered
+    the pending window through the pipeline (none lost, none invented),
+    and checkpoints the whole engine via Engine.save when configured;
+  * liveness — forced back-pressure (tiny queue + tiny handoff + shed
+    ingress) cannot deadlock the thread pair: the run finishes inside a
+    hard timeout with the shed traffic counted, not lost silently;
+  * scenario generation — seeded arrival processes are reproducible and
+    shaped (flash-crowd bursts, diurnal ramp);
+  * telemetry — queue-wait / assembly / e2e channels and the
+    drop/evict/reject counters surface in snapshot().
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.config.base import IGPMConfig, RuntimeConfig, ServingConfig
+from repro.core.query import query_zoo
+from repro.runtime import (SCENARIOS, ServingRuntime, VirtualClock,
+                           WallClock, build_workload, churn_heavy,
+                           flash_crowd, poisson, run_workload_sync)
+from repro.serving import MatchServer
+
+
+def _cfg(backend="coo", **kw):
+    base = dict(n_max=128, e_max=8192, ell_width=8, rwr_iters=6,
+                rwr_iters_incremental=2, top_k_patterns=4,
+                init_community_size=32, backend=backend)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _server(backend="coo", bank=2, **serving_kw):
+    serving_kw.setdefault("microbatch_window", 64)
+    return MatchServer(_cfg(backend), query_zoo(bank),
+                       ServingConfig(**serving_kw), seed=0)
+
+
+def _workload(kind=churn_heavy, **kw):
+    kw.setdefault("rate", 2500.0)
+    kw.setdefault("tick_s", 0.01)
+    kw.setdefault("n_ticks", 10)
+    kw.setdefault("n_vertices", 128)
+    kw.setdefault("seed", 3)
+    return build_workload(kind(**kw), u_max=256)
+
+
+# -- determinism: async ≡ sync (the tentpole contract) ------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+@pytest.mark.parametrize("kind", [churn_heavy, flash_crowd])
+def test_async_store_bit_identical_to_sync(backend, kind):
+    wl = _workload(kind)
+    ref = _server(backend)
+    g_ref, st_ref = run_workload_sync(ref, wl, clock=VirtualClock())
+
+    srv = _server(backend)
+    rt = ServingRuntime(srv, RuntimeConfig(ingress="lockstep"),
+                        clock=VirtualClock())
+    st_rt = rt.serve(wl)
+
+    assert len(st_rt) == len(st_ref)
+    assert [s.n_events for s in st_rt] == [s.n_events for s in st_ref]
+    for i in range(len(ref.stores)):
+        assert srv.stores[i]._patterns == ref.stores[i]._patterns
+    for f in g_ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g_ref, f)),
+            np.asarray(getattr(rt.graph, f)), err_msg=f)
+
+
+@pytest.mark.slow
+def test_async_run_is_repeatable():
+    """Two async runs of one seeded workload agree with each other —
+    scheduling noise between the two threads never reaches the stores."""
+    wl = _workload(flash_crowd, seed=11)
+    runs = []
+    for _ in range(2):
+        srv = _server()
+        ServingRuntime(srv, clock=VirtualClock()).serve(wl)
+        runs.append([dict(s._patterns) for s in srv.stores])
+    assert runs[0] == runs[1]
+
+
+# -- graceful drain -----------------------------------------------------------
+
+@pytest.mark.slow
+def test_end_of_stream_drain_flushes_every_event():
+    """Natural end-of-stream drain: every offered event is processed by
+    the time serve() returns — none lost, none invented (coalescing off
+    and a deep queue, so the arithmetic is exact)."""
+    wl = _workload(poisson, n_ticks=8)
+    srv = _server(coalesce=False, queue_depth=100_000)
+    rt = ServingRuntime(srv, clock=VirtualClock())
+    stats = rt.serve(wl)
+    q = srv.queue
+    assert q.n_offered == wl.n_events > 0
+    assert q.n_dropped == 0
+    assert len(q) == 0
+    assert sum(s.n_events for s in stats) == q.n_offered
+
+
+@pytest.mark.slow
+def test_stop_drain_flushes_all_accepted_events():
+    """stop(drain=True) mid-stream: ingestion halts at a tick boundary,
+    but every event that DID enter the pending window still flushes
+    through the pipeline before stop returns."""
+    wl = _workload(poisson, n_ticks=40)
+    srv = _server(coalesce=False, queue_depth=100_000)
+    rt = ServingRuntime(srv, clock=VirtualClock())
+    rt.start(wl)
+    deadline = time.monotonic() + 60.0
+    while not rt.stats and time.monotonic() < deadline:
+        time.sleep(0.001)           # let at least one step land
+    assert rt.stop(drain=True)
+    q = srv.queue
+    assert 0 < q.n_offered <= wl.n_events
+    assert len(q) == 0              # the drain left nothing pending
+    assert sum(s.n_events for s in rt.stats) == q.n_offered
+
+
+@pytest.mark.slow
+def test_drain_checkpoints_engine(tmp_path):
+    wl = _workload(poisson, n_ticks=6)
+    srv = _server(bank=1)
+    rt = ServingRuntime(
+        srv, RuntimeConfig(checkpoint_dir=str(tmp_path)),
+        clock=VirtualClock())
+    rt.serve(wl)
+    assert rt.n_checkpoints >= 1
+    # a fresh server restores the drained state wholesale (Engine.load)
+    srv2 = _server(bank=1)
+    srv2.load(wl.graph, str(tmp_path))
+    assert srv2.stores[0]._patterns == srv.stores[0]._patterns
+
+
+def test_stop_without_drain_aborts_promptly():
+    wl = _workload(poisson, n_ticks=200, tick_s=0.05)  # a 10 s workload
+    srv = _server(bank=1)
+    # warm pass: abort must only wait out one in-flight ~100 ms step, not
+    # a first-step jit compile (jax compute cannot be interrupted)
+    run_workload_sync(srv, _workload(poisson, n_ticks=2),
+                      clock=VirtualClock())
+    srv.reset()
+    rt = ServingRuntime(srv, clock=WallClock())
+    rt.start(wl)
+    t0 = time.monotonic()
+    assert rt.stop(drain=False)
+    # promptly = one in-flight step + thread teardown, nowhere near the
+    # 10 s the paced workload would take
+    assert time.monotonic() - t0 < 8.0
+    assert len(rt.stats) < 200
+
+
+# -- liveness under forced back-pressure --------------------------------------
+
+@pytest.mark.slow
+def test_no_deadlock_under_forced_backpressure():
+    """Tiny queue + shed ingress + hotspot bursts: the queue MUST shed
+    (drops observed) and the thread pair MUST finish inside a hard
+    timeout — back-pressure degrades the accepted set, never liveness."""
+    wl = _workload(flash_crowd, rate=6000.0, n_ticks=12)
+    srv = _server(queue_depth=32)
+    rt = ServingRuntime(srv, RuntimeConfig(ingress="shed", handoff_depth=1,
+                                           drain_timeout_s=60.0),
+                        clock=VirtualClock())
+    rt.start(wl)
+    assert rt.join(timeout=120.0), "runtime deadlocked under back-pressure"
+    q = srv.queue
+    assert q.n_dropped > 0                       # back-pressure engaged
+    assert q.n_evicted == q.n_dropped            # drop_oldest policy
+    processed = sum(s.n_events for s in rt.stats)
+    # nothing lost silently: every offered event is processed, shed, or
+    # annihilated by coalescing
+    assert processed == q.n_offered - q.n_dropped - q.n_coalesced
+    snap = srv.telemetry.snapshot()
+    assert snap["dropped_events"] == q.n_dropped
+    assert snap["evicted_events"] == q.n_evicted
+
+
+# -- scenarios ----------------------------------------------------------------
+
+def test_scenarios_are_seeded_and_reproducible():
+    for name, mk in SCENARIOS.items():
+        a = build_workload(mk(rate=800.0, n_ticks=12, n_vertices=64, seed=5),
+                           u_max=128)
+        b = build_workload(mk(rate=800.0, n_ticks=12, n_vertices=64, seed=5),
+                           u_max=128)
+        assert a.n_events == b.n_events > 0, name
+        assert [t.events for t in a.ticks] == [t.events for t in b.ticks]
+
+
+def test_flash_crowd_bursts_dominate_baseline():
+    sc = flash_crowd(rate=1000.0, tick_s=0.01, n_ticks=32, n_vertices=64,
+                     burst_amplitude=8.0, burst_period=16, burst_len=4,
+                     seed=0)
+    wl = build_workload(sc, u_max=512)
+    sizes = np.array([len(t.events) for t in wl.ticks], np.float64)
+    burst = (np.arange(32) % 16) < 4
+    assert sizes[burst].mean() > 3 * sizes[~burst].mean()
+
+
+def test_diurnal_ramp_peaks_mid_cycle():
+    sc = SCENARIOS["diurnal"](rate=2000.0, tick_s=0.01, n_ticks=40,
+                              n_vertices=64, seed=1)
+    wl = build_workload(sc, u_max=512)
+    sizes = [len(t.events) for t in wl.ticks]
+    peak = int(np.argmax(sizes))
+    assert 10 <= peak <= 30          # the cosine ramp peaks mid-run
+    assert max(sizes) > 3 * (min(sizes) + 1)
+
+
+# -- fan-out + telemetry ------------------------------------------------------
+
+@pytest.mark.slow
+def test_subscribers_receive_per_query_delta_streams():
+    wl = _workload(churn_heavy)
+    srv = _server(bank=2)
+    tri_name = srv.queries[0].name
+    rt = ServingRuntime(srv, clock=VirtualClock())
+    all_sub = rt.subscribe()
+    tri_sub = rt.subscribe(query=tri_name)
+    stats = rt.serve(wl)
+    got_all = all_sub.drain()
+    got_tri = tri_sub.drain()
+    assert len(got_all) == 2 * len(stats)        # bank of 2, every step
+    assert len(got_tri) == len(stats)
+    assert all(d.query == tri_name for _, d in got_tri)
+    # the last delta per query reports that query's final store state
+    last = {d.query: d for _, d in got_all}
+    for q, store in zip(srv.queries, srv.stores):
+        assert last[q.name].total == store.total
+        assert last[q.name].exact == store.exact
+
+
+@pytest.mark.slow
+def test_runtime_telemetry_has_tail_latency_channels():
+    wl = _workload(poisson, n_ticks=8)
+    srv = _server(bank=1)
+    rt = ServingRuntime(srv, clock=WallClock())
+    rt.serve(wl)
+    snap = srv.telemetry.snapshot()
+    for ch in ("e2e", "queue_wait", "assembly"):
+        assert f"p99_{ch}_ms" in snap and f"p999_{ch}_ms" in snap
+        assert snap[f"p999_{ch}_ms"] >= snap[f"p99_{ch}_ms"] >= 0.0
+    assert srv.telemetry.channel_count("e2e") == \
+        sum(s.n_events for s in rt.stats)

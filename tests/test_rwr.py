@@ -81,13 +81,14 @@ def test_adaptive_rwr_within_tol_of_fixed():
     e = restart_onehot(jnp.array([0, 5]), g.n_max)
     tol = 1e-5
     r_fixed = rwr(g, e, iters=200)
-    r_ad, n = rwr_adaptive(g, e, max_iters=200, tol=tol)
+    r_ad, n, _ = rwr_adaptive(g, e, max_iters=200, tol=tol)
     assert 0 < int(n) < 200  # converged well before the cap
     # exit residual ≤ tol bounds the fixed-point distance by tol/c; both
     # iterates sit within that ball of the same fixed point
     np.testing.assert_allclose(np.asarray(r_ad), np.asarray(r_fixed),
                                atol=2 * tol / 0.15)
-    # the residual the loop stopped on really is ≤ tol
+    # the residual each column stopped on really is ≤ tol (frozen columns
+    # keep their freeze-time residual — columns are independent)
     assert float(rwr_residual(g, r_ad, e).max()) <= tol
 
 
@@ -97,15 +98,15 @@ def test_adaptive_rwr_warm_start_uses_fewer_sweeps():
     r_star = rwr(g, e, iters=80)
     upd = UpdateBatch.additions(np.array([0]), np.array([6]), u_max=4)
     g2 = apply_update(g, upd)
-    _, n_cold = rwr_adaptive(g2, e, max_iters=60, tol=1e-5)
-    _, n_warm = rwr_adaptive(g2, e, max_iters=60, tol=1e-5, r0=r_star)
+    _, n_cold, _ = rwr_adaptive(g2, e, max_iters=60, tol=1e-5)
+    _, n_warm, _ = rwr_adaptive(g2, e, max_iters=60, tol=1e-5, r0=r_star)
     assert int(n_warm) < int(n_cold)  # the paper's incremental claim, measured
 
 
 def test_adaptive_rwr_respects_hard_cap():
     g = _ring()
     e = restart_onehot(jnp.array([2]), g.n_max)
-    _, n = rwr_adaptive(g, e, max_iters=7, tol=1e-30)  # unreachable tol
+    _, n, _ = rwr_adaptive(g, e, max_iters=7, tol=1e-30)  # unreachable tol
     assert int(n) == 7
 
 
@@ -113,7 +114,37 @@ def test_label_rwr_adaptive_matches_label_rwr():
     g = _ring()
     tol = 1e-6
     r_fixed = label_rwr(g, n_labels=3, iters=60)
-    r_ad, n = label_rwr_adaptive(g, n_labels=3, max_iters=60, tol=tol)
+    r_ad, n, _ = label_rwr_adaptive(g, n_labels=3, max_iters=60, tol=tol)
     assert int(n) < 60  # converged before the cap
     np.testing.assert_allclose(np.asarray(r_ad), np.asarray(r_fixed),
                                atol=2 * tol / 0.15)
+
+
+# -- per-column converged mask -------------------------------------------------
+
+def test_adaptive_rwr_skips_converged_columns():
+    """A warm-started column (already at its fixed point) freezes on the
+    first sweep while a cold column keeps sweeping — the skip counter
+    totals the column-sweeps the mask retired."""
+    g = _ring()
+    e = restart_onehot(jnp.array([0, 5]), g.n_max)
+    r_star, _, _ = rwr_adaptive(g, e, max_iters=200, tol=1e-8)
+    # column 0 warm (its fixed point), column 1 cold (restart vector)
+    r0 = jnp.stack([r_star[:, 0], e[:, 1]], axis=1)
+    r, n, skipped = rwr_adaptive(g, e, max_iters=200, tol=1e-5, r0=r0)
+    n, skipped = int(n), int(skipped)
+    assert n > 1                      # the cold column needed real sweeps
+    assert 0 < skipped <= 2 * n       # the warm column sat most of them out
+    # the frozen column never drifted from its warm start
+    np.testing.assert_array_equal(np.asarray(r[:, 0]),
+                                  np.asarray(r0[:, 0]))
+    # the cold column still converged to tolerance
+    assert float(rwr_residual(g, r, e)[1]) <= 1e-5
+
+
+def test_adaptive_rwr_no_skips_when_columns_converge_together():
+    g = _ring()
+    e = restart_onehot(jnp.array([3]), g.n_max)  # single column: no slack
+    _, n, skipped = rwr_adaptive(g, e, max_iters=100, tol=1e-5)
+    assert int(skipped) == 0
+    assert int(n) > 0

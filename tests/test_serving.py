@@ -237,6 +237,7 @@ def test_queue_drop_oldest_back_pressure():
     q.offer(UpdateEvent("add", 1, 2))
     assert not q.offer(UpdateEvent("add", 2, 3))  # evicts (0,1)
     assert q.n_dropped == 1
+    assert q.n_evicted == 1 and q.n_rejected == 0
     got = q.drain(8)
     assert [(e.u, e.v) for e in got] == [(1, 2), (2, 3)]
 
@@ -246,8 +247,42 @@ def test_queue_drop_newest_back_pressure():
     q.offer(UpdateEvent("add", 0, 1))
     q.offer(UpdateEvent("add", 1, 2))
     assert not q.offer(UpdateEvent("add", 2, 3))  # rejected
+    assert q.n_rejected == 1 and q.n_evicted == 0
     got = q.drain(8)
     assert [(e.u, e.v) for e in got] == [(0, 1), (1, 2)]
+
+
+def test_queue_stats_split_evictions_from_rejections():
+    q = UpdateQueue(depth=1, policy="drop_oldest", coalesce=False)
+    for i in range(4):
+        q.offer(UpdateEvent("add", i, i + 1))
+    s = q.stats()
+    assert s["offered"] == 4 and s["evicted"] == 3 and s["rejected"] == 0
+    assert s["dropped"] == s["evicted"] + s["rejected"]
+
+
+@pytest.mark.slow
+def test_server_surfaces_backpressure_in_stats_and_telemetry():
+    """offer() returning False is no longer silently discarded: per-step
+    drop/evict deltas land in ServingStepStats and accumulate in the
+    telemetry snapshot."""
+    srv = MatchServer(_cfg(), [triangle()],
+                      ServingConfig(microbatch_window=16, queue_depth=8,
+                                    coalesce=False), seed=0)
+    g = _rand_graph(seed=3)
+    for i in range(40):                      # 5x the queue depth
+        srv.submit("add", i % 60, (i + 1) % 60)
+    assert srv.queue.n_dropped > 0
+    g, st = srv.step(g)
+    assert st.n_dropped == srv.queue.n_dropped > 0
+    assert st.n_evicted == st.n_dropped      # drop_oldest default
+    assert st.n_rejected == 0
+    snap = srv.telemetry.snapshot()
+    assert snap["dropped_events"] == st.n_dropped
+    assert snap["evicted_events"] == st.n_evicted
+    g, st2 = srv.step(g)                     # no new drops this step
+    assert st2.n_dropped == 0
+    assert srv.telemetry.snapshot()["dropped_events"] == st.n_dropped
 
 
 def test_queue_pack_roundtrips_to_update_batch():
