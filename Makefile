@@ -6,7 +6,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
-    engine-smoke sweep-smoke runtime-smoke bench-collect
+    engine-smoke sweep-smoke runtime-smoke decomp-smoke bench-collect
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -55,6 +55,15 @@ runtime-smoke:
 	PYTHONPATH=src timeout 300 $(PY) -m repro.launch.serve \
 	    --arch igpm-pem --async --scenario flash_crowd \
 	    --rate 3000 --ticks 12 --bank 4
+
+# shared sub-pattern decomposition: the refcounted-DAG suite (bitwise
+# node-table ≡ per-row equivalence on both backends, churn refcount
+# oracle, dedup-vs-unshared store equality, checkpoint round-trip), then
+# the same decomposed-bank equivalence under the 4-device shard_map path
+decomp-smoke:
+	$(PY) -m pytest tests/test_decompose.py -q
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest tests/test_engine_sharding.py -q
 
 # merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
 bench-collect:

@@ -266,6 +266,10 @@ class EngineConfig:
     shard: str = "auto"              # query axis: | 'off'
     graph_shard: str = "off"         # graph axis: | 'auto'
     v_max: int = 4096                # updated-vertex buffer width
+    # exact-duplicate dedup at register: a query whose tensors equal a
+    # live one becomes an ALIAS of that row (zero device work; results
+    # fan out to both stores). Off pins one bank row per qid.
+    dedup: bool = True
 
 
 @dataclass(frozen=True)

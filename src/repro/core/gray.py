@@ -169,13 +169,22 @@ class BankGRayMatcher:
     (``matched`` is write-once). The engine's dynamic buckets (DESIGN.md
     §4) require this mode: register/retire inside a bucket is a row
     write, not a recompile.
+
+    ``node_cap`` (``memo=False`` only) sizes the shared sub-pattern table:
+    callers passing a ``row_node`` plan (the bucket's
+    :class:`~repro.core.query.PlanDAG` mirror) get ONE table slot per
+    distinct sub-pattern node instead of per (row, query vertex), and the
+    per-step sweep width drops to ``min(B, node_cap)`` — the
+    O(distinct sub-patterns) step cost of DESIGN.md §7. Without a
+    ``row_node`` the identity plan (node ≡ (row, source vertex)) keeps the
+    legacy layout bit-for-bit.
     """
 
     def __init__(self, bank: QueryBank, n_labels: int, k: int,
                  rwr_iters: int = 25, restart: float = 0.15,
                  bridge_hops: int = 4, backend: str = "coo",
                  ell_width: int = 64, memo: bool = True,
-                 rwr_tol: float = 0.0):
+                 rwr_tol: float = 0.0, node_cap: Optional[int] = None):
         backend = resolve_backend(backend)
         if backend not in ("coo", "ell"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -224,11 +233,15 @@ class BankGRayMatcher:
             self.t_max = max([1] + [len(p) for p in pair_of])
             self.n_tables = sum(len(p) for p in pair_of)
         else:
-            # content-independent: full unroll; table slots per query
-            # vertex, filled lazily at runtime (≤ q_max per row)
+            # content-independent: full unroll; table slots per sub-
+            # pattern DAG node (node_cap of them + 1 trash slot), filled
+            # lazily at runtime. Without a node plan the identity layout
+            # is one slot per (row, query vertex).
             self.n_steps = bank.qe_max
             self.t_max = bank.q_max
-            self.n_tables = B * bank.q_max
+            self.node_cap = node_cap
+            self.n_tables = (B * bank.q_max if node_cap is None
+                             else node_cap)
         self._match = jax.jit(self._match_impl,
                               static_argnames=("graph_axis",))
         self._seeds = jax.jit(self._seeds_impl)
@@ -282,12 +295,14 @@ class BankGRayMatcher:
     def match_from_seeds(self, g: DynamicGraph, r_lab: jnp.ndarray,
                          seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
                          ell: Optional[EllGraph] = None,
-                         bank: Optional[QueryBank] = None) -> GRayResult:
+                         bank: Optional[QueryBank] = None,
+                         row_node: Optional[jnp.ndarray] = None
+                         ) -> GRayResult:
         b = bank or self.bank
         return self._match(g, r_lab, seed_ids, seed_mask,
                            self._ell_for(g, ell), b.labels, b.mask, b.anchor,
                            b.order_src, b.order_dst, b.order_tree,
-                           b.order_mask)
+                           b.order_mask, row_node)
 
     # -- implementation ------------------------------------------------------
 
@@ -320,6 +335,7 @@ class BankGRayMatcher:
                     q_mask: jnp.ndarray, anchor: jnp.ndarray,
                     order_src: jnp.ndarray, order_dst: jnp.ndarray,
                     order_tree: jnp.ndarray, order_mask: jnp.ndarray,
+                    row_node: Optional[jnp.ndarray] = None,
                     graph_axis: Optional[str] = None) -> GRayResult:
         B, k = seed_ids.shape
         n = g.n_max
@@ -345,10 +361,24 @@ class BankGRayMatcher:
             tables_r = jnp.zeros((B, self.t_max, n, k), jnp.float32)
             tables_h = jnp.zeros((B, self.t_max, k, n), jnp.int32)
         else:
-            # slot-per-query-vertex tables + filled mask (traced data)
-            tables_r = jnp.zeros((B, q_max, n, k), jnp.float32)
-            tables_h = jnp.zeros((B, q_max, k, n), jnp.int32)
-            seen = jnp.zeros((B, q_max), bool)
+            # shared sub-pattern tables: ONE slot per DAG node plus a
+            # trash slot (n_slots) swallowing masked reads and packing
+            # fill, "node computed" tracked as traced data. row_node maps
+            # (row, step) → the node whose tables the step reads; the
+            # identity plan (node ≡ row·q_max + source vertex) reproduces
+            # the legacy per-(row, vertex) layout exactly.
+            if row_node is None:
+                n_slots = B * q_max
+                row_node = (jnp.arange(B, dtype=jnp.int32)[:, None] * q_max
+                            + order_src.astype(jnp.int32))
+            else:
+                assert self.node_cap is not None, \
+                    "row_node plans need a node_cap-sized matcher"
+                n_slots = int(self.node_cap)
+            n_sweep = min(B, n_slots)
+            tables_r = jnp.zeros((n_slots + 1, n, k), jnp.float32)
+            tables_h = jnp.zeros((n_slots + 1, k, n), jnp.int32)
+            node_seen = jnp.zeros(n_slots + 1, jnp.int32)
 
         for ei in range(self.n_steps):
             if self.memo:
@@ -373,44 +403,55 @@ class BankGRayMatcher:
                 r_t = tables_r[jnp.arange(B), slot]              # (B, n, k)
                 reach_t = tables_h[jnp.arange(B), slot]          # (B, k, n)
             else:
-                # content-independent memo: one table SLOT per (row, query
-                # vertex), "slot filled" tracked as DATA, and the step's
-                # shared (n, B·k) sweep guarded by a lax.cond on "any row
-                # sees a source not seen before" — all computed from the
-                # order tensors, which are jit arguments. Sweep count
-                # matches the host-static memo (padded tail steps and
-                # repeated sources skip at runtime) while the compiled
-                # structure depends only on the bucket shape, so membership
-                # swaps never retrace. Recomputing an already-filled slot
-                # (a fresh row forces the whole-bucket sweep) writes
-                # identical values: matched is write-once.
-                src = order_src[:, ei]                           # (B,)
-                have = jnp.take_along_axis(seen, src[:, None],
-                                           axis=1)[:, 0]
-                fresh = order_mask[:, ei] & ~have
+                # content-independent memo over DAG nodes: "node computed"
+                # is DATA, and the step's shared (n, n_sweep·k) sweep is
+                # guarded by a lax.cond on "any row reads a node not
+                # computed yet" — all derived from the order/row_node
+                # tensors, which are jit arguments. Sweep count matches
+                # the host-static memo (padded tail steps and repeated
+                # sources skip at runtime) while the compiled structure
+                # depends only on the bucket shape, so membership swaps
+                # never retrace. Every row holding a node expands through
+                # bitwise-identical partials (DESIGN.md §7), so one
+                # representative row per fresh node computes its tables
+                # for the whole bank.
+                on = order_mask[:, ei]                           # (B,)
+                nd = jnp.where(on, row_node[:, ei],
+                               n_slots).astype(jnp.int32)        # (B,)
+                fresh = on & (node_seen[nd] == 0)
+                # representative row per fresh node (scatter-min — any
+                # holder agrees bitwise, min is a deterministic pick)
+                rep = jnp.full((n_slots + 1,), B, jnp.int32).at[
+                    jnp.where(fresh, nd, n_slots)].min(
+                    jnp.arange(B, dtype=jnp.int32))
+                idx = jnp.nonzero(rep[:n_slots] < B, size=n_sweep,
+                                  fill_value=n_slots)[0]         # (n_sweep,)
 
-                def compute(tabs, matched=matched, src=src):
+                def compute(tabs, matched=matched, rep=rep, idx=idx):
                     t_r, t_h = tabs
+                    rows = jnp.clip(rep[idx], 0, B - 1)          # (n_sweep,)
+                    srcv = order_src[rows, ei]                   # (n_sweep,)
                     srcs = jnp.take_along_axis(
-                        matched, src[:, None, None], axis=2)[:, :, 0]
-                    flat = srcs.reshape(B * k)
+                        matched[rows], srcv[:, None, None],
+                        axis=2)[:, :, 0]                         # (n_sweep, k)
+                    flat = srcs.reshape(n_sweep * k)
                     e = jax.nn.one_hot(flat, n,
-                                       dtype=jnp.float32).T      # (n, B·k)
+                                       dtype=jnp.float32).T  # (n, n_sweep·k)
                     r_new = self._rwr(g, e, ell, graph_axis)
-                    r_new = jnp.transpose(r_new.reshape(n, B, k), (1, 0, 2))
-                    h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
-                                            ell=ell,
-                                            axis=graph_axis).reshape(B, k, n)
-                    rows = jnp.arange(B)
-                    return (t_r.at[rows, src].set(r_new),
-                            t_h.at[rows, src].set(h_new))
+                    r_new = jnp.transpose(r_new.reshape(n, n_sweep, k),
+                                          (1, 0, 2))
+                    h_new = _bfs_reach_hops(
+                        g, flat, self.bridge_hops, ell=ell,
+                        axis=graph_axis).reshape(n_sweep, k, n)
+                    # packing fill (idx == n_slots) lands in the trash
+                    # slot, which only masked reads ever see
+                    return t_r.at[idx].set(r_new), t_h.at[idx].set(h_new)
 
                 tables_r, tables_h = jax.lax.cond(
                     fresh.any(), compute, lambda t: t, (tables_r, tables_h))
-                seen = seen.at[jnp.arange(B), src].set(
-                    have | order_mask[:, ei])
-                r_t = tables_r[jnp.arange(B), src]               # (B, n, k)
-                reach_t = tables_h[jnp.arange(B), src]           # (B, k, n)
+                node_seen = node_seen.at[nd].max(on.astype(jnp.int32))
+                r_t = tables_r[nd]                               # (B, n, k)
+                reach_t = tables_h[nd]                           # (B, k, n)
 
             def step_one(lq, matched_q, used_q, goodness_q, hops_q, valid_q,
                          qb, tr, on, r_q, reach_q, ei=ei):

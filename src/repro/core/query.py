@@ -10,11 +10,22 @@ update stream, so :func:`stack_queries` re-pads a heterogeneous set of
 queries to a common ``(q_max, qe_max)`` and stacks them into a
 :class:`QueryBank` — one device array per field with a leading query axis
 that the bank matcher vmaps over (DESIGN.md §3).
+
+Overlapping standing queries share *sub-patterns*: every BFS-schedule
+prefix of a query is itself a pattern, and two queries whose prefixes
+canonicalize identically expand through bitwise-identical partial matches
+(DESIGN.md §7). :func:`decompose` compiles a query into its canonical
+:class:`SubPatternKey` path and :class:`PlanDAG` refcounts the distinct
+nodes across a bank — the host-side half of the shared sub-pattern tables
+in :class:`~repro.core.gray.BankGRayMatcher`.
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+import heapq
+import hashlib
+
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -171,6 +182,170 @@ def stack_queries(queries: Sequence[Query], q_max: Optional[int] = None,
         **{k: jnp.asarray(np.stack(v)) for k, v in fields.items()},
         anchor=jnp.asarray(np.asarray(anchors, np.int32)),
         names=tuple(q.name for q in queries))
+
+
+# -- shared sub-pattern decomposition (DESIGN.md §7) --------------------------
+
+
+def query_signature(query: Query) -> Tuple:
+    """Exact content signature of a query's device tensors (name excluded).
+
+    Two queries with equal signatures produce bitwise-identical bank rows
+    under any common re-padding — the dedup key for the engine's exact-
+    duplicate fast path. Padding is stripped first, so the signature is
+    invariant to the ``q_max``/``qe_max`` a query was built with.
+    """
+    nn, ne = query.n_nodes, query.n_edges
+    return (nn, ne, int(query.anchor),
+            np.asarray(query.labels)[:nn].tobytes(),
+            np.asarray(query.order_src)[:ne].tobytes(),
+            np.asarray(query.order_dst)[:ne].tobytes(),
+            np.asarray(query.order_tree)[:ne].tobytes())
+
+
+class SubPatternKey(NamedTuple):
+    """Canonical signature of one BFS-schedule prefix.
+
+    ``seed`` pins everything the seed-finder and expansion read
+    *positionally* — the padded label vector, live mask and anchor index.
+    (The seed score sums ``log r_lab`` over query-vertex positions, so
+    float addition order makes label-multiset equality insufficient:
+    sharing requires exact positional equality.) ``prefix`` is the
+    canonical tree-edge sequence up to this node: the ``j``-th tree step
+    matches canonical vertex ``j+1`` (anchor = 0), recorded as
+    ``(canonical source id, destination label)``. Non-tree steps never
+    extend the matched set, so they are excluded — queries differing only
+    in their verification edges share their whole expansion path.
+    """
+
+    seed: Tuple
+    prefix: Tuple[Tuple[int, int], ...]
+
+    @property
+    def depth(self) -> int:
+        return len(self.prefix)
+
+    def digest(self) -> int:
+        """Stable 63-bit content hash (checkpoint round-trip guard)."""
+        h = hashlib.blake2b(repr(self).encode(), digest_size=8).digest()
+        return int.from_bytes(h, "little") >> 1
+
+
+def decompose(query: Query) -> List[SubPatternKey]:
+    """Compile a query to its path of canonical sub-pattern nodes.
+
+    Node ``j`` is the prefix pattern whose last matched vertex is
+    canonical vertex ``j`` (node 0 = the seeded anchor); a query with
+    ``T`` tree steps yields ``T + 1`` nodes. Every schedule step *reads*
+    the expansion tables of the node that matched its source vertex —
+    :func:`schedule_reads` maps steps to indices into this list.
+    """
+    return _decompose(query)[0]
+
+
+def schedule_reads(query: Query) -> np.ndarray:
+    """``int32[qe_max]``: per schedule step, the index into
+    ``decompose(query)`` of the node whose tables the step reads
+    (0 for masked padding steps — the matcher masks those reads)."""
+    return _decompose(query)[1]
+
+
+def _decompose(query: Query) -> Tuple[List[SubPatternKey], np.ndarray]:
+    lab = np.asarray(query.labels)
+    msk = np.asarray(query.mask)
+    osrc = np.asarray(query.order_src)
+    odst = np.asarray(query.order_dst)
+    otree = np.asarray(query.order_tree)
+    omask = np.asarray(query.order_mask)
+    # strip the seed to the REAL vertices (padding-invariant, like
+    # query_signature): padded positions contribute an exact 0.0 to the
+    # seed score (logp * mask 0) whatever the pad labels hold, so equal
+    # stripped seeds score bitwise-identically inside any one bucket
+    nn = int(msk.sum())
+    seed = (tuple(int(x) for x in lab[:nn]), tuple(bool(x) for x in msk[:nn]),
+            int(query.anchor))
+    canon: Dict[int, int] = {int(query.anchor): 0}
+    prefix: List[Tuple[int, int]] = []
+    keys = [SubPatternKey(seed, ())]
+    reads = np.zeros(osrc.shape[0], np.int32)
+    for ei in range(osrc.shape[0]):
+        if not omask[ei]:
+            continue
+        src = int(osrc[ei])
+        assert src in canon, "schedule source must be matched already"
+        reads[ei] = canon[src]
+        if otree[ei]:
+            dst = int(odst[ei])
+            prefix.append((canon[src], int(lab[dst])))
+            canon[dst] = len(keys)
+            keys.append(SubPatternKey(seed, tuple(prefix)))
+    return keys, reads
+
+
+class DagFull(RuntimeError):
+    """A :class:`PlanDAG` ran out of node slots — the caller grows the
+    capacity (a bucket rebuild, amortized like the row doubling)."""
+
+
+class PlanDAG:
+    """Refcounted slot allocator for the distinct sub-pattern nodes of one
+    bank. ``acquire`` interns a query's node path (allocating the lowest
+    free slot per previously-unseen key — deterministic across replays),
+    ``release`` decrements and frees leaves. The device-side mirror is the
+    bucket's ``row_node`` table: slot ids index the matcher's shared
+    expansion tables (DESIGN.md §7)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._slot: Dict[SubPatternKey, int] = {}
+        self._ref: Dict[SubPatternKey, int] = {}
+        self._free: List[int] = list(range(capacity))
+        heapq.heapify(self._free)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self._slot)
+
+    def slot(self, key: SubPatternKey) -> int:
+        return self._slot[key]
+
+    def refcounts(self) -> Dict[SubPatternKey, int]:
+        return dict(self._ref)
+
+    def acquire(self, keys: Sequence[SubPatternKey]) -> List[int]:
+        """Intern a query's node path; returns the slot per key. Raises
+        :exc:`DagFull` (before any mutation) when the fresh keys outnumber
+        the free slots."""
+        fresh = [k for k in dict.fromkeys(keys) if k not in self._slot]
+        if len(fresh) > len(self._free):
+            raise DagFull(
+                f"PlanDAG capacity {self.capacity} exceeded: "
+                f"{self.n_nodes} live nodes + {len(fresh)} new")
+        for k in fresh:
+            self._slot[k] = heapq.heappop(self._free)
+        for k in keys:
+            self._ref[k] = self._ref.get(k, 0) + 1
+        return [self._slot[k] for k in keys]
+
+    def release(self, keys: Sequence[SubPatternKey]) -> None:
+        for k in keys:
+            r = self._ref[k] - 1
+            if r == 0:
+                del self._ref[k]
+                heapq.heappush(self._free, self._slot.pop(k))
+            else:
+                self._ref[k] = r
+
+    def digest(self) -> np.ndarray:
+        """``int64[capacity, 2]`` — per slot ``(key digest, refcount)``,
+        zeros for free slots. The checkpoint round-trip view: content-
+        stable, so a reload against the same registry must reproduce it
+        exactly."""
+        out = np.zeros((self.capacity, 2), np.int64)
+        for k, s in self._slot.items():
+            out[s, 0] = k.digest()
+            out[s, 1] = self._ref[k]
+        return out
 
 
 def triangle(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:

@@ -27,13 +27,27 @@ import numpy as np
 from repro.config.base import EngineConfig, IGPMConfig
 from repro.core.graph import DynamicGraph
 from repro.core.gray import BankGRayMatcher, GRayResult
-from repro.core.query import Query, QueryBank, stack_queries
+from repro.core.query import (PlanDAG, Query, QueryBank, SubPatternKey,
+                              decompose, schedule_reads, stack_queries)
 from repro.engine.sharding import ShardedBankMatch, query_shard_count
 from repro.sparse.ell import EllGraph
 
 
 def _pow2(x: int, floor: int) -> int:
     return max(floor, 1 << int(np.ceil(np.log2(max(x, 1)))))
+
+
+def encode_strings(strs) -> np.ndarray:
+    """Serialize strings as a flat ``uint8`` array (the checkpointer only
+    carries numeric dtypes — unicode arrays would be cast to float32)."""
+    return np.frombuffer("\n".join(strs).encode("utf-8"),
+                         np.uint8).copy()
+
+
+def decode_strings(a: np.ndarray) -> Tuple[str, ...]:
+    if a.size == 0:
+        return ()
+    return tuple(bytes(np.asarray(a, np.uint8)).decode("utf-8").split("\n"))
 
 
 def bucket_shape(query: Query, ecfg: EngineConfig) -> Tuple[int, int]:
@@ -71,14 +85,23 @@ class QueryBucket:
 
     def __init__(self, cfg: IGPMConfig, q_max: int, qe_max: int, b_pad: int,
                  shard: str = "auto", g_shards: int = 1,
-                 q_budget: Optional[int] = None):
+                 q_budget: Optional[int] = None,
+                 node_cap: Optional[int] = None):
         self.q_max, self.qe_max, self.b_pad = q_max, qe_max, b_pad
+        # sub-pattern DAG capacity: defaults to the identity bound (every
+        # row needs ≤ q_max nodes, so q_max·b_pad never overflows); the
+        # engine passes tighter pow-2 caps and grows them on DagFull
+        self.node_cap = node_cap if node_cap is not None else q_max * b_pad
+        self.dag = PlanDAG(self.node_cap)
+        self.row_node = jnp.zeros((b_pad, qe_max), jnp.int32)
+        self._row_keys: List[Optional[List[SubPatternKey]]] = [None] * b_pad
         self.bank = _empty_bank(q_max, qe_max, b_pad)
         self.matcher = BankGRayMatcher(
             self.bank, cfg.n_labels, cfg.top_k_patterns,
             rwr_iters=cfg.rwr_iters, restart=cfg.restart_prob,
             bridge_hops=cfg.bridge_hops, backend=cfg.backend,
-            ell_width=cfg.ell_width, memo=False, rwr_tol=cfg.rwr_tol)
+            ell_width=cfg.ell_width, memo=False, rwr_tol=cfg.rwr_tol,
+            node_cap=self.node_cap)
         self.n_shards = query_shard_count(b_pad, shard,
                                           max_devices=q_budget)
         self.g_shards = g_shards
@@ -88,6 +111,7 @@ class QueryBucket:
         self.qids: List[Optional[str]] = [None] * b_pad
         self._queries: List[Optional[Query]] = [None] * b_pad
         self._row_masks: List[Optional[np.ndarray]] = [None] * b_pad
+        self._names: List[str] = [f"q{i}" for i in range(b_pad)]
         self.version = 0  # bumped on every membership change (seed memo key)
 
     # -- membership -----------------------------------------------------------
@@ -95,6 +119,12 @@ class QueryBucket:
     @property
     def key(self) -> Tuple[int, int, int]:
         return (self.q_max, self.qe_max, self.b_pad)
+
+    @property
+    def dag_key(self) -> Tuple[int, int, int, int]:
+        """Bucket identity including the DAG node capacity — what the
+        compiled trace is keyed on (DESIGN.md §7)."""
+        return (self.q_max, self.qe_max, self.b_pad, self.node_cap)
 
     @property
     def n_live(self) -> int:
@@ -120,10 +150,24 @@ class QueryBucket:
 
     def register(self, qid: str, query: Query) -> int:
         """Write ``query`` into a free row; returns the slot. Device-array
-        row writes only — the bucket's compiled programs are untouched."""
+        row writes only — the bucket's compiled programs are untouched.
+        The query's sub-pattern path is interned into the bucket DAG
+        (refcount increments; raises :exc:`~repro.core.query.DagFull`
+        before touching anything when the capacity is exhausted) and the
+        row's ``row_node`` plan is scattered alongside the bank row."""
         slot = self.qids.index(None)  # raises ValueError when full
         row = stack_queries([query], q_max=self.q_max, qe_max=self.qe_max)
+        row_q = row.query(0)
+        keys = decompose(row_q)
+        reads = schedule_reads(row_q)
+        slots = self.dag.acquire(keys)  # may raise DagFull — no mutation yet
+        plan = np.zeros(self.qe_max, np.int32)
+        for ei in range(row_q.n_edges):
+            plan[ei] = slots[reads[ei]]
+        self.row_node = self.row_node.at[slot].set(jnp.asarray(plan))
+        self._row_keys[slot] = keys
         b = self.bank
+        self._names[slot] = query.name
         self.bank = b._replace(
             labels=b.labels.at[slot].set(row.labels[0]),
             mask=b.mask.at[slot].set(row.mask[0]),
@@ -131,7 +175,8 @@ class QueryBucket:
             order_dst=b.order_dst.at[slot].set(row.order_dst[0]),
             order_tree=b.order_tree.at[slot].set(row.order_tree[0]),
             order_mask=b.order_mask.at[slot].set(row.order_mask[0]),
-            anchor=b.anchor.at[slot].set(row.anchor[0]))
+            anchor=b.anchor.at[slot].set(row.anchor[0]),
+            names=tuple(self._names))
         self.qids[slot] = qid
         self._queries[slot] = query
         self._row_masks[slot] = np.asarray(row.mask[0])
@@ -139,9 +184,16 @@ class QueryBucket:
         return slot
 
     def retire(self, qid: str) -> int:
-        """Zero the row of ``qid``; returns the freed slot."""
+        """Zero the row of ``qid``; returns the freed slot. The row's DAG
+        refcounts decrement, freeing node slots whose last holder left."""
         slot = self.qids.index(qid)
+        keys = self._row_keys[slot]
+        assert keys is not None
+        self.dag.release(keys)
+        self._row_keys[slot] = None
+        self.row_node = self.row_node.at[slot].set(0)
         b = self.bank
+        self._names[slot] = f"q{slot}"
         self.bank = b._replace(
             labels=b.labels.at[slot].set(0),
             mask=b.mask.at[slot].set(False),
@@ -149,11 +201,24 @@ class QueryBucket:
             order_dst=b.order_dst.at[slot].set(0),
             order_tree=b.order_tree.at[slot].set(False),
             order_mask=b.order_mask.at[slot].set(False),
-            anchor=b.anchor.at[slot].set(0))
+            anchor=b.anchor.at[slot].set(0),
+            names=tuple(self._names))
         self.qids[slot] = None
         self._queries[slot] = None
         self._row_masks[slot] = None
         self.version += 1
+        return slot
+
+    def rename_row(self, old_qid: str, new_qid: str, query: Query) -> int:
+        """Hand ``old_qid``'s row to an exact-duplicate alias — pure host
+        bookkeeping (the device row is bitwise the alias's row already),
+        so the seed memo and compiled traces stay valid. Returns the
+        slot."""
+        slot = self.qids.index(old_qid)
+        self.qids[slot] = new_qid
+        self._queries[slot] = query
+        self._names[slot] = query.name
+        self.bank = self.bank._replace(names=tuple(self._names))
         return slot
 
     # -- execution ------------------------------------------------------------
@@ -179,9 +244,11 @@ class QueryBucket:
         seed_ids, seed_mask = seeds
         if self._sharded is not None:
             return self._sharded(g, r_lab, seed_ids, seed_mask, ell,
-                                 self.bank, graph_sharded=graph_sharded)
+                                 self.bank, graph_sharded=graph_sharded,
+                                 row_node=self.row_node)
         return self.matcher.match_from_seeds(g, r_lab, seed_ids, seed_mask,
-                                             ell=ell, bank=self.bank)
+                                             ell=ell, bank=self.bank,
+                                             row_node=self.row_node)
 
     def trace_count(self) -> int:
         """Compiled-trace count across this bucket's jitted programs."""
@@ -205,6 +272,13 @@ class QueryBucket:
             "order_mask": np.asarray(b.order_mask),
             "anchor": np.asarray(b.anchor),
             "occupancy": np.asarray([q is not None for q in self.qids]),
+            # host metadata rides along as uint8/int64 (the checkpointer
+            # carries numeric dtypes only): the per-row names the bank
+            # previously dropped, the row→node plan, and the DAG digest
+            # (per-slot key hash + refcount) for the round-trip check
+            "names": encode_strings(self._names),
+            "row_node": np.asarray(self.row_node),
+            "dag": self.dag.digest(),
         }
 
     def load_bank_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
@@ -214,7 +288,37 @@ class QueryBucket:
             raise ValueError(
                 "checkpointed bucket occupancy does not match the live "
                 "registry — register the same queries before load()")
+        # the DAG/plans are rebuilt by registration, but SLOT ids depend on
+        # the register/retire history (freed slots are reused lowest-first),
+        # which a restore does not replay — so verify up to slot
+        # permutation: the live DAG must hold the same (key-hash, refcount)
+        # multiset, and every row's plan must route through the same KEYS
+        # (slot→hash mapped), even if the slot numbers moved
+        if "dag" in arrays:
+            ck_dag = np.asarray(arrays["dag"])
+            lv_dag = self.dag.digest()
+            ck_live = ck_dag[ck_dag[:, 1] > 0]
+            lv_live = lv_dag[lv_dag[:, 1] > 0]
+            if ck_live.shape != lv_live.shape or not np.array_equal(
+                    ck_live[np.lexsort(ck_live.T[::-1])],
+                    lv_live[np.lexsort(lv_live.T[::-1])]):
+                raise ValueError(
+                    "checkpointed sub-pattern DAG does not match the live "
+                    "registry — register the same queries before load()")
+            if "row_node" in arrays:
+                rmask = occ[:, None] & np.asarray(self.bank.order_mask, bool)
+                ck_h = ck_dag[:, 0][np.asarray(arrays["row_node"])]
+                lv_h = lv_dag[:, 0][np.asarray(self.row_node)]
+                if not np.array_equal(ck_h[rmask], lv_h[rmask]):
+                    raise ValueError(
+                        "checkpointed row→node plan does not match the "
+                        "live bank")
+        if "names" in arrays:
+            names = decode_strings(np.asarray(arrays["names"]))
+            if len(names) == self.b_pad:
+                self._names = list(names)
         self.bank = self.bank._replace(
+            names=tuple(self._names),
             **{f: jnp.asarray(arrays[f])
                for f in ("labels", "mask", "order_src", "order_dst",
                          "order_tree", "order_mask", "anchor")})

@@ -37,10 +37,11 @@ from repro.config.base import EngineConfig, IGPMConfig, resolve_backend
 from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
                               apply_update, updated_vertices)
 from repro.core.pem import PartialExecutionManager
-from repro.core.query import Query
+from repro.core.query import DagFull, Query, query_signature
 from repro.core.rwr import label_rwr, label_rwr_adaptive
 from repro.core.subgraph import extract_induced, remap_matched
-from repro.engine.buckets import QueryBucket, bucket_shape
+from repro.engine.buckets import (QueryBucket, _pow2, bucket_shape,
+                                  decode_strings, encode_strings)
 from repro.engine.sharding import ShardedSweep, device_split
 from repro.engine.state import EngineState, QueryDelta, StepOutput
 from repro.engine.store import PatternStore, live_vertex_mask
@@ -77,6 +78,13 @@ class Engine:
         self.stores: Dict[str, PatternStore] = {}
         self._where: Dict[str, Tuple[int, int]] = {}  # qid → bucket (q, qe)
         self._order: List[str] = []                   # registration order
+        # exact-duplicate groups: content signature → [primary, *aliases].
+        # The primary owns the bank row; aliases ride it for free (zero
+        # device work at register; results fan out to every store).
+        self._dups: Dict[Tuple, List[str]] = {}
+        self._sig_of: Dict[str, Tuple] = {}
+        self._alias_query: Dict[str, Query] = {}      # alias qid → its Query
+        self.n_dedup = 0
         # storm seed cache (satellite: consecutive storm steps stop paying
         # the full-graph seed recompute) — see EngineConfig. Entries are
         # (version key, recompute mask, seeds): a step reuses the seeds
@@ -110,16 +118,43 @@ class Engine:
         elif qid in self.stores:
             raise ValueError(f"qid {qid!r} already registered")
         shape = bucket_shape(query, self.ecfg)
+        # with dedup disabled every registration is its own singleton group
+        # (duplicates occupy real rows and must not share result fan-out)
+        sig = query_signature(query) if self.ecfg.dedup else (qid,)
+        if self.ecfg.dedup and self._dups.get(sig):
+            # exact-duplicate fast path: the query's tensors are bitwise a
+            # live row already — alias that row. ZERO device work (no bank
+            # write, no DAG change, no seed-memo invalidation); the row's
+            # match results fan out to this store too (DESIGN.md §7).
+            self._dups[sig].append(qid)
+            self._sig_of[qid] = sig
+            self._alias_query[qid] = query
+            self.n_dedup += 1
+            self.stores[qid] = PatternStore()
+            self._where[qid] = shape
+            self._order.append(qid)
+            return qid
         bucket = self.buckets.get(shape)
         if bucket is None:
             bucket = QueryBucket(self.cfg, *shape, b_pad=1,
                                  shard=self.ecfg.shard,
                                  g_shards=self.g_shards,
-                                 q_budget=self.q_budget)
+                                 q_budget=self.q_budget,
+                                 node_cap=shape[0])
             self.buckets[shape] = bucket
         elif bucket.full:
             bucket = self._grow(bucket)
-        bucket.register(qid, query)
+        while True:
+            try:
+                bucket.register(qid, query)
+                break
+            except DagFull:
+                # sub-pattern capacity outgrown: double it (a rebuild, the
+                # same amortized cost as the B_pad doubling)
+                bucket = self._rebuild(bucket, bucket.b_pad,
+                                       node_cap=2 * bucket.node_cap)
+        self._dups.setdefault(sig, []).append(qid)
+        self._sig_of[qid] = sig
         self._seed_memo.pop(shape, None)
         self.stores[qid] = PatternStore()
         self._where[qid] = shape
@@ -128,41 +163,73 @@ class Engine:
 
     def retire(self, qid: str) -> None:
         """Drop a standing query (device row clear — zero recompilations).
-        Its pattern store goes with it. A bucket left EMPTY is dropped
-        outright (no reason to keep sweeping a dead bank); one left at
-        ≤ quarter occupancy compacts to half its row capacity (the shrink
-        mirror of the growth doubling, so churn-heavy servers stop
-        sweeping dead rows; amortized exactly like the doubling)."""
+        Its pattern store goes with it. Retiring an ALIAS (or a primary
+        with live aliases, which hands its row to the next one) is pure
+        host bookkeeping. A bucket left EMPTY is dropped outright (no
+        reason to keep sweeping a dead bank); one left at ≤ quarter
+        occupancy compacts to half its row capacity (the shrink mirror of
+        the growth doubling, so churn-heavy servers stop sweeping dead
+        rows; amortized exactly like the doubling)."""
         if qid not in self._where:
             raise KeyError(f"unknown qid {qid!r}; live: {self._order}")
         shape = self._where.pop(qid)
-        bucket = self.buckets[shape]
-        bucket.retire(qid)
-        self._seed_memo.pop(shape, None)
+        sig = self._sig_of.pop(qid)
+        group = self._dups[sig]
         del self.stores[qid]
         self._order.remove(qid)
+        bucket = self.buckets[shape]
+        if qid != group[0]:
+            # alias — the primary keeps the row
+            group.remove(qid)
+            del self._alias_query[qid]
+            return
+        group.pop(0)
+        if group:
+            # primary with aliases: promote the next one onto the row
+            # (bitwise the same tensors, so the device bank — and the
+            # seed memo — stay untouched)
+            promoted = group[0]
+            bucket.rename_row(qid, promoted,
+                              self._alias_query.pop(promoted))
+            return
+        del self._dups[sig]
+        bucket.retire(qid)
+        self._seed_memo.pop(shape, None)
         if bucket.n_live == 0:
             del self.buckets[shape]
         elif bucket.b_pad > 1 and bucket.n_live <= bucket.b_pad // 4:
             self._rebuild(bucket, bucket.b_pad // 2)
 
-    def _rebuild(self, bucket: QueryBucket, b_pad: int) -> QueryBucket:
+    def _rebuild(self, bucket: QueryBucket, b_pad: int,
+                 node_cap: Optional[int] = None) -> QueryBucket:
         """Repack a bucket's live rows into a ``b_pad``-row bank — the one
         membership change that recompiles, by design. ``_grow`` doubles a
         full bucket; ``retire`` halves one at ≤ quarter occupancy (the
-        ≤1/4 ↔ ×2 hysteresis keeps both amortized O(1) per change)."""
+        ≤1/4 ↔ ×2 hysteresis keeps both amortized O(1) per change). The
+        DAG capacity re-fits to the live distinct nodes unless an explicit
+        ``node_cap`` is forced (the DagFull doubling)."""
+        if node_cap is None:
+            node_cap = _pow2(bucket.dag.n_nodes, bucket.q_max)
         fresh = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
                             b_pad=b_pad, shard=self.ecfg.shard,
-                            g_shards=self.g_shards, q_budget=self.q_budget)
+                            g_shards=self.g_shards, q_budget=self.q_budget,
+                            node_cap=node_cap)
         for slot, qid in bucket.rows():
             fresh.register(qid, bucket.query(slot))
         self.buckets[(bucket.q_max, bucket.qe_max)] = fresh
         return fresh
 
     def _grow(self, bucket: QueryBucket) -> QueryBucket:
-        return self._rebuild(bucket, 2 * bucket.b_pad)
+        # headroom for the incoming row (≤ q_max fresh nodes), so a grow
+        # is ONE rebuild, not a rebuild plus a DagFull retry
+        return self._rebuild(
+            bucket, 2 * bucket.b_pad,
+            node_cap=_pow2(bucket.dag.n_nodes + bucket.q_max, bucket.q_max))
 
     def query(self, qid: str) -> Query:
+        q = self._alias_query.get(qid)
+        if q is not None:
+            return q
         shape = self._where[qid]
         bucket = self.buckets[shape]
         return bucket.query(bucket.qids.index(qid))
@@ -174,6 +241,14 @@ class Engine:
     def occupancy(self) -> Dict[Tuple[int, int, int], Tuple[int, int]]:
         """bucket key (q_max, qe_max, B_pad) → (live rows, padded rows)."""
         return {b.key: (b.n_live, b.b_pad) for b in self.buckets.values()}
+
+    def dag_occupancy(self) -> Dict[Tuple[int, int, int, int],
+                                    Tuple[int, int]]:
+        """DAG bucket key (q_max, qe_max, B_pad, node_cap) → (live
+        sub-pattern nodes, node capacity) — the shared-table view of
+        :meth:`occupancy` (DESIGN.md §7)."""
+        return {b.dag_key: (b.dag.n_nodes, b.node_cap)
+                for b in self.buckets.values()}
 
     def trace_count(self) -> int:
         """Total compiled traces across bucket programs — the membership
@@ -188,7 +263,17 @@ class Engine:
                 "seed_cache_hits_bounded": self.seed_hits_bounded,
                 "seed_cache_misses": self.seed_misses,
                 "rwr_sweeps": self.rwr_sweeps,
-                "rwr_cols_skipped": self.rwr_cols_skipped}
+                "rwr_cols_skipped": self.rwr_cols_skipped,
+                # shared sub-pattern occupancy (DESIGN.md §7): how many
+                # standing queries the bank serves vs the device rows and
+                # distinct DAG nodes actually paying for them
+                "n_dedup": self.n_dedup,
+                "standing_queries": len(self._order),
+                "bank_rows": sum(b.n_live for b in self.buckets.values()),
+                "dag_nodes": sum(b.dag.n_nodes
+                                 for b in self.buckets.values()),
+                "dag_node_cap": sum(b.node_cap
+                                    for b in self.buckets.values())}
 
     # -- state lifecycle -------------------------------------------------------
 
@@ -294,14 +379,19 @@ class Engine:
             exact = np.asarray(res.exact)
             valid = np.asarray(res.valid)
             for slot, qid in bucket.rows():
-                store = self.stores[qid]
-                if rebuild:
-                    store._patterns.clear()
-                new = store.merge_arrays(matched[slot], goodness[slot],
-                                         exact[slot], valid[slot],
-                                         bucket.row_mask(slot))
-                by_qid[qid] = QueryDelta(qid, bucket.query(slot).name, new,
-                                         store.total, store.exact)
+                # one device row serves its whole duplicate group: the
+                # primary (owning the row) plus every alias store
+                for alias in self._dups.get(self._sig_of[qid], [qid]):
+                    store = self.stores[alias]
+                    if rebuild:
+                        store._patterns.clear()
+                    new = store.merge_arrays(matched[slot], goodness[slot],
+                                             exact[slot], valid[slot],
+                                             bucket.row_mask(slot))
+                    name = (bucket.query(slot).name if alias == qid
+                            else self._alias_query[alias].name)
+                    by_qid[alias] = QueryDelta(alias, name, new,
+                                               store.total, store.exact)
         return tuple(by_qid[q] for q in self._order if q in by_qid)
 
     # -- whole-engine checkpointing (DESIGN.md §4) ------------------------------
@@ -324,6 +414,12 @@ class Engine:
                         for k, b in self.buckets.items()},
             "stores": {qid: self.stores[qid].to_arrays()
                        for qid in self._order},
+            # qid → primary-row aliases of the exact-duplicate groups
+            # (uint8-encoded "alias\tprimary" lines; round-trip guard —
+            # a load against the same registry must reproduce them)
+            "aliases": encode_strings(
+                f"{a}\t{self._dups[self._sig_of[a]][0]}"
+                for a in self._order if a in self._alias_query),
         }
         if self.pem is not None:
             d["pem"] = {"community_size": np.asarray(self.pem.c, np.int64)}
@@ -349,6 +445,14 @@ class Engine:
         for key_s, arrays in tree["buckets"].items():
             q, qe = (int(x) for x in key_s.split("x"))
             self.buckets[(q, qe)].load_bank_arrays(arrays)
+        if "aliases" in tree:
+            live = tuple(f"{a}\t{self._dups[self._sig_of[a]][0]}"
+                         for a in self._order if a in self._alias_query)
+            if decode_strings(np.asarray(tree["aliases"])) != live:
+                raise ValueError(
+                    "checkpointed duplicate-alias groups do not match the "
+                    "live registry — register the same queries before "
+                    "load()")
         for qid, arrays in tree["stores"].items():
             self.stores[qid].load_arrays(arrays)
         if self.pem is not None:

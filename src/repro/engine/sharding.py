@@ -126,50 +126,61 @@ class ShardedBankMatch:
         self._fns = {}  # keyed (ell present, graph sharded)
 
     def _build(self, g: DynamicGraph, ell: Optional[EllGraph],
-               graph_sharded: bool):
+               graph_sharded: bool, has_plan: bool):
         rep, q = _REP, P("q")
         axis = "g" if (graph_sharded and self.g_shards > 1) else None
         g_spec = jax.tree.map(lambda _: rep, g)
         bank_specs = (q,) * 7  # labels, mask, anchor, order_* — all row-major
+        # the row_node plan splits with the rows: each shard resolves the
+        # DAG nodes its local rows read and computes them independently
+        # (node tables are replicated work, rows stay collective-free)
+        plan_specs = (q,) if has_plan else ()
         out_specs = GRayResult(q, q, q, q, q)
         if ell is not None:
             ell_spec = jax.tree.map(
                 lambda _: P("g") if axis is not None else rep, ell)
 
             def f(g_, r_lab, seed_ids, seed_mask, ell_, labels, mask, anchor,
-                  osrc, odst, otree, omask):
+                  osrc, odst, otree, omask, *plan):
                 return self.matcher._match_impl(
                     g_, r_lab, seed_ids, seed_mask, ell_, labels, mask,
-                    anchor, osrc, odst, otree, omask, graph_axis=axis)
+                    anchor, osrc, odst, otree, omask,
+                    plan[0] if plan else None, graph_axis=axis)
 
-            in_specs = (g_spec, rep, q, q, ell_spec) + bank_specs
+            in_specs = (g_spec, rep, q, q, ell_spec) + bank_specs + plan_specs
         else:
             def f(g_, r_lab, seed_ids, seed_mask, labels, mask, anchor,
-                  osrc, odst, otree, omask):
+                  osrc, odst, otree, omask, *plan):
                 return self.matcher._match_impl(
                     g_, r_lab, seed_ids, seed_mask, None, labels, mask,
-                    anchor, osrc, odst, otree, omask, graph_axis=axis)
+                    anchor, osrc, odst, otree, omask,
+                    plan[0] if plan else None, graph_axis=axis)
 
-            in_specs = (g_spec, rep, q, q) + bank_specs
+            in_specs = (g_spec, rep, q, q) + bank_specs + plan_specs
         return jax.jit(shard_map(f, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=out_specs, check_rep=False))
 
     def __call__(self, g: DynamicGraph, r_lab: jnp.ndarray,
                  seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
                  ell: Optional[EllGraph], bank: QueryBank,
-                 graph_sharded: bool = False) -> GRayResult:
+                 graph_sharded: bool = False,
+                 row_node: Optional[jnp.ndarray] = None) -> GRayResult:
         # without a graph axis, graph_sharded compiles the identical
         # program — normalize so storm and induced calls share one trace
         graph_sharded = graph_sharded and self.g_shards > 1
-        key = (ell is not None, graph_sharded)
+        key = (ell is not None, graph_sharded, row_node is not None)
         if key not in self._fns:
-            self._fns[key] = self._build(g, ell, graph_sharded)
+            self._fns[key] = self._build(g, ell, graph_sharded,
+                                         row_node is not None)
         args = (g, r_lab, seed_ids, seed_mask)
         if ell is not None:
             args = args + (ell,)
-        return self._fns[key](*args, bank.labels, bank.mask, bank.anchor,
-                              bank.order_src, bank.order_dst,
-                              bank.order_tree, bank.order_mask)
+        args = args + (bank.labels, bank.mask, bank.anchor,
+                       bank.order_src, bank.order_dst,
+                       bank.order_tree, bank.order_mask)
+        if row_node is not None:
+            args = args + (row_node,)
+        return self._fns[key](*args)
 
     def trace_count(self) -> int:
         n = 0

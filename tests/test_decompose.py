@@ -1,0 +1,283 @@
+"""Shared sub-pattern decomposition (DESIGN.md §7).
+
+The acceptance contract of the refcounted sub-pattern DAG:
+
+  * ``decompose`` canonicalizes BFS-schedule prefixes: keys are padding-
+    invariant, anchored at depth 0, and queries with a common schedule
+    prefix share keys;
+  * ``PlanDAG`` is an exact refcount ledger — acquire/release round-trips,
+    DagFull raises BEFORE any mutation, freed slots are reused;
+  * a decomposed bank (one expansion-table slot per distinct DAG node) is
+    BITWISE-equal to the undecomposed per-row path on both sweep backends,
+    including the residual-adaptive RWR;
+  * randomized register/retire churn keeps every bucket's DAG refcounts
+    equal to a host oracle, exact-duplicate dedup keeps served stores
+    identical to an unshared bank, and the DAG survives a checkpoint
+    round-trip.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config.base import EngineConfig, IGPMConfig
+from repro.core.graph import UpdateBatch, ell_from_graph, new_graph
+from repro.core.query import (DagFull, PlanDAG, build_query, decompose,
+                              query_signature, query_zoo, schedule_reads,
+                              square, triangle)
+from repro.core.rwr import label_rwr
+from repro.engine import Engine, bucket_shape
+from repro.engine.buckets import QueryBucket
+
+
+def _cfg(backend="ell", **kw):
+    base = dict(n_max=128, e_max=4096, ell_width=8, rwr_iters=8,
+                rwr_iters_incremental=3, top_k_patterns=6,
+                init_community_size=32, backend=backend)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _rand_graph(seed=1, n=128):
+    rng = np.random.default_rng(seed)
+    return new_graph(n, 2048, labels=rng.integers(0, 4, n).astype(np.int32),
+                     senders=rng.integers(0, n, 500),
+                     receivers=rng.integers(0, n, 500))
+
+
+# -- canonical signatures ------------------------------------------------------
+
+def test_decompose_anchored_depths_and_reads():
+    for q in query_zoo(8):
+        keys = decompose(q)
+        assert [k.depth for k in keys] == list(range(len(keys)))
+        assert len(set(keys)) == len(keys)  # prefixes strictly grow
+        reads = schedule_reads(q)
+        ne = int(np.asarray(q.order_mask).sum())
+        # every scheduled edge reads an already-built node
+        assert all(0 <= int(reads[e]) < len(keys) for e in range(ne))
+        # non-tree (closure) edges add no node: node count = 1 + tree edges
+        assert len(keys) == 1 + int(np.asarray(q.order_tree)[:ne].sum())
+
+
+def test_decompose_prefix_sharing_across_shapes():
+    # square and a tadpole share the anchor + first two expansions; only
+    # the last tree step diverges — 3 of 4 nodes in common
+    s = square(labels=(1, 1, 1, 1))
+    t = build_query([(0, 1), (0, 2), (0, 3), (1, 2)], [1, 1, 1, 1])
+    ks, kt = decompose(s), decompose(t)
+    assert len(ks) == len(kt) == 4
+    assert len(set(ks) & set(kt)) == 3
+
+
+def test_query_signature_padding_invariant():
+    a = triangle(q_max=8, qe_max=16)
+    b = triangle(q_max=16, qe_max=32)
+    assert query_signature(a) == query_signature(b)
+    assert decompose(a) == decompose(b)
+    c = triangle(labels=(0, 1, 3))
+    assert query_signature(a) != query_signature(c)
+    assert decompose(a)[0] != decompose(c)[0]  # seed differs at the anchor
+
+
+# -- the refcounted DAG --------------------------------------------------------
+
+def test_plan_dag_refcount_lifecycle():
+    dag = PlanDAG(8)
+    ka = decompose(triangle())
+    kb = decompose(triangle(labels=(3, 2, 1)))
+    sa = dag.acquire(ka)
+    assert sa == [0, 1, 2]  # lowest-free, in key order
+    assert dag.acquire(ka) == sa  # re-acquire interns, same slots
+    assert all(dag.refcounts()[k] == 2 for k in ka)
+    sb = dag.acquire(kb)
+    assert set(sa).isdisjoint(sb)
+    dag.release(ka)
+    assert all(dag.refcounts()[k] == 1 for k in ka)
+    dag.release(ka)
+    assert dag.n_nodes == len(kb)  # ka's leaves freed
+    # freed slots are reused lowest-first → replays are deterministic
+    assert dag.acquire(ka) == sa
+
+
+def test_plan_dag_full_raises_before_mutation():
+    dag = PlanDAG(4)
+    ka = decompose(triangle())
+    dag.acquire(ka)
+    before = dag.digest().copy()
+    with pytest.raises(DagFull):
+        dag.acquire(decompose(square()))  # 4 fresh keys, 1 free slot
+    np.testing.assert_array_equal(dag.digest(), before)
+    assert dag.n_nodes == len(ka)
+
+
+# -- bitwise equivalence of the decomposed bank --------------------------------
+
+@pytest.mark.parametrize("backend", ["coo", "ell"])
+def test_bucket_match_bitwise_equals_undecomposed(backend):
+    """The node-table sweep (one expansion per distinct DAG node) must be
+    bitwise the per-row sweep — same matcher, row_node=None selects the
+    identity (one node per row) fallback."""
+    g = _rand_graph()
+    cfg = _cfg(backend)
+    ell = ell_from_graph(g, cfg.ell_width) if backend == "ell" else None
+    bucket = QueryBucket(cfg, 8, 8, 4)
+    for i, q in enumerate(query_zoo(4)):
+        bucket.register(f"q{i}", q)
+    r_lab = label_rwr(g, cfg.n_labels, iters=cfg.rwr_iters, ell=ell)
+    seeds = bucket.seeds(g, r_lab, None)
+    ra = bucket.match(g, r_lab, ell=ell, seeds=seeds)
+    rb = bucket.matcher.match_from_seeds(g, r_lab, *seeds, ell=ell,
+                                         bank=bucket.bank, row_node=None)
+    for f in ra._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ra, f)),
+                                      np.asarray(getattr(rb, f)), err_msg=f)
+
+
+def test_bucket_match_bitwise_equal_under_adaptive_rwr():
+    """Sharing a table column across rows must stay bitwise-safe when the
+    residual-adaptive while_loop decides the sweep count (per-column
+    convergence is column-local, so shared columns converge identically)."""
+    g = _rand_graph(seed=2)
+    cfg = _cfg("ell", rwr_tol=1e-4)
+    ell = ell_from_graph(g, cfg.ell_width)
+    bucket = QueryBucket(cfg, 4, 4, 4)
+    bucket.register("sq", square(labels=(1, 1, 1, 1)))
+    bucket.register("tp", build_query([(0, 1), (0, 2), (0, 3), (1, 2)],
+                                      [1, 1, 1, 1]))
+    assert bucket.dag.n_nodes == 5  # 3 of 8 per-row nodes are shared
+    r_lab = label_rwr(g, cfg.n_labels, iters=cfg.rwr_iters, ell=ell)
+    seeds = bucket.seeds(g, r_lab, None)
+    ra = bucket.match(g, r_lab, ell=ell, seeds=seeds)
+    rb = bucket.matcher.match_from_seeds(g, r_lab, *seeds, ell=ell,
+                                         bank=bucket.bank, row_node=None)
+    for f in ra._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ra, f)),
+                                      np.asarray(getattr(rb, f)), err_msg=f)
+
+
+# -- randomized churn: refcount oracle, dedup equivalence, checkpoint ----------
+
+def _oracle_check(eng, live):
+    """Every bucket's DAG refcounts must equal the host recount over the
+    DISTINCT signatures (dedup: one row per signature) it serves."""
+    for shape, bucket in eng.buckets.items():
+        distinct = {}
+        for q in live.values():
+            if bucket_shape(q, eng.ecfg) == shape:
+                distinct.setdefault(query_signature(q), q)
+        expected = {}
+        for q in distinct.values():
+            for k in decompose(q):
+                expected[k] = expected.get(k, 0) + 1
+        assert bucket.dag.refcounts() == expected, shape
+    # empty buckets are dropped outright, never left with live DAG nodes
+    shapes = {bucket_shape(q, eng.ecfg) for q in live.values()}
+    assert set(eng.buckets) == shapes
+
+
+@pytest.mark.slow
+def test_churn_refcount_oracle_and_dedup_equivalence(tmp_path):
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    pool = query_zoo(24)  # 16 distinct signatures → 8 exact duplicates
+    eng = Engine(cfg, EngineConfig(adaptive=False))
+    live = {}
+    history = []
+    for i in range(60):
+        if live and rng.random() < 0.45:
+            qid = str(rng.choice(sorted(live)))
+            history.append(("retire", qid, None))
+            eng.retire(qid)
+            del live[qid]
+        else:
+            q = pool[int(rng.integers(len(pool)))]
+            qid = f"r{i}"
+            history.append(("register", qid, q))
+            eng.register(q, qid=qid)
+            live[qid] = q
+        _oracle_check(eng, live)
+    assert eng.n_dedup > 0  # the pool's duplicates actually aliased
+
+    # serve a stream; the shared bank must produce stores bitwise equal
+    # to an UNSHARED engine (dedup off: every query its own row) with the
+    # same final query set
+    g = _rand_graph(seed=9)
+    batches = []
+    for _ in range(3):
+        a, b = rng.integers(0, 128, 8), rng.integers(0, 128, 8)
+        keep = a != b
+        batches.append(UpdateBatch.additions(a[keep], b[keep], u_max=64))
+    state = eng.init_state(g)
+    for upd in batches:
+        state, _ = eng.step(state, upd)
+
+    unshared = Engine(cfg, EngineConfig(adaptive=False, dedup=False))
+    for qid in eng.qids:
+        unshared.register(eng.query(qid), qid=qid)
+    su = unshared.init_state(g)
+    for upd in batches:
+        su, _ = unshared.step(su, upd)
+    assert set(eng.qids) == set(unshared.qids)
+    for qid in eng.qids:
+        assert (eng.stores[qid]._patterns
+                == unshared.stores[qid]._patterns), qid
+
+    # checkpoint round-trip: a fresh engine replaying the same membership
+    # history restores the DAG + plans + stores (and verifies them)
+    eng.save(state, str(tmp_path))
+    eng2 = Engine(cfg, EngineConfig(adaptive=False))
+    for op, qid, q in history:
+        (eng2.register(q, qid=qid) if op == "register" else eng2.retire(qid))
+    state2 = eng2.init_state(_rand_graph(seed=9))
+    state2, _ = eng2.load(state2, str(tmp_path))
+    for shape, b in eng.buckets.items():
+        np.testing.assert_array_equal(b.dag.digest(),
+                                      eng2.buckets[shape].dag.digest())
+    for qid in eng.qids:
+        assert eng.stores[qid]._patterns == eng2.stores[qid]._patterns
+    # both keep serving (the ELL mirror rebuild is a cache, so future
+    # steps are equivalent-but-not-bitwise — same contract as
+    # test_engine_checkpoint_roundtrip)
+    upd = batches[0]
+    state, out1 = eng.step(state, upd)
+    state2, out2 = eng2.step(state2, upd)
+    assert out1.step == out2.step
+
+
+def test_checkpoint_restores_row_names(tmp_path):
+    """Bank row names survive the checkpoint (the bank used to drop them
+    to a 'q{slot}' placeholder on restore)."""
+    cfg = _cfg()
+    eng = Engine(cfg, EngineConfig(adaptive=False))
+    eng.register(triangle(labels=(0, 1, 2)), qid="tri")
+    eng.register(square(), qid="sq")
+    state = eng.init_state(_rand_graph())
+    eng.save(state, str(tmp_path))
+    eng2 = Engine(cfg, EngineConfig(adaptive=False))
+    eng2.register(triangle(labels=(0, 1, 2)), qid="tri")
+    eng2.register(square(), qid="sq")
+    eng2.load(eng2.init_state(_rand_graph()), str(tmp_path))
+    for shape, b in eng2.buckets.items():
+        live = [nm for q, nm in zip(b.qids, b.bank.names) if q is not None]
+        assert sorted(live) == ["square", "triangle"]
+
+
+def test_duplicate_register_is_zero_device_work():
+    """An exact-duplicate register must not touch the bank: no version
+    bump, no DAG growth, no new row — just the alias + the counter."""
+    eng = Engine(_cfg(), EngineConfig(adaptive=False))
+    eng.register(triangle(labels=(0, 1, 2)), qid="a")
+    bucket = next(iter(eng.buckets.values()))
+    version, nodes, rows = bucket.version, bucket.dag.n_nodes, bucket.n_live
+    eng.register(triangle(labels=(0, 1, 2)), qid="b")
+    assert bucket.version == version
+    assert bucket.dag.n_nodes == nodes
+    assert bucket.n_live == rows
+    assert eng.n_dedup == 1
+    assert eng.counters()["standing_queries"] == 2
+    assert eng.counters()["bank_rows"] == 1
+    # retiring the primary hands the row to the alias, still no device work
+    eng.retire("a")
+    assert bucket.version == version
+    assert bucket.n_live == 1
+    assert eng.query("b").name == "triangle"
