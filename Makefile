@@ -6,7 +6,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
-    engine-smoke sweep-smoke runtime-smoke decomp-smoke bench-collect
+    engine-smoke sweep-smoke runtime-smoke decomp-smoke trace-smoke \
+    bench-collect
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -64,6 +65,16 @@ decomp-smoke:
 	$(PY) -m pytest tests/test_decompose.py -q
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	    $(PY) -m pytest tests/test_engine_sharding.py -q
+
+# observability smoke (DESIGN.md §8): the obs test suite (zero-cost
+# disabled pinned bitwise + by compiled-trace count, flight recorder,
+# exporters, cross-thread runtime trace), then the end-to-end gate — a
+# traced serving run must stay within 5% of untraced, its JSONL must
+# pass the trace_event span schema, and the traced flash-crowd runtime
+# run must yield a Perfetto-loadable cross-thread artifact
+trace-smoke:
+	timeout 600 $(PY) -m pytest tests/test_obs.py -q
+	PYTHONPATH=src:. timeout 600 $(PY) benchmarks/trace_smoke.py
 
 # merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
 bench-collect:

@@ -86,6 +86,43 @@ def _median_step_s(server: MatchServer, stream, warm: bool) -> float:
     return float(np.median(totals))
 
 
+def _stage_breakdown(server: MatchServer, stream) -> tuple:
+    """Traced replay on the warm server: per-stage p50 wall times.
+
+    The timing rows above measure UNTRACED steps (tracing's extra
+    ``block_until_ready`` fences are real overhead, DESIGN.md §8); this
+    extra pass swaps a tracing :class:`~repro.obs.Obs` onto the warm
+    engine and replays the same stream, so ``stage_*`` telemetry channels
+    fill and the row can name where the step time goes — in particular
+    the host-side ``_merge`` alias fan-out share at bank1024 (ROADMAP).
+    Returns ``(traced p50 step ms, {stage: p50 ms})``.
+    """
+    from repro.config.base import ObsConfig
+    from repro.obs import Obs
+
+    server.reset()
+    server.engine.obs = Obs(ObsConfig(enabled=True))
+    g = stream.graph
+    for upd in stream.updates:
+        server.submit_update(upd)
+        g, _ = server.step(g)
+    server.engine.obs.close()
+    snap = server.telemetry.snapshot()
+    stages = {k[len("p50_stage_"):-len("_ms")]: v
+              for k, v in snap.items()
+              if k.startswith("p50_stage_") and k.endswith("_ms")}
+    return snap["p50_step_ms"], stages
+
+
+def _stage_fields(t_step_ms: float, stages: dict) -> str:
+    """Derived-column cells for a stage breakdown (``|``-joined inside one
+    ``;``-separated field so row parsing stays ``k=v;k=v``)."""
+    cells = "|".join(f"{k}:{v:.2f}" for k, v in sorted(stages.items()))
+    merge_share = stages.get("merge", 0.0) / max(t_step_ms, 1e-9)
+    return (f"traced_p50_ms={t_step_ms:.1f};stage_p50_ms={cells};"
+            f"merge_share={merge_share:.3f}")
+
+
 def _runtime_rows(smoke: bool) -> List[BenchRow]:
     """Sync vs async tail latency under the flash-crowd hotspot scenario,
     back-pressure engaged (module docstring)."""
@@ -207,6 +244,7 @@ def run(smoke: bool = False, scale: float = 1.0,
         stream = generate_stream(spec, n_measured_steps=n_steps, u_max=256)
         t = _median_step_s(server, stream, warm=True)
         snap = server.telemetry.snapshot()
+        t_traced, stages = _stage_breakdown(server, stream)
         rows.append(BenchRow(
             f"serving/bank{bank}", 1e6 * t,
             f"per_query_ms={1e3 * t / bank:.4f};"
@@ -214,7 +252,33 @@ def run(smoke: bool = False, scale: float = 1.0,
             f"dag_nodes={snap.get('dag_nodes', 0)};"
             f"n_dedup={snap.get('n_dedup', 0)};"
             f"standing_queries={snap.get('standing_queries', 0)};"
-            f"p99_ms={snap['p99_step_ms']:.1f}"))
+            f"p99_ms={snap['p99_step_ms']:.1f};"
+            + _stage_fields(t_traced, stages)))
+
+    # prefix-sharing population (ROADMAP): heavy BFS-prefix overlap with
+    # ZERO exact duplication — one 7-vertex anchor-label family whose
+    # variants diverge in tail attachment and closure edges, so the
+    # shared sub-pattern DAG (not the exact-dup alias path) carries the
+    # whole collapse. dag_nodes vs unshared_nodes is the measured ratio.
+    from repro.core.query import decompose, prefix_zoo
+    for bank in ((16, 64) if smoke else (64, 256)):
+        qs = prefix_zoo(bank)
+        server = MatchServer(cfg, qs, serving, seed=0)
+        stream = generate_stream(spec, n_measured_steps=n_steps, u_max=256)
+        t = _median_step_s(server, stream, warm=True)
+        snap = server.telemetry.snapshot()
+        unshared = sum(len(decompose(q)) for q in qs)
+        dag_nodes = snap.get("dag_nodes", 0)
+        t_traced, stages = _stage_breakdown(server, stream)
+        rows.append(BenchRow(
+            f"serving/prefix{bank}", 1e6 * t,
+            f"per_query_ms={1e3 * t / bank:.4f};"
+            f"bank_rows={snap.get('bank_rows', 0)};"
+            f"dag_nodes={dag_nodes};unshared_nodes={unshared};"
+            f"dag_sharing={unshared / max(dag_nodes, 1):.1f};"
+            f"n_dedup={snap.get('n_dedup', 0)};"
+            f"p99_ms={snap['p99_step_ms']:.1f};"
+            + _stage_fields(t_traced, stages)))
 
     # storm scenario: a hotspot stream (every step bursts into one hot
     # region) with the full-graph fallback forced (full_graph_frac < 0);
@@ -315,6 +379,17 @@ def main() -> None:
             f"bank-scale amortization regressed: per-query cost at "
             f"bank1024 is only {scale_ratio:.2f}x below the bank64 linear "
             f"extrapolation (gate: >= 3x)")
+    # the observability deliverable (DESIGN.md §8): say out loud where
+    # the thousand-query step time goes — the host-side `_merge` alias
+    # fan-out is the ROADMAP suspect for the bank1024 step-time growth
+    b1024 = next(r for r in rows if r.name == "serving/bank1024")
+    kv = dict(p.split("=") for p in b1024.derived.split(";") if "=" in p)
+    stages = dict(c.split(":") for c in kv["stage_p50_ms"].split("|"))
+    print(f"# bank1024 traced stage p50 breakdown (ms): "
+          + " ".join(f"{k}={v}" for k, v in sorted(stages.items())))
+    print(f"# bank1024 _merge/alias-fan-out share of traced step: "
+          f"{float(kv['merge_share']):.1%} "
+          f"({stages.get('merge', '?')} ms of {kv['traced_p50_ms']} ms)")
     ad_ratio = (by_name["serving/adaptive_rwr/adaptive"]
                 / by_name["serving/adaptive_rwr/fixed"])
     print(f"# adaptive/fixed warm-storm step-time ratio: {ad_ratio:.2f}x "

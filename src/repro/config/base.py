@@ -214,6 +214,40 @@ class IGPMConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Observability knobs — structured tracing, flight recorder, and
+    exporters (DESIGN.md §8).
+
+    With ``enabled=False`` (the default) every span call hits the no-op
+    tracer singleton and no extra device fences run: the engine path is
+    bitwise-identical and compiled trace counts are unchanged (pinned in
+    ``tests/test_obs.py``). With ``enabled=True`` the engine, server, and
+    runtime emit Chrome ``trace_event``-shaped spans carrying step/batch
+    ids into a bounded in-memory ring.
+
+    ``trace_path`` is a *prefix*: exports write ``<prefix>.jsonl`` (one
+    event per line) and ``<prefix>.json`` (a ``{"traceEvents": [...]}``
+    document Perfetto / chrome://tracing opens directly). The flight
+    recorder keeps the last ``flight_n`` fully-traced steps and dumps
+    them to ``<flight_path>.NNN.jsonl`` on demand, on executor crash, or
+    when an e2e latency sample exceeds ``slo_e2e_ms``. ``profiler_dir``
+    brackets steps ``[profile_start, profile_stop)`` in a
+    ``jax.profiler`` trace session for device-level drill-down.
+    """
+
+    enabled: bool = False
+    trace_path: str = ""       # export prefix; "" = in-memory ring only
+    event_cap: int = 65536     # bounded span ring (oldest spans drop)
+    flight_n: int = 16         # flight-recorder ring of traced steps
+    flight_path: str = ""      # dump prefix; "" = in-memory only
+    slo_e2e_ms: float = 0.0    # >0: dump flight when an e2e sample exceeds
+    prometheus_path: str = ""  # Prometheus text-format snapshot target
+    profiler_dir: str = ""     # jax.profiler trace dir ("" = off)
+    profile_start: int = 0     # first step inside the profiler session
+    profile_stop: int = 0      # first step outside it
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     """Knobs of the functional-core match engine (DESIGN.md §4).
 
@@ -270,6 +304,8 @@ class EngineConfig:
     # live one becomes an ALIAS of that row (zero device work; results
     # fan out to both stores). Off pins one bank row per qid.
     dedup: bool = True
+    # structured tracing / flight recorder (DESIGN.md §8)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 @dataclass(frozen=True)
@@ -303,6 +339,12 @@ class ServingConfig:
     seed_cache_hamming: int = 0       # mask Hamming bound for seed reuse
     shard: str = "auto"               # query-axis bucket execution | 'off'
     graph_shard: str = "off"          # graph-axis sweep sharding | 'auto'
+    # per-channel telemetry ring overrides, ((channel, window), ...) —
+    # tuples keep the config hashable; e2e/queue_wait already default to
+    # a p999-credible 4096 (telemetry.DEFAULT_CHANNEL_WINDOWS)
+    telemetry_channel_windows: Tuple[Tuple[str, int], ...] = ()
+    # structured tracing / flight recorder (DESIGN.md §8)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
     def engine(self) -> EngineConfig:
         """The engine configuration this serving configuration implies."""
@@ -312,7 +354,7 @@ class ServingConfig:
             seed_cache_staleness=self.seed_cache_staleness,
             seed_cache_hamming=self.seed_cache_hamming,
             q_cap=self.q_max, qe_cap=self.qe_max, shard=self.shard,
-            graph_shard=self.graph_shard)
+            graph_shard=self.graph_shard, obs=self.obs)
 
 
 @dataclass(frozen=True)
@@ -366,6 +408,10 @@ class RuntimeConfig:
     checkpoint_dir: str = ""
     checkpoint_every: int = 0        # steps; 0 = only on drain
     subscriber_depth: int = 4096     # per-subscriber delta buffer bound
+    # runtime-level tracing override: None inherits the server engine's
+    # Obs hub (usually what you want — one hub sees ingress, executor,
+    # and engine spans together); set to rebuild the hub at start()
+    obs: Optional[ObsConfig] = None
 
 
 # ---------------------------------------------------------------------------

@@ -375,6 +375,54 @@ def line3(labels: Tuple[int, int, int] = (0, 0, 0), **kw) -> Query:
     return build_query([(0, 1), (1, 2)], list(labels), name="line3", **kw)
 
 
+def prefix_zoo(count: int, q_max: int = 8, qe_max: int = 16) -> List[Query]:
+    """``count`` standing queries with heavy BFS-prefix overlap and zero
+    exact duplication — the DAG-sharing stress population (ROADMAP).
+
+    Sub-pattern sharing keys on the *stripped* label vector, mask and
+    anchor (:class:`SubPatternKey.seed`), so the whole family fixes one
+    7-vertex label vector and varies only (a) which earlier vertex each
+    tail vertex hangs off (diverging the BFS tree path mid-way) and
+    (b) which closure edges verify the match (never extending the tree,
+    so those variants share their *entire* expansion path). Closure
+    subsets are enumerated innermost: consecutive queries share deepest.
+
+    Every query keeps vertex 0 the (first-index) max-degree vertex so
+    :func:`build_query` anchors the family identically; exact duplicates
+    are filtered by :func:`query_signature`.
+    """
+    labels = [0, 1, 2, 3, 1, 2, 3]
+    core = [(0, 1), (0, 2), (0, 3)]
+    closure_pool = [(1, 2), (1, 3), (2, 3), (4, 5)]
+    out: List[Query] = []
+    seen = set()
+    for a4 in (1, 2, 3):
+        for a5 in (1, 2, 3, 4):
+            for a6 in (1, 2, 3, 4, 5):
+                tails = [(a4, 4), (a5, 5), (a6, 6)]
+                for cmask in range(1 << len(closure_pool)):
+                    closures = [e for j, e in enumerate(closure_pool)
+                                if cmask >> j & 1]
+                    edges = core + tails + closures
+                    deg = [0] * 7
+                    for a, b in edges:
+                        deg[a] += 1
+                        deg[b] += 1
+                    if max(deg[1:]) > deg[0]:
+                        continue  # anchor must stay the argmax vertex
+                    q = build_query(edges, labels, q_max=q_max,
+                                    qe_max=qe_max,
+                                    name=f"prefix/t{a4}{a5}{a6}c{cmask:x}")
+                    sig = query_signature(q)
+                    if sig in seen:
+                        continue
+                    seen.add(sig)
+                    out.append(q)
+                    if len(out) >= count:
+                        return out
+    raise ValueError(f"prefix_zoo exhausted at {len(out)} < {count}")
+
+
 def query_zoo(count: int, n_labels: int = 4, q_max: int = 8,
               qe_max: int = 16) -> List[Query]:
     """``count`` standing queries for a serving bank: the paper's four

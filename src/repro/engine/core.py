@@ -45,6 +45,7 @@ from repro.engine.buckets import (QueryBucket, _pow2, bucket_shape,
 from repro.engine.sharding import ShardedSweep, device_split
 from repro.engine.state import EngineState, QueryDelta, StepOutput
 from repro.engine.store import PatternStore, live_vertex_mask
+from repro.obs import Obs
 
 
 class Engine:
@@ -102,6 +103,13 @@ class Engine:
         self.rwr_cols_skipped = 0  # converged-column sweeps retired
         self._last_sweeps = 0
         self._last_cols_skipped = 0
+        # observability hub (DESIGN.md §8): the serving/runtime layers
+        # reuse this engine's hub so one event stream spans all threads
+        self.obs = Obs(ecfg.obs)
+        # last _merge fan-out shape (bank rows folded / alias stores
+        # written) — the host-cost suspect ROADMAP tracks
+        self.last_merge_rows = 0
+        self.last_merge_stores = 0
 
     # -- standing-query registry ----------------------------------------------
 
@@ -133,6 +141,8 @@ class Engine:
             self.stores[qid] = PatternStore()
             self._where[qid] = shape
             self._order.append(qid)
+            self.obs.instant("bank/register_alias", qid=qid,
+                             primary=self._dups[sig][0])
             return qid
         bucket = self.buckets.get(shape)
         if bucket is None:
@@ -144,15 +154,17 @@ class Engine:
             self.buckets[shape] = bucket
         elif bucket.full:
             bucket = self._grow(bucket)
-        while True:
-            try:
-                bucket.register(qid, query)
-                break
-            except DagFull:
-                # sub-pattern capacity outgrown: double it (a rebuild, the
-                # same amortized cost as the B_pad doubling)
-                bucket = self._rebuild(bucket, bucket.b_pad,
-                                       node_cap=2 * bucket.node_cap)
+        with self.obs.span("bank/register", qid=qid,
+                           bucket=f"{shape[0]}x{shape[1]}"):
+            while True:
+                try:
+                    bucket.register(qid, query)
+                    break
+                except DagFull:
+                    # sub-pattern capacity outgrown: double it (a rebuild,
+                    # the same amortized cost as the B_pad doubling)
+                    bucket = self._rebuild(bucket, bucket.b_pad,
+                                           node_cap=2 * bucket.node_cap)
         self._dups.setdefault(sig, []).append(qid)
         self._sig_of[qid] = sig
         self._seed_memo.pop(shape, None)
@@ -172,33 +184,34 @@ class Engine:
         rows; amortized exactly like the doubling)."""
         if qid not in self._where:
             raise KeyError(f"unknown qid {qid!r}; live: {self._order}")
-        shape = self._where.pop(qid)
-        sig = self._sig_of.pop(qid)
-        group = self._dups[sig]
-        del self.stores[qid]
-        self._order.remove(qid)
-        bucket = self.buckets[shape]
-        if qid != group[0]:
-            # alias — the primary keeps the row
-            group.remove(qid)
-            del self._alias_query[qid]
-            return
-        group.pop(0)
-        if group:
-            # primary with aliases: promote the next one onto the row
-            # (bitwise the same tensors, so the device bank — and the
-            # seed memo — stay untouched)
-            promoted = group[0]
-            bucket.rename_row(qid, promoted,
-                              self._alias_query.pop(promoted))
-            return
-        del self._dups[sig]
-        bucket.retire(qid)
-        self._seed_memo.pop(shape, None)
-        if bucket.n_live == 0:
-            del self.buckets[shape]
-        elif bucket.b_pad > 1 and bucket.n_live <= bucket.b_pad // 4:
-            self._rebuild(bucket, bucket.b_pad // 2)
+        with self.obs.span("bank/retire", qid=qid):
+            shape = self._where.pop(qid)
+            sig = self._sig_of.pop(qid)
+            group = self._dups[sig]
+            del self.stores[qid]
+            self._order.remove(qid)
+            bucket = self.buckets[shape]
+            if qid != group[0]:
+                # alias — the primary keeps the row
+                group.remove(qid)
+                del self._alias_query[qid]
+                return
+            group.pop(0)
+            if group:
+                # primary with aliases: promote the next one onto the row
+                # (bitwise the same tensors, so the device bank — and the
+                # seed memo — stay untouched)
+                promoted = group[0]
+                bucket.rename_row(qid, promoted,
+                                  self._alias_query.pop(promoted))
+                return
+            del self._dups[sig]
+            bucket.retire(qid)
+            self._seed_memo.pop(shape, None)
+            if bucket.n_live == 0:
+                del self.buckets[shape]
+            elif bucket.b_pad > 1 and bucket.n_live <= bucket.b_pad // 4:
+                self._rebuild(bucket, bucket.b_pad // 2)
 
     def _rebuild(self, bucket: QueryBucket, b_pad: int,
                  node_cap: Optional[int] = None) -> QueryBucket:
@@ -210,13 +223,15 @@ class Engine:
         ``node_cap`` is forced (the DagFull doubling)."""
         if node_cap is None:
             node_cap = _pow2(bucket.dag.n_nodes, bucket.q_max)
-        fresh = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
-                            b_pad=b_pad, shard=self.ecfg.shard,
-                            g_shards=self.g_shards, q_budget=self.q_budget,
-                            node_cap=node_cap)
-        for slot, qid in bucket.rows():
-            fresh.register(qid, bucket.query(slot))
-        self.buckets[(bucket.q_max, bucket.qe_max)] = fresh
+        with self.obs.span("bank/rebuild", b_pad=b_pad, node_cap=node_cap,
+                           rows=bucket.n_live):
+            fresh = QueryBucket(self.cfg, bucket.q_max, bucket.qe_max,
+                                b_pad=b_pad, shard=self.ecfg.shard,
+                                g_shards=self.g_shards,
+                                q_budget=self.q_budget, node_cap=node_cap)
+            for slot, qid in bucket.rows():
+                fresh.register(qid, bucket.query(slot))
+            self.buckets[(bucket.q_max, bucket.qe_max)] = fresh
         return fresh
 
     def _grow(self, bucket: QueryBucket) -> QueryBucket:
@@ -366,32 +381,50 @@ class Engine:
     def _merge(self, results, remap=None,
                rebuild: bool = False) -> Tuple[QueryDelta, ...]:
         """Fold per-bucket results into the per-query stores (the only
-        per-query host work of a step)."""
+        per-query host work of a step). Traced per bucket and per row —
+        the per-alias store fan-out here is the host cost that grew the
+        bank1024 step while device work stayed flat (ROADMAP), so each
+        row span carries its alias count and the totals land in
+        ``last_merge_rows``/``last_merge_stores``."""
+        obs = self.obs
         by_qid: Dict[str, QueryDelta] = {}
+        n_rows = n_stores = 0
         for shape, res in results.items():
             bucket = self.buckets[shape]
-            matched = np.asarray(res.matched)
-            if remap is not None:
-                matched = remap_matched(
-                    matched.reshape(-1, matched.shape[-1]),
-                    remap).reshape(matched.shape)
-            goodness = np.asarray(res.goodness)
-            exact = np.asarray(res.exact)
-            valid = np.asarray(res.valid)
-            for slot, qid in bucket.rows():
-                # one device row serves its whole duplicate group: the
-                # primary (owning the row) plus every alias store
-                for alias in self._dups.get(self._sig_of[qid], [qid]):
-                    store = self.stores[alias]
-                    if rebuild:
-                        store._patterns.clear()
-                    new = store.merge_arrays(matched[slot], goodness[slot],
-                                             exact[slot], valid[slot],
-                                             bucket.row_mask(slot))
-                    name = (bucket.query(slot).name if alias == qid
-                            else self._alias_query[alias].name)
-                    by_qid[alias] = QueryDelta(alias, name, new,
-                                               store.total, store.exact)
+            with obs.span("engine/merge/bucket",
+                          bucket=f"{shape[0]}x{shape[1]}",
+                          rows=bucket.n_live):
+                matched = np.asarray(res.matched)
+                if remap is not None:
+                    matched = remap_matched(
+                        matched.reshape(-1, matched.shape[-1]),
+                        remap).reshape(matched.shape)
+                goodness = np.asarray(res.goodness)
+                exact = np.asarray(res.exact)
+                valid = np.asarray(res.valid)
+                for slot, qid in bucket.rows():
+                    # one device row serves its whole duplicate group: the
+                    # primary (owning the row) plus every alias store
+                    group = self._dups.get(self._sig_of[qid], [qid])
+                    n_rows += 1
+                    n_stores += len(group)
+                    with obs.span("engine/merge/row", qid=qid,
+                                  aliases=len(group)):
+                        for alias in group:
+                            store = self.stores[alias]
+                            if rebuild:
+                                store._patterns.clear()
+                            new = store.merge_arrays(
+                                matched[slot], goodness[slot],
+                                exact[slot], valid[slot],
+                                bucket.row_mask(slot))
+                            name = (bucket.query(slot).name if alias == qid
+                                    else self._alias_query[alias].name)
+                            by_qid[alias] = QueryDelta(alias, name, new,
+                                                       store.total,
+                                                       store.exact)
+        self.last_merge_rows = n_rows
+        self.last_merge_stores = n_stores
         return tuple(by_qid[q] for q in self._order if q in by_qid)
 
     # -- whole-engine checkpointing (DESIGN.md §4) ------------------------------
@@ -481,31 +514,69 @@ def engine_step(eng: Engine, state: EngineState,
                 upd: UpdateBatch) -> Tuple[EngineState, StepOutput]:
     """THE shared step pipeline (module docstring). Pure in the functional-
     core sense: evolving data is read from ``state`` and returned in the
-    new state; Engine-held host caches are rebuilt-on-demand views."""
+    new state; Engine-held host caches are rebuilt-on-demand views.
+
+    With tracing off this delegates straight to the pipeline — no span
+    objects, no stage dict, no extra device fences (the no-op path the
+    bitwise/trace-count tests pin). With tracing on, the step runs inside
+    a step-scoped trace context (every span carries ``step``), the flight
+    recorder captures the step's span group, and per-stage wall times
+    come back in ``StepOutput.stage_s``."""
+    obs = eng.obs
+    if not obs.enabled:
+        return _engine_step(eng, state, upd, obs, None)
+    step_idx = int(state.step_idx)
+    with obs.profile_step(step_idx), obs.context(step=step_idx):
+        obs.begin_step(step_idx)
+        try:
+            return _engine_step(eng, state, upd, obs, {})
+        finally:
+            obs.end_step(step_idx)
+
+
+def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
+                 obs: Obs, stage: Optional[Dict[str, float]]
+                 ) -> Tuple[EngineState, StepOutput]:
+    """Pipeline body. ``stage`` is None when tracing is disabled (all
+    span calls then hit the shared no-op span); when tracing, it
+    accumulates per-stage seconds for ``StepOutput.stage_s``. Stage
+    taxonomy (DESIGN.md §8): apply → prune → pem → [storm: rwr → seeds →
+    gray | induced: extract → rwr → gray] → device_wait → merge →
+    feedback. Extra ``block_until_ready`` fences that split host
+    dispatch from device wait run ONLY under ``obs.enabled``."""
     cfg, ecfg = eng.cfg, eng.ecfg
-    g, refresh_s = eng._apply(state.graph, upd)
-    n_events = _n_events(upd)
-    rlab_events = state.rlab_events + n_events
-    rlab_version = state.rlab_version
-    upd_ids = None
-    if ecfg.mode != "batch":
-        ids, mask = updated_vertices(g, upd, ecfg.v_max)
-        upd_ids = np.asarray(jnp.where(mask, ids, -1))
-    jax.block_until_ready(g)
+    tracing = stage is not None
+    with obs.span("engine/apply") as sp:
+        g, refresh_s = eng._apply(state.graph, upd)
+        n_events = _n_events(upd)
+        rlab_events = state.rlab_events + n_events
+        rlab_version = state.rlab_version
+        upd_ids = None
+        if ecfg.mode != "batch":
+            ids, mask = updated_vertices(g, upd, ecfg.v_max)
+            upd_ids = np.asarray(jnp.where(mask, ids, -1))
+        jax.block_until_ready(g)
+    if tracing:
+        stage["apply"] = sp.dur_s
+        stage["ell_refresh"] = refresh_s
 
     # -- store pruning (deletion-heavy streams; DESIGN.md §3) -----------------
     n_pruned = 0
     if (ecfg.mode != "batch"
             and any(s.total for s in eng.stores.values())
             and bool(np.asarray(upd.rem_mask).any())):
-        live = live_vertex_mask(g)
-        n_pruned = sum(s.prune(live) for s in eng.stores.values())
+        with obs.span("engine/prune") as sp:
+            live = live_vertex_mask(g)
+            n_pruned = sum(s.prune(live) for s in eng.stores.values())
+        if tracing:
+            stage["prune"] = sp.dur_s
 
     t0 = time.perf_counter()
     n_live = max(int(np.asarray(g.node_mask).sum()), 1)
     rlab_hit = seed_hit = False
     community = 0
     rl_loss = 0.0
+    t_seeds = t_gray = t_gwait = 0.0
 
     eng._last_sweeps = 0
     eng._last_cols_skipped = 0
@@ -515,19 +586,44 @@ def engine_step(eng: Engine, state: EngineState,
         n_rec = n_live
         storm = True
         ell = eng._full_ell
-        r_lab = eng._label_table(g, ell=ell, sharded=True)
-        results = {shape: bucket.match(g, r_lab, ell=ell,
-                                       graph_sharded=True)
-                   for shape, bucket in eng.buckets.items()}
-        jax.block_until_ready(list(results.values()))
+        with obs.span("engine/rwr", mode="batch") as sp:
+            r_lab = eng._label_table(g, ell=ell, sharded=True)
+            if tracing:
+                jax.block_until_ready(r_lab)
+        if tracing:
+            stage["rwr"] = sp.dur_s
+        results = {}
+        for shape, bucket in eng.buckets.items():
+            bkey = f"{shape[0]}x{shape[1]}"
+            with obs.span("engine/gray", bucket=bkey) as sp:
+                results[shape] = bucket.match(g, r_lab, ell=ell,
+                                              graph_sharded=True)
+            t_gray += sp.dur_s
+            if tracing:
+                with obs.span("engine/gray_wait", bucket=bkey) as spw:
+                    jax.block_until_ready(results[shape])
+                t_gwait += spw.dur_s
+        with obs.span("engine/device_wait") as sp:
+            jax.block_until_ready(list(results.values()))
         elapsed = time.perf_counter() - t0
-        deltas = eng._merge(results, rebuild=True)
+        if tracing:
+            stage["gray"] = t_gray
+            stage["device_wait"] = t_gwait + sp.dur_s
+        with obs.span("engine/merge") as sp:
+            deltas = eng._merge(results, rebuild=True)
+        if tracing:
+            stage["merge"] = sp.dur_s
+            obs.instant("engine/merge/fanout", rows=eng.last_merge_rows,
+                        stores=eng.last_merge_stores)
         sub_n = sub_e = 0
         r_lab = None  # batch mode keeps no warm-start state
         rlab_events = 0
     else:
-        rec_mask, frac = eng.pem.recompute_mask(g, upd_ids)
-        n_rec = int(rec_mask.sum())
+        with obs.span("engine/pem") as sp:
+            rec_mask, frac = eng.pem.recompute_mask(g, upd_ids)
+            n_rec = int(rec_mask.sum())
+        if tracing:
+            stage["pem"] = sp.dur_s
         storm = n_rec > ecfg.full_graph_frac * n_live
 
         if storm:
@@ -540,14 +636,24 @@ def engine_step(eng: Engine, state: EngineState,
                 r_lab = state.r_lab
                 rlab_hit = True
                 eng.rlab_hits += 1
+                if tracing:
+                    stage["rwr"] = 0.0
+                    obs.instant("engine/rwr_cache_hit")
             else:
                 # warm starts under the residual-adaptive loop keep the
                 # full hard cap — convergence is measured, not assumed
-                r_lab = eng._label_table(
-                    g, r0=state.r_lab,
-                    iters=(None if (state.r_lab is None or cfg.rwr_tol > 0)
-                           else cfg.rwr_iters_incremental),
-                    ell=ell, sharded=True)
+                with obs.span("engine/rwr", mode="storm",
+                              warm=state.r_lab is not None) as sp:
+                    r_lab = eng._label_table(
+                        g, r0=state.r_lab,
+                        iters=(None if (state.r_lab is None
+                                        or cfg.rwr_tol > 0)
+                               else cfg.rwr_iters_incremental),
+                        ell=ell, sharded=True)
+                    if tracing:
+                        jax.block_until_ready(r_lab)
+                if tracing:
+                    stage["rwr"] = sp.dur_s
                 rlab_events = 0
                 rlab_version += 1
                 eng.rlab_misses += 1
@@ -556,6 +662,7 @@ def engine_step(eng: Engine, state: EngineState,
             results = {}
             bucket_hits = []
             for shape, bucket in eng.buckets.items():
+                bkey = f"{shape[0]}x{shape[1]}"
                 ver_key = (rlab_version, bucket.version)
                 hit = eng._seed_memo.get(shape)
                 # bounded-divergence reuse: same table/bank versions and a
@@ -572,32 +679,84 @@ def engine_step(eng: Engine, state: EngineState,
                     else:
                         eng.seed_hits_bounded += 1
                 else:
-                    seeds = bucket.seeds(g, r_lab, sf)
+                    with obs.span("engine/seeds", bucket=bkey) as sp:
+                        seeds = bucket.seeds(g, r_lab, sf)
+                        if tracing:
+                            jax.block_until_ready(seeds)
+                    t_seeds += sp.dur_s
                     eng._seed_memo[shape] = (ver_key, mask_arr, seeds)
                     bucket_hits.append(False)
                     eng.seed_misses += 1
-                results[shape] = bucket.match(g, r_lab, seed_filter=sf,
-                                              ell=ell, seeds=seeds,
-                                              graph_sharded=True)
+                with obs.span("engine/gray", bucket=bkey) as sp:
+                    results[shape] = bucket.match(g, r_lab, seed_filter=sf,
+                                                  ell=ell, seeds=seeds,
+                                                  graph_sharded=True)
+                t_gray += sp.dur_s
+                if tracing:
+                    with obs.span("engine/gray_wait", bucket=bkey) as spw:
+                        jax.block_until_ready(results[shape])
+                    t_gwait += spw.dur_s
             seed_hit = bool(bucket_hits) and all(bucket_hits)
-            jax.block_until_ready(list(results.values()))
+            with obs.span("engine/device_wait") as sp:
+                jax.block_until_ready(list(results.values()))
             elapsed = time.perf_counter() - t0
-            deltas = eng._merge(results)
+            if tracing:
+                stage["seeds"] = t_seeds
+                stage["gray"] = t_gray
+                stage["device_wait"] = t_gwait + sp.dur_s
+            with obs.span("engine/merge") as sp:
+                deltas = eng._merge(results)
+            if tracing:
+                stage["merge"] = sp.dur_s
+                obs.instant("engine/merge/fanout",
+                            rows=eng.last_merge_rows,
+                            stores=eng.last_merge_stores)
             sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
         else:
-            sub = extract_induced(
-                g, rec_mask,
-                ell_k=cfg.ell_width if eng.ell_cache is not None else None)
-            r_sub = eng._label_table(sub.graph, ell=sub.ell)
-            results = {shape: bucket.match(sub.graph, r_sub, ell=sub.ell)
-                       for shape, bucket in eng.buckets.items()}
-            jax.block_until_ready(list(results.values()))
+            with obs.span("engine/extract") as sp:
+                sub = extract_induced(
+                    g, rec_mask,
+                    ell_k=(cfg.ell_width if eng.ell_cache is not None
+                           else None))
+            if tracing:
+                stage["extract"] = sp.dur_s
+            with obs.span("engine/rwr", mode="induced") as sp:
+                r_sub = eng._label_table(sub.graph, ell=sub.ell)
+                if tracing:
+                    jax.block_until_ready(r_sub)
+            if tracing:
+                stage["rwr"] = sp.dur_s
+            results = {}
+            for shape, bucket in eng.buckets.items():
+                bkey = f"{shape[0]}x{shape[1]}"
+                with obs.span("engine/gray", bucket=bkey) as sp:
+                    results[shape] = bucket.match(sub.graph, r_sub,
+                                                  ell=sub.ell)
+                t_gray += sp.dur_s
+                if tracing:
+                    with obs.span("engine/gray_wait", bucket=bkey) as spw:
+                        jax.block_until_ready(results[shape])
+                    t_gwait += spw.dur_s
+            with obs.span("engine/device_wait") as sp:
+                jax.block_until_ready(list(results.values()))
             elapsed = time.perf_counter() - t0
-            deltas = eng._merge(results, remap=sub.local_to_global)
+            if tracing:
+                stage["gray"] = t_gray
+                stage["device_wait"] = t_gwait + sp.dur_s
+            with obs.span("engine/merge") as sp:
+                deltas = eng._merge(results, remap=sub.local_to_global)
+            if tracing:
+                stage["merge"] = sp.dur_s
+                obs.instant("engine/merge/fanout",
+                            rows=eng.last_merge_rows,
+                            stores=eng.last_merge_stores)
             sub_n, sub_e = sub.n_nodes, sub.n_edges
             r_lab = state.r_lab  # full-graph warm start unchanged
 
-        community, rl_loss = eng.pem.feedback(g, frac, elapsed)
+        with obs.span("engine/pem_feedback") as sp:
+            community, rl_loss = eng.pem.feedback(g, frac, elapsed)
+        if tracing:
+            stage["feedback"] = sp.dur_s
 
     new_state = state.evolve(graph=g, r_lab=r_lab, rlab_events=rlab_events,
                              rlab_version=rlab_version,
@@ -609,5 +768,6 @@ def engine_step(eng: Engine, state: EngineState,
         ell_refresh_s=refresh_s, n_pruned=n_pruned, n_events=n_events,
         rlab_cache_hit=rlab_hit, seed_cache_hit=seed_hit,
         rwr_sweeps=eng._last_sweeps,
-        rwr_cols_skipped=eng._last_cols_skipped, deltas=deltas)
+        rwr_cols_skipped=eng._last_cols_skipped, deltas=deltas,
+        stage_s=stage)
     return new_state, out

@@ -12,7 +12,7 @@ rebuilt on demand, so dropping them never changes results (DESIGN.md §4).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -72,6 +72,11 @@ class StepOutput(NamedTuple):
     rwr_sweeps: int = 0       # label-RWR sweeps run (measured if adaptive)
     rwr_cols_skipped: int = 0  # converged-column sweeps retired (adaptive)
     deltas: Tuple[QueryDelta, ...] = ()
+    # per-stage wall seconds (DESIGN.md §8) — None unless tracing is on;
+    # keys: apply/ell_refresh/prune/pem/extract/rwr/seeds/gray/
+    # device_wait/merge/feedback. The serving layer feeds these into
+    # ``stage_*`` telemetry channels.
+    stage_s: Optional[Dict[str, float]] = None
 
     @property
     def n_new_patterns(self) -> int:

@@ -93,8 +93,43 @@ def _occupancy_str(server) -> str:
                     in sorted(server.occupancy().items()))
 
 
+def _obs_config(args):
+    """``--trace``/``--trace-out``/``--flight-n``/``--slo-ms`` →
+    :class:`ObsConfig` (DESIGN.md §8). Tracing stays off unless asked."""
+    from repro.config.base import ObsConfig
+
+    if not (args.trace or args.trace_out):
+        return ObsConfig()
+    out = args.trace_out or "benchmarks/out/traces/serve"
+    return ObsConfig(enabled=True, trace_path=out,
+                     flight_n=args.flight_n, flight_path=out + ".flight",
+                     slo_e2e_ms=args.slo_ms,
+                     prometheus_path=out + ".prom")
+
+
+def _report_obs(server) -> None:
+    """Export the configured trace artifacts and print the per-stage
+    breakdown the spans bought us."""
+    obs = server.obs
+    if not obs.enabled:
+        return
+    snap = server.telemetry.snapshot()
+    stages = sorted((k[len("p50_stage_"):-len("_ms")], snap[k])
+                    for k in snap if k.startswith("p50_stage_"))
+    if stages:
+        print("[serve] stage p50 ms: "
+              + " ".join(f"{name}={ms:.2f}" for name, ms in stages))
+    paths = obs.export(snap)
+    for kind, path in sorted(paths.items()):
+        print(f"[serve] {kind}: {path}")
+    if obs.flight is not None and obs.flight.n_dumps:
+        print(f"[serve] flight dumps: {obs.flight.n_dumps} "
+              f"(last: {obs.flight.last_path} — {obs.flight.last_reason})")
+
+
 def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
-               policy_dir: str = "", register=(), retire=()) -> None:
+               policy_dir: str = "", register=(), retire=(),
+               obs=None) -> None:
     """Continuous multi-query match serving on a synthetic churn stream.
 
     One MatchServer serves a ``bank``-sized standing-query zoo against a
@@ -111,7 +146,7 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
     ``--policy-dir`` persists/restores the learned PEM policy across
     invocations (DESIGN.md §3/§4).
     """
-    from repro.config.base import ServingConfig
+    from repro.config.base import ObsConfig, ServingConfig
     from repro.core.query import clique4, query_zoo, square, star5, triangle
     from repro.data.temporal import TemporalGraphSpec, generate_stream
     from repro.serving import MatchServer
@@ -127,7 +162,8 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
                              churn=churn, hotspot=hotspot)
     stream = generate_stream(spec, n_measured_steps=steps, u_max=512,
                              n_max=cfg.n_max, e_max=cfg.e_max)
-    server = MatchServer(cfg, query_zoo(bank), ServingConfig(), seed=0)
+    server = MatchServer(cfg, query_zoo(bank),
+                         ServingConfig(obs=obs or ObsConfig()), seed=0)
     print(f"[serve] buckets: {_occupancy_str(server)}")
     if policy_dir:
         try:
@@ -169,6 +205,7 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
           f"pat/s recompute={snap['recompute_frac']:.2f}")
     print(f"[serve] buckets: {_occupancy_str(server)}")
     print(f"[serve] queue: {server.queue.stats()}")
+    _report_obs(server)
     if policy_dir:
         server.save_policy(policy_dir)
         print(f"[serve] saved PEM policy to {policy_dir}")
@@ -176,7 +213,7 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
 
 def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
                      bank: int, sync_too: bool = False,
-                     checkpoint_dir: str = "") -> None:
+                     checkpoint_dir: str = "", obs=None) -> None:
     """Async serving runtime on a seeded workload scenario (DESIGN.md §6):
     a dedicated ingress thread replays the arrival process against the
     wall clock while the device-executor thread runs double-buffered
@@ -187,7 +224,7 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
     replays the identical workload
     through the single-threaded reference driver first, so the two
     tail-latency snapshots print side by side."""
-    from repro.config.base import RuntimeConfig, ServingConfig
+    from repro.config.base import ObsConfig, RuntimeConfig, ServingConfig
     from repro.core.query import query_zoo
     from repro.runtime import (SCENARIOS, ServingRuntime, VirtualClock,
                                WallClock, build_workload, run_workload_sync)
@@ -205,7 +242,8 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
     import dataclasses
     cfg = dataclasses.replace(arch.model, n_max=wl.graph.n_max,
                               e_max=wl.graph.e_max)
-    serving = ServingConfig(microbatch_window=256, queue_depth=2048)
+    serving = ServingConfig(microbatch_window=256, queue_depth=2048,
+                            obs=obs or ObsConfig())
 
     def _report(tag: str, server: MatchServer) -> None:
         snap = server.telemetry.snapshot()
@@ -241,6 +279,7 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
           + (f"; drained checkpoint -> {checkpoint_dir}"
              if checkpoint_dir else ""))
     print(f"[serve] queue: {server.queue.stats()}")
+    _report_obs(server)
 
 
 def main() -> None:
@@ -281,6 +320,20 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default="",
                     help="igpm --async: drain checkpoints the whole "
                          "engine here via Engine.save")
+    ap.add_argument("--trace", action="store_true",
+                    help="igpm: structured tracing (DESIGN.md §8) — "
+                         "exports a Perfetto-loadable trace + Prometheus "
+                         "snapshot and prints the per-stage breakdown")
+    ap.add_argument("--trace-out", default="",
+                    metavar="PREFIX",
+                    help="igpm: trace export prefix (implies --trace; "
+                         "default benchmarks/out/traces/serve)")
+    ap.add_argument("--flight-n", type=int, default=16,
+                    help="igpm --trace: flight-recorder ring of the last "
+                         "N traced steps (dumped on crash/SLO trigger)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="igpm --trace: dump the flight ring when an e2e "
+                         "latency sample exceeds this many ms (0 = off)")
     args = ap.parse_args()
     arch = get_arch(args.arch, smoke=True)
     if arch.family == "lm":
@@ -288,14 +341,16 @@ def main() -> None:
     elif arch.family == "recsys":
         serve_bst(arch)
     elif arch.family == "igpm":
+        obs = _obs_config(args)
         if args.use_async:
             serve_igpm_async(arch, args.scenario, args.rate, args.ticks,
                              args.bank, sync_too=args.sync_too,
-                             checkpoint_dir=args.checkpoint_dir)
+                             checkpoint_dir=args.checkpoint_dir, obs=obs)
         else:
             serve_igpm(arch, args.steps, args.bank, args.churn,
                        args.hotspot, policy_dir=args.policy_dir,
-                       register=args.register, retire=args.retire)
+                       register=args.register, retire=args.retire,
+                       obs=obs)
     else:
         raise SystemExit(f"{args.arch} ({arch.family}) has no serve path")
 

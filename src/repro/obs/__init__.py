@@ -1,0 +1,18 @@
+"""Observability layer: structured tracing, flight recorder, exporters.
+
+See DESIGN.md §8. The one entry point the rest of the codebase touches
+is :class:`Obs` — an engine builds one from ``EngineConfig.obs`` and the
+serving/runtime layers share it, so a single event stream covers
+ingress → handoff → engine stages → merge → subscription fan-out.
+"""
+
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, NullTracer, Obs, Tracer
+from repro.obs.flight import FlightRecorder
+from repro.obs.export import (read_jsonl, validate_events, validate_jsonl,
+                              write_chrome, write_jsonl, write_prometheus)
+
+__all__ = [
+    "Obs", "Tracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
+    "FlightRecorder", "read_jsonl", "validate_events", "validate_jsonl",
+    "write_chrome", "write_jsonl", "write_prometheus",
+]

@@ -1,0 +1,134 @@
+"""Trace/metric exporters (DESIGN.md §8).
+
+Three formats, all plain text so post-mortems need no tooling:
+
+- **JSONL span stream** — one Chrome ``trace_event`` object per line.
+  Line-oriented so a crash mid-write loses one event, not the file.
+- **Chrome trace document** — the same events wrapped as
+  ``{"traceEvents": [...]}``; chrome://tracing and Perfetto open it
+  directly (they do not read bare JSONL).
+- **Prometheus text format** — one ``# TYPE`` + sample line per numeric
+  telemetry-snapshot key, for scrape-style collection.
+
+``validate_events``/``validate_jsonl`` check the span schema the tracer
+promises (``make trace-smoke`` gates on it): required fields present,
+phase is a known ``trace_event`` type, complete spans carry a
+non-negative microsecond duration, args is an object.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+from typing import Any, Dict, Iterable, List
+
+# fields every exported event must carry (Chrome trace_event format)
+REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
+# phases the tracer emits: X = complete span, i = instant, M = metadata
+KNOWN_PHASES = ("X", "i", "M")
+
+_METRIC_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _ensure_dir(path: str) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    if d:
+        os.makedirs(d, exist_ok=True)
+
+
+def write_jsonl(events: Iterable[Dict[str, Any]], path: str) -> str:
+    """Write events as one-JSON-object-per-line; returns the path."""
+    _ensure_dir(path)
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev, sort_keys=True))
+            f.write("\n")
+    return path
+
+
+def write_chrome(events: Iterable[Dict[str, Any]], path: str) -> str:
+    """Write the Perfetto/chrome://tracing-loadable twin document."""
+    _ensure_dir(path)
+    doc = {"traceEvents": list(events), "displayTimeUnit": "ms"}
+    with open(path, "w") as f:
+        json.dump(doc, f, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def validate_events(events: Iterable[Dict[str, Any]]) -> List[str]:
+    """Schema-check a span stream; returns a list of violations
+    (empty = valid). Checked per event: required trace_event fields, a
+    known phase, numeric non-negative ``ts`` (and ``dur`` for complete
+    spans), and dict-typed ``args``."""
+    errors: List[str] = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        missing = [k for k in REQUIRED_FIELDS if k not in ev]
+        if missing:
+            errors.append(f"event {i}: missing fields {missing}")
+            continue
+        if ev["ph"] not in KNOWN_PHASES:
+            errors.append(f"event {i}: unknown phase {ev['ph']!r}")
+        if not isinstance(ev["name"], str) or not ev["name"]:
+            errors.append(f"event {i}: bad name {ev.get('name')!r}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            errors.append(f"event {i}: bad ts {ev.get('ts')!r}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event {i}: complete span with bad dur "
+                              f"{dur!r}")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errors.append(f"event {i}: args is not an object")
+    return errors
+
+
+def validate_jsonl(path: str) -> List[str]:
+    """Validate a JSONL trace file; returns violations (empty = valid)."""
+    try:
+        events = read_jsonl(path)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    if not events:
+        return ["no events"]
+    return validate_events(events)
+
+
+def write_prometheus(snapshot: Dict[str, Any], path: str,
+                     prefix: str = "repro") -> str:
+    """Render a telemetry snapshot as Prometheus text format (gauges).
+
+    Non-numeric and non-finite values are skipped; key characters
+    outside ``[a-zA-Z0-9_:]`` are folded to ``_``.
+    """
+    _ensure_dir(path)
+    lines = []
+    for key in sorted(snapshot):
+        val = snapshot[key]
+        if isinstance(val, bool) or not isinstance(val, (int, float)):
+            continue
+        if isinstance(val, float) and not math.isfinite(val):
+            continue
+        name = _METRIC_NAME_RE.sub("_", f"{prefix}_{key}")
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name} {float(val):.9g}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+        if lines:
+            f.write("\n")
+    return path

@@ -49,6 +49,7 @@ from typing import Deque, List, NamedTuple, Optional, Tuple
 
 from repro.config.base import RuntimeConfig
 from repro.core.graph import DynamicGraph, UpdateBatch
+from repro.obs import Obs
 from repro.runtime.clock import Clock, VirtualClock, WallClock
 from repro.runtime.scenarios import Workload
 from repro.serving.queue import UpdateQueue
@@ -63,6 +64,9 @@ class PackedBatch(NamedTuple):
     arrivals: Tuple[float, ...]  # nominal arrival stamps of packed events
     t_packed: float
     assembly_s: float
+    # monotone per-ingress id — the key that lets a trace follow one
+    # batch offer → assemble → handoff → step → delta across threads
+    batch_id: int = -1
 
 
 class _Handoff:
@@ -158,6 +162,7 @@ class _StampedIngress:
     def __init__(self, queue: UpdateQueue):
         self.queue = queue
         self._stamps: Deque[float] = deque()
+        self._next_batch = 0  # deterministic: counts assembled batches
 
     def offer(self, ev, t_arrival: float) -> bool:
         before = len(self.queue)
@@ -186,8 +191,10 @@ class _StampedIngress:
         stamps = tuple(self._stamps.popleft() if self._stamps else t_packed
                        for _ in events)
         upd = UpdateQueue.pack(events, u_max)
+        batch_id = self._next_batch
+        self._next_batch += 1
         return PackedBatch(upd, len(events), stamps, t_packed,
-                           time.perf_counter() - t0)
+                           time.perf_counter() - t0, batch_id)
 
     def __len__(self) -> int:
         return len(self.queue)
@@ -220,6 +227,11 @@ class ServingRuntime:
         self.rcfg = rcfg or RuntimeConfig()
         self.clock = clock or WallClock()
         self.telemetry = server.telemetry
+        if self.rcfg.obs is not None:
+            # runtime-level override: rebuild the shared hub so engine,
+            # ingress, and executor spans land in ONE event stream
+            server.engine.obs = Obs(self.rcfg.obs)
+        self.obs = server.obs
         self.stats: List[ServingStepStats] = []
         self._ingress = _StampedIngress(server.queue)
         self._handoff = _Handoff(self.rcfg.handoff_depth)
@@ -309,18 +321,33 @@ class ServingRuntime:
             self._stop_now.set()
             self._stop_ingest.set()
             self._handoff.close()
+            try:
+                # post-mortem: dump the flight ring before anything else
+                # tears down (no-op unless tracing + flight configured)
+                self.obs.flight_dump(
+                    reason=f"crash:{type(e).__name__}: {e}", triggered=True)
+            except Exception:
+                pass  # never let the post-mortem mask the real crash
 
     def _flush(self, block: bool) -> None:
         """Assemble pending events into packed batches while the handoff
         (and lockstep policy) allows."""
+        obs = self.obs
         window = self.server.serving.microbatch_window
         while len(self._ingress) > 0 and not self._stop_now.is_set():
-            if not self._handoff.wait_space(block, self._stop_now):
+            # handoff occupancy: in lockstep this span IS the time the
+            # ingress spent blocked on a busy executor
+            with obs.span("ingress/handoff_wait", staged=len(self._handoff)):
+                ok = self._handoff.wait_space(block, self._stop_now)
+            if not ok:
                 return
-            item = self._ingress.assemble(window, self.server.u_max,
-                                          self.clock.now())
+            with obs.span("ingress/assemble", pending=len(self._ingress)):
+                item = self._ingress.assemble(window, self.server.u_max,
+                                              self.clock.now())
             if item is None:
                 return
+            obs.instant("ingress/packed", batch=item.batch_id,
+                        n_events=item.n_events)
             self._handoff.push(item)
 
     def _ingress_main(self, workload: Workload) -> None:
@@ -331,11 +358,12 @@ class ServingRuntime:
             self.clock.wait_until(tick.t, self._stop_ingest)
             if self._stop_ingest.is_set():
                 break
-            for ev in tick.events:
-                # nominal arrival stamp: open-loop arrivals, so a late
-                # ingress can't hide queueing delay (no coordinated
-                # omission)
-                self._ingress.offer(ev, tick.t)
+            with self.obs.span("ingress/offer", n_events=len(tick.events)):
+                for ev in tick.events:
+                    # nominal arrival stamp: open-loop arrivals, so a late
+                    # ingress can't hide queueing delay (no coordinated
+                    # omission)
+                    self._ingress.offer(ev, tick.t)
             self._flush(block=lockstep)
         # graceful drain: everything still pending goes through, with
         # blocking pushes (the executor is consuming; stop(drain=False)
@@ -346,6 +374,7 @@ class ServingRuntime:
 
     def _executor_main(self) -> None:
         srv = self.server
+        obs = self.obs
         g = self._graph
         every = self.rcfg.checkpoint_every
         while not self._stop_now.is_set():
@@ -354,14 +383,21 @@ class ServingRuntime:
                 if self._handoff.closed and len(self._handoff) == 0:
                     break
                 continue
-            g, st = srv.step_packed(g, item.upd, item.n_events)
-            self._graph = g
-            _record_batch_latencies(self.telemetry, item, self.clock.now())
-            self.stats.append(st)
-            for sub in self._subs:
-                for d in st.deltas:
-                    if sub.query is None or sub.query == d.query:
-                        sub._put(st.step, d)
+            with obs.context(batch=item.batch_id):
+                with obs.span("executor/step", n_events=item.n_events):
+                    g, st = srv.step_packed(g, item.upd, item.n_events)
+                self._graph = g
+                t_done = self.clock.now()
+                _record_batch_latencies(self.telemetry, item, t_done)
+                if obs.enabled and item.arrivals:
+                    obs.observe_e2e(1e3 * (t_done - min(item.arrivals)))
+                with obs.span("executor/fanout", n_deltas=len(st.deltas),
+                              n_subs=len(self._subs)):
+                    self.stats.append(st)
+                    for sub in self._subs:
+                        for d in st.deltas:
+                            if sub.query is None or sub.query == d.query:
+                                sub._put(st.step, d)
             if every > 0 and self.rcfg.checkpoint_dir \
                     and len(self.stats) % every == 0:
                 srv.save(self.rcfg.checkpoint_dir)

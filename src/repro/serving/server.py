@@ -84,7 +84,9 @@ class MatchServer:
         self.queue = UpdateQueue(depth=serving.queue_depth,
                                  policy=serving.drop_policy,
                                  coalesce=serving.coalesce)
-        self.telemetry = Telemetry(serving.telemetry_window)
+        self.telemetry = Telemetry(
+            serving.telemetry_window,
+            channel_windows=dict(serving.telemetry_channel_windows))
         # every event lane is padded independently; undirected edges emit
         # two arcs, so a full window of one kind bounds the batch width
         self.u_max = 2 * serving.microbatch_window
@@ -92,6 +94,12 @@ class MatchServer:
         self._drops_seen = 0
         self._evicted_seen = 0
         self._rejected_seen = 0
+
+    @property
+    def obs(self):
+        """The engine's observability hub (DESIGN.md §8) — the async
+        runtime and CLI share it so one trace spans every thread."""
+        return self.engine.obs
 
     # engine-owned pieces the historical API exposed -------------------------
 
@@ -115,7 +123,9 @@ class MatchServer:
         """Clear accumulated serving state but KEEP jit caches — benchmark
         warm/measure passes replay identical streams on one instance."""
         self.engine.reset()
-        self.telemetry = Telemetry(self.serving.telemetry_window)
+        self.telemetry = Telemetry(
+            self.serving.telemetry_window,
+            channel_windows=dict(self.serving.telemetry_channel_windows))
         self.queue = UpdateQueue(depth=self.serving.queue_depth,
                                  policy=self.serving.drop_policy,
                                  coalesce=self.serving.coalesce)
@@ -204,6 +214,11 @@ class MatchServer:
                                    n_dropped=dropped, n_evicted=evicted,
                                    n_rejected=rejected)
         self.telemetry.record_counters(self.engine.counters())
+        if out.stage_s:
+            # tracing on: stage wall times become telemetry channels, so
+            # snapshot()/BENCH_SUMMARY grow p50/p99 per pipeline stage
+            for name, dur_s in out.stage_s.items():
+                self.telemetry.record_latency(f"stage_{name}", dur_s)
         return self._state.graph, st
 
     def run(self, g: DynamicGraph,

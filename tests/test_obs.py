@@ -1,0 +1,386 @@
+"""Observability tests (DESIGN.md §8).
+
+Pins the acceptance contract of the tracing/flight/export stack:
+  * zero-cost disabled — with ``ObsConfig()`` (the default) the engine
+    emits NO spans, takes no extra device fences, compiles exactly as
+    many traces, and produces BITWISE the results of a build that never
+    heard of tracing;
+  * traced ≡ untraced — enabling tracing changes what is *recorded*,
+    never what is computed: stores and deltas stay bitwise identical;
+  * telemetry credibility — percentile keys are omitted (and strict
+    queries return NaN) until a channel holds ``1/(1-q/100)`` samples;
+    ring wraparound keeps percentiles over the last ``window`` only;
+  * counter hygiene — free-form counters may not shadow snapshot
+    built-ins or percentile-shaped keys (the old silent clobber);
+  * flight recorder — bounded ring of the last N traced steps; dumps
+    are schema-valid JSONL; triggered (SLO/crash) dumps de-duplicate;
+  * cross-thread traces — in the lockstep async runtime one stream sees
+    ingress spans and engine spans on different tids, with engine spans
+    carrying BOTH the step id and the ingress-stamped batch id;
+  * exporters — JSONL round-trips; the Chrome twin wraps the same
+    events; Prometheus text skips non-numeric keys.
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.config.base import (IGPMConfig, ObsConfig, RuntimeConfig,
+                               ServingConfig)
+from repro.core.query import (decompose, prefix_zoo, query_signature,
+                              query_zoo)
+from repro.obs import (NULL_SPAN, NULL_TRACER, FlightRecorder, Obs,
+                       read_jsonl, validate_events, validate_jsonl,
+                       write_chrome, write_jsonl, write_prometheus)
+from repro.serving import MatchServer
+from repro.serving.telemetry import (Telemetry, _Ring, percentile_min_count)
+
+
+def _cfg(**kw):
+    base = dict(n_max=128, e_max=8192, ell_width=8, rwr_iters=6,
+                rwr_iters_incremental=2, top_k_patterns=4,
+                init_community_size=32)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _server(obs=None, bank=2, **serving_kw):
+    serving_kw.setdefault("microbatch_window", 64)
+    serving = ServingConfig(obs=obs or ObsConfig(), **serving_kw)
+    return MatchServer(_cfg(), query_zoo(bank), serving, seed=0)
+
+
+def _stream(n_steps=4, seed=5):
+    from repro.data.temporal import TemporalGraphSpec, generate_stream
+    spec = TemporalGraphSpec("obs", "sparse_dense", n_vertices=128,
+                             n_edges=512, n_steps=16, seed=seed, churn=0.25)
+    return generate_stream(spec, n_measured_steps=n_steps, u_max=128)
+
+
+def _run(server, stream):
+    g = stream.graph
+    outs = []
+    for upd in stream.updates:
+        server.submit_update(upd)
+        g, st = server.step(g)
+        outs.append(st)
+    return outs
+
+
+# -- telemetry: rings, credibility, collisions --------------------------------
+
+def test_ring_wraparound_windows_percentiles():
+    ring = _Ring(8)
+    ring.extend(float(i) for i in range(20))
+    # only the last 8 samples (12..19) are resident
+    assert ring.count == 20
+    assert ring.percentile(50) == pytest.approx(15.5)
+    assert ring.percentile(0) == 12.0
+    assert ring.percentile(100) == 19.0
+
+
+def test_percentile_min_count():
+    assert percentile_min_count(50) == 2
+    assert percentile_min_count(99) == 100
+    assert percentile_min_count(99.9) == 1000
+    assert percentile_min_count(100) == 1
+
+
+def test_percentile_credibility_strict_nan():
+    ring = _Ring(2048)
+    ring.extend([1.0] * 999)
+    assert ring.credible(50) and ring.credible(99)
+    assert not ring.credible(99.9)
+    assert math.isnan(ring.percentile(99.9, strict=True))
+    ring.add(1.0)
+    assert ring.credible(99.9)
+    assert ring.percentile(99.9, strict=True) == 1.0
+
+
+def test_snapshot_omits_uncredible_percentiles():
+    t = Telemetry(window=64)
+    t.record_latency("e2e", *[0.001] * 99)
+    snap = t.snapshot()
+    assert "p50_e2e_ms" in snap           # 2 samples suffice
+    assert "p99_e2e_ms" not in snap       # needs 100
+    assert "p999_e2e_ms" not in snap      # needs 1000
+    t.record_latency("e2e", 0.001)
+    assert "p99_e2e_ms" in t.snapshot()
+    # the step channel stays schema-stable even with zero samples
+    fresh = Telemetry().snapshot()
+    assert fresh["p50_step_ms"] == 0.0 and fresh["p99_step_ms"] == 0.0
+
+
+def test_channel_windows_configurable():
+    t = Telemetry(window=4, channel_windows={"assembly": 16})
+    assert t.channel_window("assembly") == 16
+    assert t.channel_window("e2e") == 4096      # wide default for tails
+    assert t.channel_window("anything_else") == 4
+    t.record_latency("assembly", *[float(i) for i in range(16)])
+    # all 16 resident: window came from channel_windows, not the default
+    assert t.latency_percentile(0, "assembly") == 0.0
+    t.record_latency("narrow", *[float(i) for i in range(16)])
+    assert t.latency_percentile(0, "narrow") == 12.0  # window 4 wrapped
+
+
+def test_counter_collision_rejected():
+    t = Telemetry()
+    with pytest.raises(ValueError, match="reserved"):
+        t.record_counters({"steps": 7})
+    with pytest.raises(ValueError, match="reserved"):
+        t.record_counters({"p99_e2e_ms": 1})
+    t.record_counters({"seed_cache_hits": 3})
+    assert t.snapshot()["seed_cache_hits"] == 3
+
+
+# -- zero-cost disabled + traced-equals-untraced ------------------------------
+
+def _outs_equal(a, b):
+    assert len(a) == len(b)
+    for sa, sb in zip(a, b):
+        assert sa.deltas == sb.deltas
+        assert sa.n_recompute == sb.n_recompute
+        assert sa.n_events == sb.n_events
+        assert sa.n_pruned == sb.n_pruned
+
+
+@pytest.mark.slow
+def test_tracing_disabled_is_noop_and_enabled_is_bitwise_equal():
+    stream = _stream()
+    off = _server()
+    outs_off = _run(off, stream)
+    # disabled = the null tracer: zero spans, shared no-op span object
+    assert off.obs.tracer is NULL_TRACER
+    assert off.obs.tracer.n_spans == 0
+    assert off.obs.span("anything") is NULL_SPAN
+
+    on = _server(obs=ObsConfig(enabled=True))
+    outs_on = _run(on, stream)
+    assert on.obs.tracer.n_spans > 0
+    # tracing changes what is recorded, never what is computed
+    _outs_equal(outs_off, outs_on)
+    for i in range(len(off.stores)):
+        assert off.stores[i]._patterns == on.stores[i]._patterns
+    # ...and never what is compiled: the extra fences sit outside jit
+    assert off.engine.trace_count() == on.engine.trace_count()
+
+
+@pytest.mark.slow
+def test_stage_breakdown_populates_only_when_traced():
+    stream = _stream(n_steps=2)
+    off = _server()
+    for st_off in _run(off, stream):
+        pass
+    assert all(not k.startswith("p50_stage_")
+               for k in off.telemetry.snapshot())
+
+    on = _server(obs=ObsConfig(enabled=True))
+    _run(on, stream)
+    snap = on.telemetry.snapshot()
+    stages = {k[len("p50_stage_"):-len("_ms")] for k in snap
+              if k.startswith("p50_stage_")}
+    # every non-optional pipeline stage reports a wall-time channel
+    # (prune only fires on its interval, so a 2-step run may skip it)
+    assert {"apply", "pem", "rwr", "merge"} <= stages
+
+
+# -- flight recorder ----------------------------------------------------------
+
+def _fake_step_events(step):
+    return [{"name": "engine/apply", "cat": "engine", "ph": "X",
+             "ts": 1000.0 * step, "dur": 5.0, "pid": 1, "tid": 1,
+             "args": {"step": step}}]
+
+
+def test_flight_ring_keeps_last_n(tmp_path):
+    fr = FlightRecorder(3, str(tmp_path / "fl"))
+    for s in range(5):
+        fr.push(s, _fake_step_events(s))
+    assert fr.steps() == [2, 3, 4]
+    path = fr.dump(reason="unit")
+    assert validate_jsonl(path) == []
+    events = read_jsonl(path)
+    marker = events[0]
+    assert marker["name"] == "flight_dump"
+    assert marker["args"]["reason"] == "unit"
+    assert marker["args"]["steps"] == [2, 3, 4]
+
+
+def test_flight_triggered_dumps_deduplicate(tmp_path):
+    fr = FlightRecorder(4, str(tmp_path / "fl"))
+    fr.push(0, _fake_step_events(0))
+    first = fr.dump(reason="slo", triggered=True)
+    assert first is not None
+    # same evidence, second trigger: skipped
+    assert fr.dump(reason="slo", triggered=True) is None
+    fr.push(1, _fake_step_events(1))
+    second = fr.dump(reason="slo", triggered=True)
+    assert second is not None and second != first
+    # manual dumps always write
+    assert fr.dump(reason="manual") is not None
+
+
+def test_slo_trigger_dumps_flight(tmp_path):
+    obs = Obs(ObsConfig(enabled=True, flight_n=4, slo_e2e_ms=100.0,
+                        flight_path=str(tmp_path / "slo")))
+    obs.begin_step(0)
+    with obs.span("engine/apply"):
+        pass
+    obs.end_step(0)
+    assert obs.observe_e2e(50.0) is None          # under the SLO
+    path = obs.observe_e2e(250.0)                 # breach -> post-mortem
+    assert path is not None and validate_jsonl(path) == []
+    assert "slo:e2e" in read_jsonl(path)[0]["args"]["reason"]
+    assert obs.observe_e2e(300.0) is None         # no new steps: de-duped
+
+
+@pytest.mark.slow
+def test_executor_crash_dumps_flight(tmp_path):
+    from repro.runtime import (ServingRuntime, VirtualClock, build_workload,
+                               churn_heavy)
+    wl = build_workload(churn_heavy(rate=2500.0, tick_s=0.01, n_ticks=6,
+                                    n_vertices=128, seed=3), u_max=256)
+    srv = _server()
+    boom = {"calls": 0}
+    orig = srv.step_packed
+
+    def failing(*a, **kw):
+        boom["calls"] += 1
+        if boom["calls"] > 1:
+            raise RuntimeError("injected executor fault")
+        return orig(*a, **kw)
+
+    srv.step_packed = failing
+    prefix = str(tmp_path / "crash")
+    rt = ServingRuntime(
+        srv, RuntimeConfig(ingress="lockstep",
+                           obs=ObsConfig(enabled=True, flight_n=8,
+                                         flight_path=prefix)),
+        clock=VirtualClock())
+    with pytest.raises(RuntimeError, match="injected executor fault"):
+        rt.serve(wl)
+    dumps = [f for f in os.listdir(tmp_path) if f.startswith("crash.")]
+    assert dumps, "executor crash produced no flight dump"
+    events = read_jsonl(str(tmp_path / sorted(dumps)[0]))
+    assert events[0]["args"]["reason"].startswith("crash:RuntimeError")
+    assert validate_events(events) == []
+
+
+# -- cross-thread tracing through the async runtime ---------------------------
+
+@pytest.mark.slow
+def test_lockstep_runtime_trace_spans_threads(tmp_path):
+    from repro.runtime import (ServingRuntime, VirtualClock, build_workload,
+                               churn_heavy)
+    wl = build_workload(churn_heavy(rate=2500.0, tick_s=0.01, n_ticks=8,
+                                    n_vertices=128, seed=3), u_max=256)
+    srv = _server()
+    rt = ServingRuntime(
+        srv, RuntimeConfig(ingress="lockstep",
+                           obs=ObsConfig(enabled=True, flight_n=64)),
+        clock=VirtualClock())
+    stats = rt.serve(wl)
+    assert stats
+    events = srv.obs.tracer.events()
+    by_cat = {}
+    for ev in events:
+        by_cat.setdefault(ev.get("cat"), []).append(ev)
+    # ingress spans and engine spans run on different threads
+    ingress_tids = {ev["tid"] for ev in by_cat["ingress"]}
+    engine_tids = {ev["tid"] for ev in by_cat["engine"]}
+    assert ingress_tids and engine_tids
+    assert ingress_tids.isdisjoint(engine_tids)
+    # thread_name metadata names both runtime threads
+    names = {ev["args"]["name"] for ev in events if ev["ph"] == "M"}
+    assert any("ingress" in n for n in names)
+    assert any("executor" in n for n in names)
+    # every executed batch id was stamped by the ingress thread...
+    packed = {ev["args"]["batch"] for ev in events
+              if ev["name"] == "ingress/packed"}
+    stepped = {ev["args"]["batch"] for ev in by_cat["executor"]
+               if ev["name"] == "executor/step"}
+    assert stepped and stepped <= packed
+    # ...and engine spans inherit BOTH ids from the thread-local context,
+    # which is what lets a post-mortem follow one batch offer -> merge
+    merges = [ev for ev in by_cat["engine"]
+              if ev["name"] == "engine/merge"]
+    assert merges
+    assert all("step" in ev["args"] and "batch" in ev["args"]
+               for ev in merges)
+    # the flight ring grouped those spans under their step ids
+    assert srv.obs.flight.steps() == [s.step for s in stats]
+
+
+# -- exporters ----------------------------------------------------------------
+
+def test_jsonl_roundtrip_and_validation(tmp_path):
+    events = [
+        {"name": "engine/apply", "cat": "engine", "ph": "X", "ts": 1.5,
+         "dur": 2.25, "pid": 1, "tid": 1, "args": {"step": 0}},
+        {"name": "ingress/packed", "cat": "ingress", "ph": "i", "ts": 4.0,
+         "pid": 1, "tid": 2, "args": {"batch": 3}},
+        {"name": "thread_name", "ph": "M", "ts": 0.0, "pid": 1, "tid": 2,
+         "args": {"name": "rt-ingress"}},
+    ]
+    path = str(tmp_path / "t.jsonl")
+    write_jsonl(events, path)
+    assert read_jsonl(path) == events
+    assert validate_jsonl(path) == []
+    chrome = str(tmp_path / "t.json")
+    write_chrome(events, chrome)
+    with open(chrome) as f:
+        doc = json.load(f)
+    assert doc["traceEvents"] == events
+
+
+def test_validation_catches_schema_violations(tmp_path):
+    assert validate_events([{"name": "x", "ph": "X", "ts": 0.0,
+                             "pid": 1, "tid": 1}])  # X without dur
+    assert validate_events([{"name": "x", "ph": "Q", "ts": 0.0, "dur": 1,
+                             "pid": 1, "tid": 1}])  # unknown phase
+    assert validate_events([{"ph": "i", "ts": 0.0, "pid": 1, "tid": 1}])
+    assert validate_jsonl(str(tmp_path / "missing.jsonl"))
+    empty = str(tmp_path / "empty.jsonl")
+    open(empty, "w").close()
+    assert validate_jsonl(empty) == ["no events"]
+
+
+def test_prometheus_export(tmp_path):
+    path = str(tmp_path / "m.prom")
+    write_prometheus({"p50_step_ms": 1.25, "steps": 4, "note": "text",
+                      "bad": float("nan"), "weird key!": 2.0}, path)
+    text = open(path).read()
+    assert "repro_p50_step_ms 1.25" in text
+    assert "repro_steps 4" in text
+    assert "note" not in text and "nan" not in text
+    assert "repro_weird_key_ 2" in text
+
+
+# -- prefix-sharing population (satellite) ------------------------------------
+
+def test_prefix_zoo_shares_prefixes_without_duplication():
+    qs = prefix_zoo(32)
+    sigs = {query_signature(q) for q in qs}
+    assert len(sigs) == len(qs)                    # zero exact duplication
+    assert all(int(q.anchor) == 0 for q in qs)     # one anchor family
+    unshared = sum(len(decompose(q)) for q in qs)
+    shared = len({k for q in qs for k in decompose(q)})
+    # the family collapses heavily in the sub-pattern DAG (>=4x)
+    assert shared * 4 <= unshared
+
+
+def test_prefix_zoo_engine_dag_collapse():
+    from repro.engine import Engine
+    qs = prefix_zoo(12)
+    eng = Engine(_cfg(), seed=0)
+    for q in qs:
+        eng.register(q)
+    c = eng.counters()
+    assert c["standing_queries"] == 12
+    assert c["n_dedup"] == 0                        # no alias fast-path hits
+    assert c["bank_rows"] == 12                     # every row distinct
+    unshared = sum(len(decompose(q)) for q in qs)
+    assert c["dag_nodes"] < unshared                # DAG carries the collapse

@@ -245,13 +245,33 @@ def test_subscribers_receive_per_query_delta_streams():
 
 @pytest.mark.slow
 def test_runtime_telemetry_has_tail_latency_channels():
+    import math
+
+    from repro.serving.telemetry import percentile_min_count
+
     wl = _workload(poisson, n_ticks=8)
     srv = _server(bank=1)
     rt = ServingRuntime(srv, clock=WallClock())
     rt.serve(wl)
-    snap = srv.telemetry.snapshot()
+    tel = srv.telemetry
+    snap = tel.snapshot()
+    # a percentile key appears exactly when its channel holds enough
+    # samples (1/(1-q/100)); below that the strict query returns NaN —
+    # never a made-up tail (the old p999-from-5-samples credibility bug)
     for ch in ("e2e", "queue_wait", "assembly"):
-        assert f"p99_{ch}_ms" in snap and f"p999_{ch}_ms" in snap
-        assert snap[f"p999_{ch}_ms"] >= snap[f"p99_{ch}_ms"] >= 0.0
-    assert srv.telemetry.channel_count("e2e") == \
-        sum(s.n_events for s in rt.stats)
+        resident = min(tel.channel_count(ch), tel.channel_window(ch))
+        assert resident > 0
+        for q, label in ((50, "p50"), (99, "p99"), (99.9, "p999")):
+            key = f"{label}_{ch}_ms"
+            if resident >= percentile_min_count(q):
+                assert key in snap and snap[key] >= 0.0
+            else:
+                assert key not in snap
+                assert math.isnan(tel.latency_percentile(q, ch, strict=True))
+    # ~200 per-event samples: p99 is credible for the event channels,
+    # p999 is not; per-batch assembly has far fewer samples than that
+    assert "p99_e2e_ms" in snap and "p999_e2e_ms" not in snap
+    assert "p99_queue_wait_ms" in snap
+    assert "p999_assembly_ms" not in snap
+    assert snap["p99_e2e_ms"] >= snap["p50_e2e_ms"] >= 0.0
+    assert tel.channel_count("e2e") == sum(s.n_events for s in rt.stats)
