@@ -7,7 +7,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
     engine-smoke sweep-smoke runtime-smoke decomp-smoke trace-smoke \
-    bench-collect
+    control-smoke bench-collect
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -75,6 +75,19 @@ decomp-smoke:
 trace-smoke:
 	timeout 600 $(PY) -m pytest tests/test_obs.py -q
 	PYTHONPATH=src:. timeout 600 $(PY) benchmarks/trace_smoke.py
+
+# closed-loop RL serving controller smoke (DESIGN.md §9): the control +
+# upgraded-DQN suites (closed-loop determinism, off-mode bitwise pin,
+# ack accounting, checkpoint round-trip), the learned-vs-static
+# closed-loop comparison rows (the win gate binds at full scale only),
+# then a train-then-freeze closed-loop run end-to-end from the CLI
+control-smoke:
+	timeout 900 $(PY) -m pytest tests/test_control.py tests/test_dqn.py -q
+	PYTHONPATH=src:. timeout 600 $(PY) benchmarks/serving_bench.py \
+	    --smoke --control-only
+	PYTHONPATH=src timeout 300 $(PY) -m repro.launch.serve \
+	    --arch igpm-pem --async --scenario flash_crowd --rate 2000 \
+	    --ticks 10 --closed-loop --control frozen --control-episodes 1
 
 # merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
 bench-collect:

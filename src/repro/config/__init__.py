@@ -1,6 +1,8 @@
 from repro.config.base import (
     ArchConfig,
     BSTConfig,
+    ControlConfig,
+    DQNSpec,
     GNNConfig,
     IGPMConfig,
     MeshConfig,
@@ -13,6 +15,8 @@ from repro.config.registry import get_arch, list_archs, register_arch
 __all__ = [
     "ArchConfig",
     "BSTConfig",
+    "ControlConfig",
+    "DQNSpec",
     "GNNConfig",
     "IGPMConfig",
     "MeshConfig",

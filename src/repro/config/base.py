@@ -214,6 +214,76 @@ class IGPMConfig:
 
 
 @dataclass(frozen=True)
+class DQNSpec:
+    """Generic DQN learner spec (``repro.core.dqn.DQNAgent``).
+
+    The PEM agent builds its spec from :class:`IGPMConfig`'s ``dqn_*``
+    fields (vanilla 1-step DQN — the paper's shape); the serving
+    controller (``repro.control``, DESIGN.md §9) constructs one directly
+    with the two upgrades enabled:
+
+    - ``double`` — double-DQN target (online-net argmax, target-net eval),
+    - ``n_step`` — n-step return aggregation before the replay ring,
+    - ``epsilon_final``/``epsilon_decay_steps`` — linear ε decay from
+      ``epsilon`` to ``epsilon_final`` over the first ``decay_steps``
+      training observations (0 steps — the default — keeps ε flat, the
+      paper's shape).
+    """
+
+    obs_dim: int = 2
+    n_actions: int = 2
+    hidden: Tuple[int, ...] = (4, 4)
+    epsilon: float = 0.5
+    gamma: float = 0.9
+    lr: float = 1e-2
+    replay_capacity: int = 512
+    replay_batch: int = 16
+    target_update_every: int = 10
+    double: bool = False
+    n_step: int = 1
+    epsilon_final: float = 0.0
+    epsilon_decay_steps: int = 0
+
+
+@dataclass(frozen=True)
+class ControlConfig:
+    """Closed-loop serving controller (``repro.control``, DESIGN.md §9).
+
+    ``mode``:
+      - ``off``    — no controller object is built; the runtime reads its
+        static knobs exactly as before (pinned bitwise-identical to the
+        controller-less runtime by ``tests/test_control.py``).
+      - ``train``  — ε-greedy double-DQN learning against the goodput /
+        SLO-violation reward, deciding every ``decide_every`` micro-batches
+        on the ingress side.
+      - ``frozen`` — greedy inference from the checkpointed policy; no
+        learning, no exploration RNG — decision sequences replay.
+
+    The action space is knob-ladder moves (see ``control/env.py``): the
+    micro-batch window and shed threshold (queue depth) ladders are derived
+    from the serving config unless given here; ``tol_ladder`` is the
+    bounded discrete set of ``rwr_tol`` values the controller may select
+    (``rwr_tol`` is a static jit argument — a bounded ladder bounds
+    recompiles). If the engine's baseline ``rwr_tol`` is 0 (exact
+    fixed-iteration sweeps) the tol knob is disabled rather than silently
+    switching the engine onto the adaptive path.
+    """
+
+    mode: str = "off"                # | 'train' | 'frozen'
+    decide_every: int = 4            # micro-batches per controller decision
+    slo_e2e_s: float = 0.25          # ack-latency SLO for the goodput reward
+    viol_weight: float = 2.0         # SLO-violation penalty weight in reward
+    window_ladder: Tuple[int, ...] = ()   # () → derived from serving config
+    depth_ladder: Tuple[int, ...] = ()    # () → derived from serving config
+    tol_ladder: Tuple[float, ...] = (1e-5, 1e-4, 1e-3, 1e-2)
+    seed: int = 0
+    dqn: DQNSpec = field(default_factory=lambda: DQNSpec(
+        obs_dim=12, n_actions=7, hidden=(32, 32), epsilon=0.15, gamma=0.8,
+        lr=2e-3, replay_capacity=4096, replay_batch=32,
+        target_update_every=50, double=True, n_step=3))
+
+
+@dataclass(frozen=True)
 class ObsConfig:
     """Observability knobs — structured tracing, flight recorder, and
     exporters (DESIGN.md §8).
@@ -412,6 +482,9 @@ class RuntimeConfig:
     # Obs hub (usually what you want — one hub sees ingress, executor,
     # and engine spans together); set to rebuild the hub at start()
     obs: Optional[ObsConfig] = None
+    # closed-loop RL controller (DESIGN.md §9); mode='off' is a strict
+    # no-op — no controller object exists and the static knobs apply
+    control: ControlConfig = field(default_factory=ControlConfig)
 
 
 # ---------------------------------------------------------------------------

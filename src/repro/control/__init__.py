@@ -1,0 +1,24 @@
+"""Closed-loop RL serving controller (DESIGN.md §9).
+
+The paper's thesis is RL-adaptive recomputation; this package extends it
+from the PEM vertex mask to the serving runtime itself. A
+:class:`ControllerEnv` turns the runtime's existing telemetry (queue
+occupancy, back-pressure counters, per-stage percentiles, RWR sweep
+counts, delivered lag) into a bounded observation vector and exposes a
+discrete knob-ladder action space over the live ``RuntimeKnobs``
+(micro-batch window, shed threshold, ``rwr_tol``); a
+:class:`ServingController` wraps the upgraded ``core.dqn`` learner
+(double-DQN + n-step returns) around it, trained against a
+goodput/SLO-violation reward from the ``AckLedger``, deciding at
+micro-batch boundaries on the ingress side. ``mode='frozen'`` is pure
+greedy inference (replayable); ``mode='off'`` builds nothing at all.
+"""
+
+from repro.control.agent import ServingController
+from repro.control.env import (ACTION_NAMES, N_ACTIONS, OBS_DIM,
+                               ControllerEnv)
+
+__all__ = [
+    "ACTION_NAMES", "N_ACTIONS", "OBS_DIM",
+    "ControllerEnv", "ServingController",
+]

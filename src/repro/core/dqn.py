@@ -5,18 +5,34 @@ fraction of affected communities), two fully-connected hidden layers of four
 units, 2-action output (increment / decrement the minimum community size),
 ε-greedy with ε = 0.5 (§IV-C). Pure JAX: the network, TD loss, Adam, and the
 target network are all in-repo (no keras-rl / TF).
+
+The serving controller (``repro.control``) reuses the same learner with two
+upgrades, both off by default so the PEM path is unchanged:
+
+- **double-DQN** (van Hasselt et al. 2016): action selection by the online
+  net, evaluation by the target net — kills the max-operator overestimation
+  bias that a noisy goodput reward otherwise amplifies.
+- **n-step returns**: transitions are aggregated over an n-deep pending
+  window before hitting the replay ring; each stored transition carries its
+  own bootstrap discount γ^k (k ≤ n, shorter at episode ends), so the TD
+  target is ``R_n + γ^k max_a' Q(s_{t+k}, a')``.
+
+Construct with :class:`repro.config.base.DQNSpec` to opt in; constructing
+with :class:`~repro.config.base.IGPMConfig` keeps the paper's vanilla 1-step
+agent bit-for-bit.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from functools import partial
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import IGPMConfig
+from repro.config.base import DQNSpec, IGPMConfig
 
 
 def _init_mlp(key, sizes) -> Dict[str, jnp.ndarray]:
@@ -46,43 +62,62 @@ class Transition(NamedTuple):
 
 
 class ReplayBuffer:
-    """Host-side ring buffer (data pipeline component, not device state)."""
+    """Host-side ring buffer (data pipeline component, not device state).
 
-    def __init__(self, capacity: int, obs_dim: int, seed: int = 0):
+    ``discounts`` stores the per-transition bootstrap discount γ^k: plain γ
+    for 1-step transitions, γ^n for n-step aggregates (γ^k, k < n, for the
+    shortened tails flushed at episode ends).
+    """
+
+    def __init__(self, capacity: int, obs_dim: int, seed: int = 0,
+                 gamma: float = 0.9):
         self.capacity = capacity
         self.obs = np.zeros((capacity, obs_dim), np.float32)
         self.next_obs = np.zeros((capacity, obs_dim), np.float32)
         self.actions = np.zeros(capacity, np.int32)
         self.rewards = np.zeros(capacity, np.float32)
         self.dones = np.zeros(capacity, bool)
+        self.discounts = np.full(capacity, gamma, np.float32)
+        self._gamma = gamma
         self.size = 0
         self.cursor = 0
         self._rng = np.random.default_rng(seed)
 
-    def push(self, t: Transition) -> None:
+    def push(self, t: Transition, discount: float = None) -> None:
+        if discount is None:
+            discount = self._gamma
         i = self.cursor
         self.obs[i] = t.obs
         self.next_obs[i] = t.next_obs
         self.actions[i] = t.action
         self.rewards[i] = t.reward
         self.dones[i] = t.done
+        self.discounts[i] = discount
         self.cursor = (i + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
     def sample(self, batch: int):
         idx = self._rng.integers(0, self.size, size=batch)
         return (self.obs[idx], self.actions[idx], self.rewards[idx],
-                self.next_obs[idx], self.dones[idx])
+                self.next_obs[idx], self.dones[idx], self.discounts[idx])
 
 
-@partial(jax.jit, static_argnames=("n_layers", "gamma"))
+@partial(jax.jit, static_argnames=("n_layers", "double"))
 def _td_loss_and_grad(params, target_params, obs, actions, rewards, next_obs,
-                      dones, n_layers: int, gamma: float):
+                      dones, discounts, n_layers: int, double: bool):
     def loss_fn(p):
         q = _mlp(p, obs, n_layers)                       # (B, A)
         q_sel = jnp.take_along_axis(q, actions[:, None], axis=1)[:, 0]
-        q_next = _mlp(target_params, next_obs, n_layers).max(axis=1)
-        tgt = rewards + gamma * q_next * (1.0 - dones.astype(jnp.float32))
+        q_tgt_next = _mlp(target_params, next_obs, n_layers)
+        if double:
+            # double-DQN: online net picks the action, target net scores it
+            a_star = jnp.argmax(_mlp(p, next_obs, n_layers), axis=1)
+            q_next = jnp.take_along_axis(
+                q_tgt_next, a_star[:, None], axis=1)[:, 0]
+            q_next = jax.lax.stop_gradient(q_next)
+        else:
+            q_next = q_tgt_next.max(axis=1)
+        tgt = rewards + discounts * q_next * (1.0 - dones.astype(jnp.float32))
         return jnp.mean((q_sel - jax.lax.stop_gradient(tgt)) ** 2)
 
     return jax.value_and_grad(loss_fn)(params)
@@ -100,10 +135,24 @@ def _adam_update(params, grads, m, v, t, lr):
     return new_p, new_m, new_v
 
 
+def _as_spec(cfg: Union[IGPMConfig, DQNSpec]) -> DQNSpec:
+    if isinstance(cfg, DQNSpec):
+        return cfg
+    return DQNSpec(
+        obs_dim=cfg.dqn_obs_dim, n_actions=cfg.dqn_n_actions,
+        hidden=tuple(cfg.dqn_hidden), epsilon=cfg.epsilon, gamma=cfg.gamma,
+        lr=cfg.dqn_lr, replay_capacity=cfg.replay_capacity,
+        replay_batch=cfg.replay_batch,
+        target_update_every=cfg.target_update_every,
+        double=False, n_step=1)
+
+
 class DQNAgent:
-    def __init__(self, cfg: IGPMConfig, seed: int = 0):
+    def __init__(self, cfg: Union[IGPMConfig, DQNSpec], seed: int = 0):
         self.cfg = cfg
-        sizes = (cfg.dqn_obs_dim,) + tuple(cfg.dqn_hidden) + (cfg.dqn_n_actions,)
+        spec = _as_spec(cfg)
+        self.spec = spec
+        sizes = (spec.obs_dim,) + tuple(spec.hidden) + (spec.n_actions,)
         self.n_layers = len(sizes) - 1
         key = jax.random.PRNGKey(seed)
         self.params = _init_mlp(key, sizes)
@@ -111,18 +160,31 @@ class DQNAgent:
         self.m = jax.tree.map(jnp.zeros_like, self.params)
         self.v = jax.tree.map(jnp.zeros_like, self.params)
         self.t = 0
-        self.replay = ReplayBuffer(cfg.replay_capacity, cfg.dqn_obs_dim,
-                                   seed=seed)
+        self.replay = ReplayBuffer(spec.replay_capacity, spec.obs_dim,
+                                   seed=seed, gamma=spec.gamma)
+        self._pending: deque = deque()  # n-step aggregation window
         self._rng = np.random.default_rng(seed + 1)
         self._q = jax.jit(lambda p, o: _mlp(p, o, self.n_layers))
 
     def q_values(self, obs: np.ndarray) -> np.ndarray:
         return np.asarray(self._q(self.params, jnp.asarray(obs, jnp.float32)))
 
-    def act(self, obs: np.ndarray) -> int:
-        """ε-greedy (paper §IV-C: ε = 0.5)."""
-        if self._rng.random() < self.cfg.epsilon:
-            return int(self._rng.integers(self.cfg.dqn_n_actions))
+    @property
+    def epsilon_now(self) -> float:
+        """Exploration rate at the current training step: flat
+        ``spec.epsilon`` unless ``epsilon_decay_steps > 0``, then a
+        linear ramp to ``spec.epsilon_final`` over that many observes."""
+        spec = self.spec
+        if spec.epsilon_decay_steps <= 0:
+            return spec.epsilon
+        frac = min(self.t / spec.epsilon_decay_steps, 1.0)
+        return spec.epsilon + (spec.epsilon_final - spec.epsilon) * frac
+
+    def act(self, obs: np.ndarray, greedy: bool = False) -> int:
+        """ε-greedy (paper §IV-C: ε = 0.5); ``greedy=True`` for a frozen
+        policy (no exploration, no RNG consumption — replayable)."""
+        if not greedy and self._rng.random() < self.epsilon_now:
+            return int(self._rng.integers(self.spec.n_actions))
         return int(np.argmax(self.q_values(obs[None])[0]))
 
     # -- persistence (serving restarts) --------------------------------------
@@ -130,7 +192,9 @@ class DQNAgent:
     def state_dict(self) -> Dict:
         """Learner state as a pytree of host arrays — params, target net,
         Adam moments, step count, and the replay ring — shaped for
-        ``repro.checkpoint.Checkpointer`` (see MatchServer.save_policy)."""
+        ``repro.checkpoint.Checkpointer`` (see MatchServer.save_policy).
+        The n-step pending window is intentionally NOT saved: it spans an
+        in-flight episode, and a restarted server starts a fresh one."""
         rb = self.replay
         return {
             "params": jax.tree.map(np.asarray, self.params),
@@ -142,6 +206,7 @@ class DQNAgent:
                 "obs": rb.obs.copy(), "next_obs": rb.next_obs.copy(),
                 "actions": rb.actions.copy(), "rewards": rb.rewards.copy(),
                 "dones": rb.dones.copy(),
+                "discounts": rb.discounts.copy(),
                 "size": np.asarray(rb.size, np.int64),
                 "cursor": np.asarray(rb.cursor, np.int64),
             },
@@ -150,35 +215,91 @@ class DQNAgent:
     def load_state_dict(self, sd: Dict) -> None:
         """Restore the learner from :meth:`state_dict` output (or its
         checkpoint round-trip). The exploration RNG is NOT part of the
-        state — a restarted server explores afresh by design."""
+        state — a restarted server explores afresh by design.
+
+        Raises ``ValueError`` if the checkpointed replay ring does not
+        match the configured one — the Checkpointer does no shape
+        validation, and silently truncating (or zero-padding) a replay
+        ring corrupts the learner's sample distribution."""
         as_jnp = lambda tree: jax.tree.map(jnp.asarray, tree)  # noqa: E731
+        rb, srb = self.replay, sd["replay"]
+        ck_shape = tuple(np.asarray(srb["obs"]).shape)
+        if ck_shape != rb.obs.shape:
+            raise ValueError(
+                f"replay ring mismatch: checkpoint has obs{ck_shape}, agent "
+                f"configured for obs{rb.obs.shape} — construct the agent "
+                "with the same replay_capacity/obs_dim as the checkpoint")
         self.params = as_jnp(sd["params"])
         self.target_params = as_jnp(sd["target_params"])
         self.m = as_jnp(sd["m"])
         self.v = as_jnp(sd["v"])
         self.t = int(sd["t"])
-        rb, srb = self.replay, sd["replay"]
         rb.obs[:] = srb["obs"]
         rb.next_obs[:] = srb["next_obs"]
         rb.actions[:] = srb["actions"]
         rb.rewards[:] = srb["rewards"]
         rb.dones[:] = srb["dones"]
-        rb.size = int(srb["size"])
-        rb.cursor = int(srb["cursor"])
+        # pre-discounts checkpoints restore as 1-step rings
+        if "discounts" in srb:
+            rb.discounts[:] = srb["discounts"]
+        else:
+            rb.discounts[:] = self.spec.gamma
+        size, cursor = int(srb["size"]), int(srb["cursor"])
+        if size > rb.capacity or cursor >= rb.capacity:
+            raise ValueError(
+                f"replay ring mismatch: checkpoint size={size} "
+                f"cursor={cursor} exceed capacity {rb.capacity}")
+        rb.size = size
+        rb.cursor = cursor
+        self._pending.clear()
 
-    def observe(self, t: Transition) -> float:
-        """Push a transition and do one learning step. Returns TD loss."""
-        self.replay.push(t)
-        if self.replay.size < self.cfg.replay_batch:
+    # -- learning ------------------------------------------------------------
+
+    def _emit_nstep(self, flush: bool) -> None:
+        """Collapse the pending window into stored transitions. With
+        ``flush`` (episode end) every suffix is emitted at its natural
+        (shorter) horizon; otherwise only the oldest transition is emitted
+        once the window holds n entries."""
+        spec = self.spec
+        while self._pending and (flush or len(self._pending) >= spec.n_step):
+            r, disc = 0.0, 1.0
+            for t in self._pending:
+                r += disc * t.reward
+                disc *= spec.gamma
+            head = self._pending.popleft()
+            tail_t = self._pending[-1] if self._pending else head
+            agg = Transition(head.obs, head.action, r,
+                             tail_t.next_obs, tail_t.done)
+            self.replay.push(agg, discount=disc)
+            if not flush:
+                break
+
+    def _learn(self) -> float:
+        spec = self.spec
+        if self.replay.size < spec.replay_batch:
             return 0.0
-        obs, act, rew, nxt, done = self.replay.sample(self.cfg.replay_batch)
+        obs, act, rew, nxt, done, disc = self.replay.sample(spec.replay_batch)
         loss, grads = _td_loss_and_grad(
             self.params, self.target_params, jnp.asarray(obs),
             jnp.asarray(act), jnp.asarray(rew), jnp.asarray(nxt),
-            jnp.asarray(done), n_layers=self.n_layers, gamma=self.cfg.gamma)
+            jnp.asarray(done), jnp.asarray(disc),
+            n_layers=self.n_layers, double=spec.double)
         self.t += 1
         self.params, self.m, self.v = _adam_update(
-            self.params, grads, self.m, self.v, self.t, self.cfg.dqn_lr)
-        if self.t % self.cfg.target_update_every == 0:
+            self.params, grads, self.m, self.v, self.t, spec.lr)
+        if self.t % spec.target_update_every == 0:
             self.target_params = jax.tree.map(jnp.copy, self.params)
         return float(loss)
+
+    def observe(self, t: Transition) -> float:
+        """Push a transition and do one learning step. Returns TD loss.
+
+        With ``n_step > 1`` the transition enters the pending window first;
+        the stored transition is the γ-discounted n-step aggregate. A
+        ``done`` transition flushes the whole window (shortened horizons)."""
+        if self.spec.n_step <= 1:
+            self.replay.push(t, discount=self.spec.gamma)
+        else:
+            self._pending.append(t)
+            self._emit_nstep(flush=t.done)
+        return self._learn()

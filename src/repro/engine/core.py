@@ -110,6 +110,11 @@ class Engine:
         # written) — the host-cost suspect ROADMAP tracks
         self.last_merge_rows = 0
         self.last_merge_stores = 0
+        self.last_merge_folds = 0
+        # optional serving-controller attachment (repro.control): when a
+        # runtime binds one here, its state rides the engine checkpoint so
+        # save/load round-trips the learned scheduling policy too
+        self.control = None
 
     # -- standing-query registry ----------------------------------------------
 
@@ -138,7 +143,14 @@ class Engine:
             self._sig_of[qid] = sig
             self._alias_query[qid] = query
             self.n_dedup += 1
-            self.stores[qid] = PatternStore()
+            store = PatternStore()
+            primary = self.stores[self._dups[sig][0]]
+            if primary.total == 0:
+                # alias stores are bitwise clones of the primary from here
+                # on (identical merge inputs per group), so share the dict:
+                # _merge then folds each row ONCE per group, not per alias
+                store.share_from(primary)
+            self.stores[qid] = store
             self._where[qid] = shape
             self._order.append(qid)
             self.obs.instant("bank/register_alias", qid=qid,
@@ -212,6 +224,23 @@ class Engine:
                 del self.buckets[shape]
             elif bucket.b_pad > 1 and bucket.n_live <= bucket.b_pad // 4:
                 self._rebuild(bucket, bucket.b_pad // 2)
+
+    def _reshare_alias_stores(self) -> None:
+        """Re-establish pattern-dict sharing across exact-duplicate groups
+        whose stores hold equal content (fresh after ``reset``, or loaded
+        per-qid by ``load`` — ``PatternStore.load_arrays`` rebinds each
+        store's dict, silently un-sharing it). Group members that diverged
+        (late aliases registered after the primary accumulated patterns)
+        stay private, which preserves their per-store semantics."""
+        for group in self._dups.values():
+            primary = self.stores.get(group[0])
+            if primary is None:
+                continue
+            for alias in group[1:]:
+                store = self.stores.get(alias)
+                if (store is not None and not store.shares_with(primary)
+                        and store._patterns == primary._patterns):
+                    store.share_from(primary)
 
     def _rebuild(self, bucket: QueryBucket, b_pad: int,
                  node_cap: Optional[int] = None) -> QueryBucket:
@@ -300,6 +329,7 @@ class Engine:
         learned threshold/policy) — benchmark warm/measure passes replay
         identical streams on one engine."""
         self.stores = {qid: PatternStore() for qid in self._order}
+        self._reshare_alias_stores()
         self._seed_memo.clear()
         self.rlab_hits = self.rlab_misses = 0
         self.seed_hits = self.seed_misses = 0
@@ -382,13 +412,18 @@ class Engine:
                rebuild: bool = False) -> Tuple[QueryDelta, ...]:
         """Fold per-bucket results into the per-query stores (the only
         per-query host work of a step). Traced per bucket and per row —
-        the per-alias store fan-out here is the host cost that grew the
-        bank1024 step while device work stayed flat (ROADMAP), so each
-        row span carries its alias count and the totals land in
-        ``last_merge_rows``/``last_merge_stores``."""
+        the per-alias store fan-out here was the host cost that grew the
+        bank1024 step while device work stayed flat (ROADMAP). Alias
+        stores created while the primary was empty SHARE the primary's
+        pattern dict (see ``PatternStore.share_from``), so each row folds
+        its arrays once per *distinct dict* in the group — O(1) for fully
+        shared groups — and the remaining per-alias work is a dict lookup
+        to emit the QueryDelta. ``last_merge_rows``/``last_merge_stores``
+        keep the fan-out accounting; ``last_merge_folds`` counts the
+        actual merge_arrays calls (== rows when every group is shared)."""
         obs = self.obs
         by_qid: Dict[str, QueryDelta] = {}
-        n_rows = n_stores = 0
+        n_rows = n_stores = n_folds = 0
         for shape, res in results.items():
             bucket = self.buckets[shape]
             with obs.span("engine/merge/bucket",
@@ -408,23 +443,29 @@ class Engine:
                     group = self._dups.get(self._sig_of[qid], [qid])
                     n_rows += 1
                     n_stores += len(group)
+                    folded: Dict[int, int] = {}  # id(pattern dict) → n_new
                     with obs.span("engine/merge/row", qid=qid,
                                   aliases=len(group)):
                         for alias in group:
                             store = self.stores[alias]
-                            if rebuild:
-                                store._patterns.clear()
-                            new = store.merge_arrays(
-                                matched[slot], goodness[slot],
-                                exact[slot], valid[slot],
-                                bucket.row_mask(slot))
+                            pid = id(store._patterns)
+                            if pid not in folded:
+                                if rebuild:
+                                    store._patterns.clear()
+                                folded[pid] = store.merge_arrays(
+                                    matched[slot], goodness[slot],
+                                    exact[slot], valid[slot],
+                                    bucket.row_mask(slot))
+                                n_folds += 1
                             name = (bucket.query(slot).name if alias == qid
                                     else self._alias_query[alias].name)
-                            by_qid[alias] = QueryDelta(alias, name, new,
+                            by_qid[alias] = QueryDelta(alias, name,
+                                                       folded[pid],
                                                        store.total,
                                                        store.exact)
         self.last_merge_rows = n_rows
         self.last_merge_stores = n_stores
+        self.last_merge_folds = n_folds
         return tuple(by_qid[q] for q in self._order if q in by_qid)
 
     # -- whole-engine checkpointing (DESIGN.md §4) ------------------------------
@@ -458,6 +499,8 @@ class Engine:
             d["pem"] = {"community_size": np.asarray(self.pem.c, np.int64)}
             if self.pem.agent is not None:
                 d["pem"]["agent"] = self.pem.agent.state_dict()
+        if self.control is not None:
+            d["control"] = self.control.state_dict()
         return d
 
     def save(self, state: EngineState, directory: str,
@@ -488,10 +531,13 @@ class Engine:
                     "load()")
         for qid, arrays in tree["stores"].items():
             self.stores[qid].load_arrays(arrays)
+        self._reshare_alias_stores()
         if self.pem is not None:
             self.pem.c = int(tree["pem"]["community_size"])
             if self.pem.agent is not None:
                 self.pem.agent.load_state_dict(tree["pem"]["agent"])
+        if self.control is not None and "control" in tree:
+            self.control.load_state_dict(tree["control"])
         self._seed_memo.clear()
         # the ELL mirror resyncs on the next _apply (graph identity changed)
         return EngineState(
@@ -567,7 +613,15 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
             and bool(np.asarray(upd.rem_mask).any())):
         with obs.span("engine/prune") as sp:
             live = live_vertex_mask(g)
-            n_pruned = sum(s.prune(live) for s in eng.stores.values())
+            # prune each DISTINCT pattern dict once (alias stores share
+            # the primary's dict); every sharer still counts the removals,
+            # preserving the per-store n_pruned arithmetic
+            removed: Dict[int, int] = {}
+            for s in eng.stores.values():
+                pid = id(s._patterns)
+                if pid not in removed:
+                    removed[pid] = s.prune(live)
+                n_pruned += removed[pid]
         if tracing:
             stage["prune"] = sp.dur_s
 
@@ -614,7 +668,8 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
         if tracing:
             stage["merge"] = sp.dur_s
             obs.instant("engine/merge/fanout", rows=eng.last_merge_rows,
-                        stores=eng.last_merge_stores)
+                        stores=eng.last_merge_stores,
+                        folds=eng.last_merge_folds)
         sub_n = sub_e = 0
         r_lab = None  # batch mode keeps no warm-start state
         rlab_events = 0
@@ -710,7 +765,8 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                 stage["merge"] = sp.dur_s
                 obs.instant("engine/merge/fanout",
                             rows=eng.last_merge_rows,
-                            stores=eng.last_merge_stores)
+                            stores=eng.last_merge_stores,
+                            folds=eng.last_merge_folds)
             sub_n, sub_e = n_live, int(np.asarray(g.edge_mask).sum())
         else:
             with obs.span("engine/extract") as sp:
@@ -749,7 +805,8 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                 stage["merge"] = sp.dur_s
                 obs.instant("engine/merge/fanout",
                             rows=eng.last_merge_rows,
-                            stores=eng.last_merge_stores)
+                            stores=eng.last_merge_stores,
+                            folds=eng.last_merge_folds)
             sub_n, sub_e = sub.n_nodes, sub.n_edges
             r_lab = state.r_lab  # full-graph warm start unchanged
 

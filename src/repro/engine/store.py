@@ -25,6 +25,21 @@ class PatternStore:
     def __init__(self):
         self._patterns: Dict[Tuple[int, ...], Tuple[float, bool]] = {}
 
+    def share_from(self, primary: "PatternStore") -> None:
+        """Become a shared view of ``primary``: both stores reference the
+        SAME pattern dict. Exact-duplicate alias stores are bitwise clones
+        by construction (one device row serves the whole group, and
+        ``Engine._merge`` feeds every group member identical arrays), so
+        sharing the dict makes the per-alias merge fan-out O(1) per group
+        instead of O(aliases) — the measured bank1024 host cost (ROADMAP).
+        A store silently un-shares if :meth:`load_arrays` later rebinds its
+        dict; ``Engine`` re-shares content-equal group members after load.
+        """
+        self._patterns = primary._patterns
+
+    def shares_with(self, other: "PatternStore") -> bool:
+        return self._patterns is other._patterns
+
     def merge_arrays(self, matched: np.ndarray, goodness: np.ndarray,
                      exact: np.ndarray, valid: np.ndarray,
                      q_mask: np.ndarray) -> int:

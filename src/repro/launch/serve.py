@@ -213,7 +213,9 @@ def serve_igpm(arch, steps: int, bank: int, churn: float, hotspot: bool,
 
 def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
                      bank: int, sync_too: bool = False,
-                     checkpoint_dir: str = "", obs=None) -> None:
+                     checkpoint_dir: str = "", obs=None,
+                     control: str = "off", closed_loop: bool = False,
+                     control_episodes: int = 2) -> None:
     """Async serving runtime on a seeded workload scenario (DESIGN.md §6):
     a dedicated ingress thread replays the arrival process against the
     wall clock while the device-executor thread runs double-buffered
@@ -223,18 +225,31 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
     path's policy-only ``--policy-dir`` artifacts). ``--sync-too``
     replays the identical workload
     through the single-threaded reference driver first, so the two
-    tail-latency snapshots print side by side."""
-    from repro.config.base import ObsConfig, RuntimeConfig, ServingConfig
+    tail-latency snapshots print side by side.
+
+    ``--closed-loop`` switches the scenario to ack-driven closed-loop
+    arrivals (subscriber acks throttle the offered rate; the summary is
+    goodput/SLO-violation, DESIGN.md §9). ``--control train|frozen|off``
+    attaches the RL serving controller: ``train`` learns during the run;
+    ``frozen`` pre-trains ``--control-episodes`` closed-loop episodes,
+    freezes the policy, and measures pure greedy inference."""
+    from repro.config.base import (ControlConfig, ObsConfig, RuntimeConfig,
+                                   ServingConfig)
     from repro.core.query import query_zoo
     from repro.runtime import (SCENARIOS, ServingRuntime, VirtualClock,
-                               WallClock, build_workload, run_workload_sync)
+                               WallClock, build_workload, run_closed_loop,
+                               run_workload_sync)
     from repro.serving import MatchServer
 
     if scenario not in SCENARIOS:
         raise SystemExit(f"unknown scenario {scenario!r} "
                          f"(have: {sorted(SCENARIOS)})")
+    if control != "off" and not closed_loop:
+        raise SystemExit("--control wants --closed-loop (the controller's "
+                         "reward is the closed-loop goodput curve)")
     sc = SCENARIOS[scenario](rate=rate, tick_s=0.05, n_ticks=ticks,
-                             n_vertices=min(arch.model.n_max, 1024), seed=0)
+                             n_vertices=min(arch.model.n_max, 1024), seed=0,
+                             closed_loop=closed_loop)
     wl = build_workload(sc, u_max=512)
     print(f"[serve] scenario={scenario} rate={rate:.0f}/s "
           f"ticks={ticks} events={wl.n_events} "
@@ -266,13 +281,41 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
     server = MatchServer(cfg, query_zoo(bank), serving, seed=0)
     run_workload_sync(server, wl, clock=VirtualClock())  # warm
     server.reset()
+    ccfg = ControlConfig(mode="train" if control != "off" else "off")
     rt = ServingRuntime(server,
                         RuntimeConfig(ingress="shed",
-                                      checkpoint_dir=checkpoint_dir),
+                                      checkpoint_dir=checkpoint_dir,
+                                      control=ccfg),
                         clock=WallClock())
+    if control == "frozen":
+        # pre-train on deterministic closed-loop replays, then freeze:
+        # the measured run below is pure greedy inference
+        for ep in range(max(control_episodes, 1)):
+            run_closed_loop(server, wl, clock=VirtualClock(),
+                            controller=rt.controller, knobs=rt.knobs,
+                            ledger=rt.acks)
+            server.reset()
+        print(f"[serve] controller: trained {rt.controller.n_episodes} "
+              f"episodes ({rt.controller.n_decisions} decisions) — frozen")
+        rt.controller.freeze()
+        rt.acks.reset()
     sub = rt.subscribe()
     rt.serve(wl)
     _report("async", server)
+    if closed_loop:
+        cs = rt.closed_summary(wl)
+        print(f"[serve] closed loop: offered={cs['events_offered']:.0f} "
+              f"acked={cs['events_acked']:.0f} "
+              f"goodput={cs['goodput_eps']:.0f} ev/s "
+              f"viol_rate={cs['viol_rate']:.3f} "
+              f"(slo={cs['slo_s'] * 1e3:.0f} ms, "
+              f"throttled={cs['events_throttled']:.0f})")
+        if rt.controller is not None:
+            print(f"[serve] controller[{rt.controller.mode}]: "
+                  f"{rt.controller.n_decisions} decisions, "
+                  f"knobs window={rt.knobs.window} "
+                  f"depth={rt.knobs.queue_depth} "
+                  f"rwr_tol={rt.knobs.rwr_tol:g}")
     deltas = sub.drain()
     new = sum(d.n_new for _, d in deltas)
     print(f"[serve] subscriber saw {len(deltas)} deltas, {new} new patterns"
@@ -320,6 +363,19 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default="",
                     help="igpm --async: drain checkpoints the whole "
                          "engine here via Engine.save")
+    ap.add_argument("--closed-loop", action="store_true",
+                    help="igpm --async: ack-driven closed-loop arrivals — "
+                         "the summary is goodput/SLO-violation "
+                         "(DESIGN.md §9)")
+    ap.add_argument("--control", default="off",
+                    choices=["train", "frozen", "off"],
+                    help="igpm --async --closed-loop: RL serving "
+                         "controller mode (frozen pre-trains "
+                         "--control-episodes, then measures pure greedy "
+                         "inference)")
+    ap.add_argument("--control-episodes", type=int, default=2,
+                    help="igpm --control frozen: closed-loop training "
+                         "episodes before freezing")
     ap.add_argument("--trace", action="store_true",
                     help="igpm: structured tracing (DESIGN.md §8) — "
                          "exports a Perfetto-loadable trace + Prometheus "
@@ -345,7 +401,10 @@ def main() -> None:
         if args.use_async:
             serve_igpm_async(arch, args.scenario, args.rate, args.ticks,
                              args.bank, sync_too=args.sync_too,
-                             checkpoint_dir=args.checkpoint_dir, obs=obs)
+                             checkpoint_dir=args.checkpoint_dir, obs=obs,
+                             control=args.control,
+                             closed_loop=args.closed_loop,
+                             control_episodes=args.control_episodes)
         else:
             serve_igpm(arch, args.steps, args.bank, args.churn,
                        args.hotspot, policy_dir=args.policy_dir,

@@ -1,4 +1,4 @@
-"""Async serving runtime (DESIGN.md §6).
+"""Async serving runtime (DESIGN.md §6, §9).
 
 Threaded ingress + double-buffered device executor around one
 :class:`~repro.serving.server.MatchServer`: the host assembles micro-batch
@@ -7,19 +7,28 @@ and a graceful drain flushes in-flight batches and checkpoints via
 ``Engine.save``. Workload scenarios (Poisson steady state, flash crowd,
 diurnal ramp, churn-heavy) layer seeded arrival processes on the temporal
 stream generators so tail-latency SLOs are measured against reproducible
-traffic.
+traffic. Closed-loop mode (``ScenarioConfig.closed_loop``) adds ack-driven
+arrival modulation: subscribers ack delivered deltas, the ``AckLedger``
+tracks the delivered-lag frontier and goodput/SLO-violation curves, and
+the ``RuntimeKnobs`` indirection is the actuation surface the RL serving
+controller (``repro.control``) drives.
 """
 
 from repro.runtime.clock import Clock, VirtualClock, WallClock
-from repro.runtime.runtime import (PackedBatch, ServingRuntime, Subscription,
-                                   run_workload_sync)
-from repro.runtime.scenarios import (SCENARIOS, ScenarioConfig, Tick,
-                                     Workload, build_workload, churn_heavy,
-                                     diurnal, flash_crowd, poisson)
+from repro.runtime.runtime import (AckLedger, PackedBatch, RuntimeKnobs,
+                                   ServingRuntime, Subscription,
+                                   run_closed_loop, run_workload_sync,
+                                   sim_service_model)
+from repro.runtime.scenarios import (SCENARIOS, ClosedLoopSource,
+                                     ScenarioConfig, Tick, Workload,
+                                     build_workload, churn_heavy, diurnal,
+                                     flash_crowd, poisson)
 
 __all__ = [
     "Clock", "VirtualClock", "WallClock",
-    "PackedBatch", "ServingRuntime", "Subscription", "run_workload_sync",
-    "SCENARIOS", "ScenarioConfig", "Tick", "Workload", "build_workload",
-    "churn_heavy", "diurnal", "flash_crowd", "poisson",
+    "AckLedger", "PackedBatch", "RuntimeKnobs", "ServingRuntime",
+    "Subscription", "run_closed_loop", "run_workload_sync",
+    "sim_service_model",
+    "SCENARIOS", "ClosedLoopSource", "ScenarioConfig", "Tick", "Workload",
+    "build_workload", "churn_heavy", "diurnal", "flash_crowd", "poisson",
 ]

@@ -42,16 +42,17 @@ sync-vs-async benchmarks and the bit-identical tests compare against.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Deque, List, NamedTuple, Optional, Tuple
+from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
 
 from repro.config.base import RuntimeConfig
 from repro.core.graph import DynamicGraph, UpdateBatch
 from repro.obs import Obs
 from repro.runtime.clock import Clock, VirtualClock, WallClock
-from repro.runtime.scenarios import Workload
+from repro.runtime.scenarios import ClosedLoopSource, Workload
 from repro.serving.queue import UpdateQueue
 from repro.serving.server import MatchDelta, MatchServer, ServingStepStats
 
@@ -122,22 +123,52 @@ class _Handoff:
 class Subscription:
     """One subscriber's bounded delta stream (oldest evicted past
     ``depth``; evictions counted — a slow consumer never stalls the
-    executor)."""
+    executor).
 
-    def __init__(self, query: Optional[str], depth: int):
+    An *acking* subscription (``subscribe(ack=True)``) additionally
+    reports consumption back to the runtime's :class:`AckLedger`: the
+    consumer calls :meth:`ack` exactly once per delivered item, and the
+    runtime's delivered-lag frontier (which closed-loop arrival
+    modulation reads) only advances once every acking subscriber has
+    acked a batch's deltas. Evicting an undelivered item forfeits its
+    ack automatically — a consumer too slow for its buffer still lets
+    the frontier move (the loss is already counted in ``n_evicted``)."""
+
+    def __init__(self, query: Optional[str], depth: int,
+                 ledger: Optional["AckLedger"] = None,
+                 sub_id: int = -1, clock: Optional[Clock] = None):
         self.query = query
         self._items: Deque[Tuple[int, MatchDelta]] = deque()
         self.depth = depth
         self.n_evicted = 0
         self._cv = threading.Condition()
+        self._ledger = ledger
+        self.sub_id = sub_id
+        self._clock = clock
+
+    @property
+    def acking(self) -> bool:
+        return self._ledger is not None
 
     def _put(self, step: int, delta: MatchDelta) -> None:
+        evicted = None
         with self._cv:
             if len(self._items) >= self.depth:
-                self._items.popleft()
+                evicted = self._items.popleft()
                 self.n_evicted += 1
             self._items.append((step, delta))
             self._cv.notify_all()
+        if evicted is not None and self._ledger is not None:
+            self._ledger.ack(self.sub_id, evicted[0], self._clock.now())
+
+    def ack(self, item: Tuple[int, MatchDelta]) -> None:
+        """Acknowledge one delivered ``(step, delta)`` item (acking
+        subscriptions only; exactly once per item — a double ack
+        raises)."""
+        if self._ledger is None:
+            raise ValueError("not an acking subscription "
+                             "(subscribe(ack=True))")
+        self._ledger.ack(self.sub_id, item[0], self._clock.now())
 
     def get(self, timeout: float = 1.0) -> Optional[Tuple[int, MatchDelta]]:
         with self._cv:
@@ -150,6 +181,155 @@ class Subscription:
             out = list(self._items)
             self._items.clear()
             return out
+
+
+class AckLedger:
+    """Delivered-delta ack accounting — the closed loop's sensor
+    (DESIGN.md §9).
+
+    The executor registers each executed batch with :meth:`deliver`
+    (``expected`` maps acking-subscriber id → deltas delivered to it; an
+    empty map means no acking subscribers and the batch auto-completes —
+    prompt-consumer semantics, what the closed-loop drivers use). A batch
+    *completes* when every expected ack arrived; completion
+
+      * advances the **frontier** — the newest nominal arrival stamp all
+        of whose work is consumed. Delivered lag is ``now - frontier``:
+        it grows monotonically while an executor stalls and resets only
+        as completions catch up, which is exactly the signal the
+        closed-loop arrival modulation and the controller read.
+      * scores the batch's events against the ack-latency SLO
+        (``n_good`` / ``n_viol`` — the goodput curve), and records
+        ``ack_lag`` latency samples when a telemetry sink is attached.
+
+    Thread-safe; times are passed in (the ledger owns no clock).
+    """
+
+    def __init__(self, slo_s: float = 0.25):
+        self.slo_s = slo_s
+        self.telemetry = None          # optional; set by the runtime
+        self._lock = threading.Lock()
+        self._pending: Dict[int, Tuple[Tuple[float, ...], Dict[int, int]]] = {}
+        self._frontier = 0.0
+        self.n_delivered = 0           # deltas handed to acking subscribers
+        self.n_acked = 0               # acks received (incl. forfeits)
+        self.n_events_acked = 0        # events in completed batches
+        self.n_good = 0                # ... acked within slo_s of arrival
+        self.n_viol = 0                # ... acked late (SLO violations)
+
+    def deliver(self, step: int, arrivals: Tuple[float, ...], t: float,
+                expected: Dict[int, int]) -> None:
+        with self._lock:
+            self.n_delivered += sum(expected.values())
+            if expected:
+                self._pending[step] = (arrivals, dict(expected))
+            else:
+                self._complete(arrivals, t)
+
+    def ack(self, sub_id: int, step: int, t: float) -> None:
+        with self._lock:
+            entry = self._pending.get(step)
+            if entry is None or entry[1].get(sub_id, 0) <= 0:
+                raise ValueError(
+                    f"double (or unknown) ack: sub {sub_id} step {step}")
+            arrivals, left = entry
+            left[sub_id] -= 1
+            self.n_acked += 1
+            if all(v == 0 for v in left.values()):
+                del self._pending[step]
+                self._complete(arrivals, t)
+
+    def _complete(self, arrivals: Tuple[float, ...], t: float) -> None:
+        for a in arrivals:
+            if t - a <= self.slo_s:
+                self.n_good += 1
+            else:
+                self.n_viol += 1
+        self.n_events_acked += len(arrivals)
+        if arrivals:
+            self._frontier = max(self._frontier, max(arrivals))
+        if self.telemetry is not None and arrivals:
+            self.telemetry.record_latency("ack_lag",
+                                          *(t - a for a in arrivals))
+
+    def reset(self) -> None:
+        """Clear all accounting (train-then-freeze runs reuse one ledger
+        across episodes and measure only the final frozen run)."""
+        with self._lock:
+            self._pending.clear()
+            self._frontier = 0.0
+            self.n_delivered = self.n_acked = 0
+            self.n_events_acked = self.n_good = self.n_viol = 0
+
+    def lag(self, now: float, pending: int = 1) -> float:
+        """Delivered lag at ``now``. ``pending`` is the caller's count of
+        arrived-but-undelivered work; when nothing is pending anywhere
+        the frontier snaps to ``now`` (an idle server has zero lag)."""
+        with self._lock:
+            if pending == 0 and not self._pending:
+                self._frontier = max(self._frontier, now)
+            return max(now - self._frontier, 0.0)
+
+    @property
+    def outstanding(self) -> int:
+        """Delivered-but-uncompleted batches."""
+        with self._lock:
+            return len(self._pending)
+
+    def summary(self, duration_s: float) -> Dict[str, float]:
+        """Goodput / SLO-violation rollup over a run of ``duration_s``."""
+        with self._lock:
+            acked = max(self.n_events_acked, 1)
+            dur = max(duration_s, 1e-9)
+            return {
+                "events_acked": float(self.n_events_acked),
+                "goodput_eps": self.n_good / dur,
+                "viol_eps": self.n_viol / dur,
+                "viol_rate": self.n_viol / acked,
+                "slo_s": self.slo_s,
+            }
+
+
+class RuntimeKnobs:
+    """The live runtime knobs — the controller's actuators (DESIGN.md §9).
+
+    The ingress reads ``window`` at every assembly; ``queue_depth``
+    writes through to the server's ``UpdateQueue`` bound (the shed
+    threshold); ``rwr_tol`` swaps the engine config (values come from a
+    bounded discrete ladder — ``rwr_tol`` is a static jit argument, so
+    each distinct value compiles once and caches). With the controller
+    off nothing ever writes these and every value is exactly the static
+    config's — the ``--control off`` bitwise-identity pin.
+    """
+
+    def __init__(self, server: MatchServer):
+        self._server = server
+        self.window = server.serving.microbatch_window
+        self.queue_depth = server.queue.depth
+        self.rwr_tol = server.engine.cfg.rwr_tol
+
+    def set_window(self, window: int) -> None:
+        # u_max bounds the packed-batch arrays (static jit shapes)
+        self.window = max(1, min(int(window), self._server.u_max))
+
+    def set_queue_depth(self, depth: int) -> None:
+        self.queue_depth = max(1, int(depth))
+        self._server.queue.depth = self.queue_depth
+
+    def set_rwr_tol(self, tol: float) -> None:
+        self.rwr_tol = float(tol)
+        eng = self._server.engine
+        if eng.cfg.rwr_tol != self.rwr_tol:
+            eng.cfg = dataclasses.replace(eng.cfg, rwr_tol=self.rwr_tol)
+
+    def apply(self) -> None:
+        """Re-assert the knob values on the server (``MatchServer.reset``
+        rebinds the queue; a fresh run must start from the knob state,
+        not the orphaned pre-reset queue's)."""
+        self._server.queue.depth = self.queue_depth
+        if self._server.engine.cfg.rwr_tol != self.rwr_tol:
+            self._server.engine.cfg = dataclasses.replace(
+                self._server.engine.cfg, rwr_tol=self.rwr_tol)
 
 
 class _StampedIngress:
@@ -242,13 +422,33 @@ class ServingRuntime:
         self._graph: Optional[DynamicGraph] = None
         self._exc: List[BaseException] = []
         self.n_checkpoints = 0
+        # closed-loop plumbing (DESIGN.md §9): knob indirection + ack
+        # accounting always exist (inert without acking subscribers /
+        # closed-loop workloads); the controller only when asked for —
+        # mode='off' constructs NOTHING that could perturb the runtime
+        self.knobs = RuntimeKnobs(server)
+        self.acks = AckLedger(slo_s=self.rcfg.control.slo_e2e_s)
+        self._last_service_s = 0.0     # clock-time of the last device step
+        self._n_batches = 0
+        self.controller = None
+        if self.rcfg.control.mode != "off":
+            from repro.control import ServingController  # avoid cycle
+            self.controller = ServingController(
+                server, self.knobs, self.acks, self.rcfg.control)
+            server.engine.control = self.controller
 
     # -- subscriptions --------------------------------------------------------
 
-    def subscribe(self, query: Optional[str] = None) -> Subscription:
+    def subscribe(self, query: Optional[str] = None,
+                  ack: bool = False) -> Subscription:
         """Stream ``(step, MatchDelta)`` pairs; ``query`` filters by
-        standing-query name (None = all)."""
-        sub = Subscription(query, self.rcfg.subscriber_depth)
+        standing-query name (None = all). ``ack=True`` makes it an
+        *acking* subscription: the consumer must :meth:`Subscription.ack`
+        each item exactly once, and the runtime's delivered-lag frontier
+        waits on it (closed-loop semantics)."""
+        sub = Subscription(query, self.rcfg.subscriber_depth,
+                           ledger=self.acks if ack else None,
+                           sub_id=len(self._subs), clock=self.clock)
         self._subs.append(sub)
         return sub
 
@@ -263,6 +463,12 @@ class ServingRuntime:
         # would silently desync from the one step_packed reads)
         self._ingress = _StampedIngress(self.server.queue)
         self.telemetry = self.server.telemetry
+        self.knobs.apply()  # re-assert knob state on the (maybe new) queue
+        if self.controller is not None:
+            self.controller.begin_episode()
+        if workload.scenario.closed_loop:
+            self.acks.slo_s = workload.scenario.ack_slo_s
+            self.acks.telemetry = self.telemetry
         self._graph = workload.graph
         t_in = threading.Thread(target=self._guard, name="rt-ingress",
                                 args=(self._ingress_main, workload))
@@ -331,9 +537,11 @@ class ServingRuntime:
 
     def _flush(self, block: bool) -> None:
         """Assemble pending events into packed batches while the handoff
-        (and lockstep policy) allows."""
+        (and lockstep policy) allows. Reads the micro-batch window from
+        the live knobs (static config value unless a controller moved
+        it); the controller's decision hook runs here, on the ingress
+        thread, at batch boundaries."""
         obs = self.obs
-        window = self.server.serving.microbatch_window
         while len(self._ingress) > 0 and not self._stop_now.is_set():
             # handoff occupancy: in lockstep this span IS the time the
             # ingress spent blocked on a busy executor
@@ -342,34 +550,71 @@ class ServingRuntime:
             if not ok:
                 return
             with obs.span("ingress/assemble", pending=len(self._ingress)):
-                item = self._ingress.assemble(window, self.server.u_max,
+                item = self._ingress.assemble(self.knobs.window,
+                                              self.server.u_max,
                                               self.clock.now())
             if item is None:
                 return
             obs.instant("ingress/packed", batch=item.batch_id,
                         n_events=item.n_events)
             self._handoff.push(item)
+            self._n_batches += 1
+            if self.controller is not None:
+                self.controller.on_batch(item.n_events,
+                                         self._last_service_s,
+                                         self.clock.now())
 
     def _ingress_main(self, workload: Workload) -> None:
         lockstep = self.rcfg.ingress == "lockstep"
-        for tick in workload.ticks:
-            if self._stop_ingest.is_set():
-                break
-            self.clock.wait_until(tick.t, self._stop_ingest)
-            if self._stop_ingest.is_set():
-                break
-            with self.obs.span("ingress/offer", n_events=len(tick.events)):
-                for ev in tick.events:
-                    # nominal arrival stamp: open-loop arrivals, so a late
-                    # ingress can't hide queueing delay (no coordinated
-                    # omission)
-                    self._ingress.offer(ev, tick.t)
-            self._flush(block=lockstep)
+        sc = workload.scenario
+        if sc.closed_loop:
+            # closed loop: ticks are generated online, throttled by the
+            # delivered-lag frontier (clients back off a laggy server)
+            src = ClosedLoopSource(workload)
+            self.closed_src = src
+            # the env reads throttle deltas off the ledger (lost demand
+            # is part of the controller's reward) — same binding
+            # run_closed_loop uses
+            self.acks.closed_src = src
+            for i in range(sc.n_ticks):
+                if self._stop_ingest.is_set():
+                    break
+                self.clock.wait_until(i * sc.tick_s, self._stop_ingest)
+                if self._stop_ingest.is_set():
+                    break
+                lag = self.acks.lag(
+                    self.clock.now(),
+                    pending=len(self._ingress) + len(self._handoff))
+                events = src.emit(i, lag)
+                with self.obs.span("ingress/offer", n_events=len(events),
+                                   lag_ms=1e3 * lag):
+                    for ev in events:
+                        self._ingress.offer(ev, i * sc.tick_s)
+                self._flush(block=lockstep)
+                if src.exhausted:
+                    break
+        else:
+            for tick in workload.ticks:
+                if self._stop_ingest.is_set():
+                    break
+                self.clock.wait_until(tick.t, self._stop_ingest)
+                if self._stop_ingest.is_set():
+                    break
+                with self.obs.span("ingress/offer",
+                                   n_events=len(tick.events)):
+                    for ev in tick.events:
+                        # nominal arrival stamp: open-loop arrivals, so a
+                        # late ingress can't hide queueing delay (no
+                        # coordinated omission)
+                        self._ingress.offer(ev, tick.t)
+                self._flush(block=lockstep)
         # graceful drain: everything still pending goes through, with
         # blocking pushes (the executor is consuming; stop(drain=False)
         # interrupts via _stop_now)
         if not self._stop_now.is_set():
             self._flush(block=True)
+        if self.controller is not None and not self._stop_now.is_set():
+            self.controller.end_episode(self.clock.now())
         self._handoff.close()
 
     def _executor_main(self) -> None:
@@ -384,16 +629,31 @@ class ServingRuntime:
                     break
                 continue
             with obs.context(batch=item.batch_id):
+                t_exec0 = self.clock.now()
                 with obs.span("executor/step", n_events=item.n_events):
                     g, st = srv.step_packed(g, item.upd, item.n_events)
                 self._graph = g
                 t_done = self.clock.now()
+                self._last_service_s = t_done - t_exec0
                 _record_batch_latencies(self.telemetry, item, t_done)
                 if obs.enabled and item.arrivals:
                     obs.observe_e2e(1e3 * (t_done - min(item.arrivals)))
                 with obs.span("executor/fanout", n_deltas=len(st.deltas),
                               n_subs=len(self._subs)):
                     self.stats.append(st)
+                    # register expected acks BEFORE fan-out: an acking
+                    # subscriber (or its eviction forfeit) may respond
+                    # the moment an item lands in its buffer
+                    expected: Dict[int, int] = {}
+                    for sub in self._subs:
+                        if sub.acking:
+                            n = sum(1 for d in st.deltas
+                                    if sub.query is None
+                                    or sub.query == d.query)
+                            if n:
+                                expected[sub.sub_id] = n
+                    self.acks.deliver(st.step, item.arrivals, t_done,
+                                      expected)
                     for sub in self._subs:
                         for d in st.deltas:
                             if sub.query is None or sub.query == d.query:
@@ -408,6 +668,16 @@ class ServingRuntime:
             # stores) via Engine.save — a restarted runtime resumes here
             srv.save(self.rcfg.checkpoint_dir)
             self.n_checkpoints += 1
+
+    def closed_summary(self, workload: Workload) -> Dict[str, float]:
+        """Goodput / SLO-violation rollup of a closed-loop run (plus the
+        source's offered/throttled accounting when available)."""
+        out = self.acks.summary(workload.scenario.duration_s)
+        src = getattr(self, "closed_src", None)
+        if src is not None:
+            out["events_offered"] = float(src.n_offered)
+            out["events_throttled"] = float(src.n_throttled)
+        return out
 
 
 def run_workload_sync(server: MatchServer, workload: Workload,
@@ -469,3 +739,98 @@ def run_workload_sync(server: MatchServer, workload: Workload,
         _record_batch_latencies(tel, item, clock.now())
         stats.append(st)
     return g, stats
+
+
+def sim_service_model(base_s: float = 0.15, per_event_s: float = 6.6e-4):
+    """Deterministic per-batch service-time model for simulated closed
+    loops: ``t(batch) = base_s + per_event_s · n_events`` — a fixed
+    per-step engine cost (shared sweeps over the whole graph) plus a
+    per-event increment. The defaults are calibrated from wall-clock
+    measurements of the n=512 serving_bench config on the committed
+    container (window-256 capacity ≈ 800 events/s, window-32 ≈ 185/s);
+    see ``benchmarks/serving_bench.py`` for why the control rows run
+    under the model instead of the wall clock."""
+    def model(n_events: int) -> float:
+        return base_s + per_event_s * max(int(n_events), 0)
+    return model
+
+
+def run_closed_loop(server: MatchServer, workload: Workload,
+                    clock: Optional[Clock] = None,
+                    controller=None,
+                    knobs: Optional[RuntimeKnobs] = None,
+                    ledger: Optional[AckLedger] = None,
+                    service_model=None
+                    ) -> Tuple[DynamicGraph, List[ServingStepStats],
+                               AckLedger]:
+    """Single-threaded closed-loop reference driver (DESIGN.md §9).
+
+    Ticks are generated online by a :class:`~repro.runtime.scenarios.
+    ClosedLoopSource` — arrivals throttle on delivered lag — and every
+    executed batch is delivered and immediately acked (prompt-consumer
+    semantics, the ``expected={}`` auto-ack path of :class:`AckLedger`).
+    The optional ``controller`` (a ``repro.control.ServingController``)
+    gets the same ``on_batch``/``end_episode`` hooks the threaded
+    runtime's ingress gives it, so training and deterministic evaluation
+    both run here: under a ``VirtualClock`` the whole run — lag sequence,
+    Poisson draws, observations, frozen-policy actions — is a pure
+    function of the seeds, which is what the replay-repeatability tests
+    pin. Under a ``WallClock`` lag is real and the goodput/SLO summary
+    (returned via the ledger) is the closed-loop benchmark metric.
+
+    ``service_model`` (optional, requires a :class:`VirtualClock`): a
+    ``n_events -> seconds`` callable (e.g. :func:`sim_service_model`);
+    after each executed batch the clock is advanced by the modeled
+    service time, so queueing dynamics — backlog, delivered lag,
+    throttling, SLO violations — unfold deterministically against a
+    fixed service-rate model instead of this machine's noisy wall
+    clock. That is what the control benchmark gates on: scores become
+    a pure function of the seeds and the model, reproducible across
+    runs and machines.
+
+    Returns ``(graph, stats, ledger)``.
+    """
+    sc = workload.scenario
+    clock = clock or VirtualClock()
+    if service_model is not None and not isinstance(clock, VirtualClock):
+        raise ValueError("service_model requires a VirtualClock (the "
+                         "model drives time; a wall clock would fight it)")
+    knobs = knobs or RuntimeKnobs(server)
+    knobs.apply()
+    if controller is not None:
+        controller.begin_episode()
+    if ledger is None:
+        ledger = AckLedger(slo_s=sc.ack_slo_s)
+    ledger.telemetry = server.telemetry
+    src = ClosedLoopSource(workload)
+    ledger.closed_src = src
+    ingress = _StampedIngress(server.queue)
+    never = threading.Event()
+    g = workload.graph
+    stats: List[ServingStepStats] = []
+    i = 0
+    while i < sc.n_ticks or len(ingress) > 0:
+        if len(ingress) == 0 and i < sc.n_ticks:
+            clock.wait_until(i * sc.tick_s, never)
+        now = clock.now()
+        while i < sc.n_ticks and i * sc.tick_s <= now:
+            lag = ledger.lag(clock.now(), pending=len(ingress))
+            for ev in src.emit(i, lag):
+                ingress.offer(ev, i * sc.tick_s)
+            i += 1
+        if len(ingress) == 0:
+            continue
+        item = ingress.assemble(knobs.window, server.u_max, clock.now())
+        t0 = clock.now()
+        g, st = server.step_packed(g, item.upd, item.n_events)
+        if service_model is not None:
+            clock.advance_to(t0 + float(service_model(item.n_events)))
+        t1 = clock.now()
+        _record_batch_latencies(server.telemetry, item, t1)
+        ledger.deliver(st.step, item.arrivals, t1, expected={})
+        stats.append(st)
+        if controller is not None:
+            controller.on_batch(item.n_events, t1 - t0, clock.now())
+    if controller is not None:
+        controller.end_episode(clock.now())
+    return g, stats, ledger

@@ -59,6 +59,15 @@ class ScenarioConfig:
     graph_kind: str = "sparse_dense"
     churn: float = 0.0
     hotspot: bool = False
+    # closed loop (DESIGN.md §9): subscribers ACK delivered MatchDeltas and
+    # the arrival process throttles on delivered lag — clients back off a
+    # laggy server, so the run measures goodput/SLO-violation curves
+    # instead of open-loop tails. ``lag_ref_s`` is the delivered lag at
+    # which the offered rate halves (rate / (1 + lag/lag_ref));
+    # ``ack_slo_s`` is the ack-latency SLO goodput is counted against.
+    closed_loop: bool = False
+    lag_ref_s: float = 0.2
+    ack_slo_s: float = 0.25
 
     @property
     def duration_s(self) -> float:
@@ -140,6 +149,56 @@ def build_workload(sc: ScenarioConfig, n_max: int | None = None,
                           events=flat[cursor:cursor + take]))
         cursor += take
     return Workload(sc, spec, stream, ticks, cursor)
+
+
+class ClosedLoopSource:
+    """Lag-throttled event source for closed-loop runs (DESIGN.md §9).
+
+    Draws each tick's arrival count ``Poisson(rate_i · tick_s · m(lag))``
+    online, where ``m(lag) = 1 / (1 + lag / lag_ref_s)`` models clients
+    backing off a laggy server (delivered lag is the runtime's ack
+    frontier, see ``repro.runtime.AckLedger``). Events come from the SAME
+    deterministic pool the open-loop workload deals out, in the same
+    stream order — throttling only changes how much of it is offered, so
+    a closed-loop run is comparable to its open-loop twin. Exhausting the
+    pool ends emission (``exhausted``).
+
+    Determinism: the Poisson draw sequence is a pure function of the seed
+    and the lag sequence; under a ``VirtualClock`` the lag sequence is
+    deterministic, so whole closed-loop replays are too.
+    """
+
+    def __init__(self, workload: Workload):
+        sc = workload.scenario
+        if not sc.closed_loop:
+            raise ValueError(
+                f"scenario {sc.name!r} is not closed-loop "
+                "(build it with closed_loop=True)")
+        self.sc = sc
+        self._rates = _tick_rates(sc)
+        self._pool = [ev for tick in workload.ticks for ev in tick.events]
+        self._cursor = 0
+        self._rng = np.random.default_rng(sc.seed + 2)
+        self.n_offered = 0
+        self.n_throttled = 0  # events the modulation held back
+
+    @property
+    def exhausted(self) -> bool:
+        return self._cursor >= len(self._pool)
+
+    def emit(self, i: int, lag_s: float) -> List[UpdateEvent]:
+        """Events arriving in tick ``i`` given current delivered lag."""
+        lam = float(self._rates[i % len(self._rates)])
+        mult = 1.0 / (1.0 + max(float(lag_s), 0.0) / self.sc.lag_ref_s)
+        k = int(self._rng.poisson(lam * mult))
+        # demand held back by the modulation itself (NOT Poisson noise):
+        # deterministic given the lag, and exactly 0 at zero lag — so
+        # virtual-clock runs, where lag is always 0, count none
+        self.n_throttled += int(round(lam * (1.0 - mult)))
+        take = self._pool[self._cursor:self._cursor + k]
+        self._cursor += len(take)
+        self.n_offered += len(take)
+        return take
 
 
 # -- the shipped scenario shapes ----------------------------------------------

@@ -36,7 +36,8 @@ import numpy as np
 
 # channels whose tails matter more than their memory: give them a window
 # where p999 can become credible (>= 1000 samples resident)
-DEFAULT_CHANNEL_WINDOWS: Dict[str, int] = {"e2e": 4096, "queue_wait": 4096}
+DEFAULT_CHANNEL_WINDOWS: Dict[str, int] = {"e2e": 4096, "queue_wait": 4096,
+                                           "ack_lag": 4096}
 
 # snapshot() keys owned by Telemetry itself; free-form counters may not
 # shadow them (satellite: `snap.update(self.counters)` used to clobber)

@@ -1,0 +1,234 @@
+"""Closed-loop RL serving controller tests (DESIGN.md §9).
+
+Pins the control subsystem's acceptance contract:
+
+  * determinism — under a ``VirtualClock`` a closed-loop run (lag
+    sequence, Poisson arrival draws, controller observations, actions)
+    is a pure function of the seeds: replays agree decision-for-decision;
+  * ``--control off`` identity — a runtime with the controller off
+    produces pattern stores and a graph BIT-IDENTICAL to the sync
+    reference replay: the control plumbing (knobs, ack ledger) is inert
+    until a controller writes through it;
+  * frozen-policy replay — a trained-then-frozen policy replays the same
+    actions and the same stores across runs (greedy inference consumes
+    no RNG);
+  * ack accounting — every delivered delta is acked exactly once (double
+    acks raise), eviction forfeits still complete batches, and delivered
+    lag grows monotonically while an executor stalls;
+  * persistence — the controller rides ``Engine.save/load`` next to the
+    PEM agent and round-trips learner + knob state.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config.base import (ControlConfig, IGPMConfig, RuntimeConfig,
+                               ServingConfig)
+from repro.control import ACTION_NAMES, N_ACTIONS, OBS_DIM, ServingController
+from repro.core.query import query_zoo
+from repro.runtime import (ServingRuntime, VirtualClock, build_workload,
+                           flash_crowd, run_closed_loop, run_workload_sync)
+from repro.runtime.runtime import AckLedger, RuntimeKnobs
+from repro.serving import MatchServer
+
+
+def _cfg(**kw):
+    base = dict(n_max=128, e_max=8192, ell_width=8, rwr_iters=6,
+                rwr_iters_incremental=2, top_k_patterns=4,
+                init_community_size=32, backend="coo", rwr_tol=1e-4)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _server(**serving_kw):
+    serving_kw.setdefault("microbatch_window", 64)
+    return MatchServer(_cfg(), query_zoo(2), ServingConfig(**serving_kw),
+                       seed=0)
+
+
+def _closed_workload(**kw):
+    kw.setdefault("rate", 2000.0)
+    kw.setdefault("tick_s", 0.01)
+    kw.setdefault("n_ticks", 8)
+    kw.setdefault("n_vertices", 128)
+    kw.setdefault("seed", 3)
+    kw.setdefault("closed_loop", True)
+    return build_workload(flash_crowd(**kw), u_max=256)
+
+
+def _controlled_run(ccfg, agent_state=None):
+    srv = _server()
+    knobs = RuntimeKnobs(srv)
+    ledger = AckLedger(slo_s=0.25)
+    ctl = ServingController(srv, knobs, ledger, ccfg)
+    if agent_state is not None:
+        ctl.agent.load_state_dict(agent_state)
+    wl = _closed_workload()
+    g, stats, _ = run_closed_loop(srv, wl, clock=VirtualClock(),
+                                  controller=ctl, knobs=knobs,
+                                  ledger=ledger)
+    return srv, ctl, g, stats
+
+
+# -- determinism --------------------------------------------------------------
+
+@pytest.mark.slow
+def test_env_observation_and_actions_deterministic():
+    """Two closed-loop training runs under a VirtualClock replay the same
+    observation/action/reward history — the whole loop (Poisson draws,
+    lag, telemetry-derived obs, ε-greedy draws) is seed-determined."""
+    ccfg = ControlConfig(mode="train", decide_every=2)
+    runs = [_controlled_run(ccfg) for _ in range(2)]
+    h0, h1 = runs[0][1].history, runs[1][1].history
+    assert len(h0) > 0
+    assert h0 == h1
+    for obs, action, reward in h0:
+        assert len(obs) == OBS_DIM
+        assert 0 <= action < N_ACTIONS
+        assert all(0.0 <= x <= 1.0 for x in obs)  # bounded by construction
+        assert -max(ccfg.viol_weight, 1.0) <= reward <= 1.0
+
+
+@pytest.mark.slow
+def test_control_off_is_bitwise_identical_to_sync_reference():
+    """The control-plane plumbing (knobs, ack ledger) must be inert with
+    the controller off: the lockstep runtime still produces stores and a
+    graph bit-identical to the single-threaded reference driver."""
+    wl = build_workload(flash_crowd(rate=2000.0, tick_s=0.01, n_ticks=8,
+                                    n_vertices=128, seed=3), u_max=256)
+    ref = _server()
+    g_ref, st_ref = run_workload_sync(ref, wl, clock=VirtualClock())
+
+    srv = _server()
+    rcfg = RuntimeConfig(ingress="lockstep",
+                         control=ControlConfig(mode="off"))
+    rt = ServingRuntime(srv, rcfg, clock=VirtualClock())
+    st_rt = rt.serve(wl)
+    assert rt.controller is None
+
+    assert [s.n_events for s in st_rt] == [s.n_events for s in st_ref]
+    for i in range(len(ref.stores)):
+        assert srv.stores[i]._patterns == ref.stores[i]._patterns
+    for f in g_ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g_ref, f)),
+            np.asarray(getattr(rt.graph, f)), err_msg=f)
+
+
+@pytest.mark.slow
+def test_frozen_policy_replay_is_repeatable():
+    """Train on the closed loop, freeze, then replay twice: identical
+    action histories AND identical pattern stores."""
+    train_cfg = ControlConfig(mode="train", decide_every=2)
+    _, trained, _, _ = _controlled_run(train_cfg)
+    frozen_cfg = dataclasses.replace(train_cfg, mode="frozen")
+    state = trained.agent.state_dict()
+    runs = [_controlled_run(frozen_cfg, agent_state=state)
+            for _ in range(2)]
+    h0, h1 = runs[0][1].history, runs[1][1].history
+    assert len(h0) > 0
+    assert h0 == h1
+    assert runs[0][1].losses == [] and runs[1][1].losses == []
+    stores0 = [dict(s._patterns) for s in runs[0][0].stores]
+    stores1 = [dict(s._patterns) for s in runs[1][0].stores]
+    assert stores0 == stores1
+
+
+# -- ack accounting -----------------------------------------------------------
+
+@pytest.mark.slow
+def test_every_delivered_delta_acked_exactly_once():
+    """An acking subscriber acks each delivered item exactly once; by
+    drain-time the ledger balances (nothing outstanding) and any second
+    ack raises."""
+    wl = _closed_workload()
+    srv = _server()
+    rt = ServingRuntime(srv, RuntimeConfig(ingress="lockstep"),
+                        clock=VirtualClock())
+    sub = rt.subscribe(ack=True)
+    rt.serve(wl)
+    items = sub.drain()
+    for item in items:
+        sub.ack(item)
+    assert rt.acks.n_delivered == len(items) + sub.n_evicted
+    assert rt.acks.n_acked == rt.acks.n_delivered
+    assert rt.acks.outstanding == 0
+    assert rt.acks.n_events_acked > 0
+    if items:
+        with pytest.raises(ValueError, match="double"):
+            sub.ack(items[-1])
+
+
+def test_lag_monotone_while_executor_stalls():
+    """Delivered lag grows exactly with the clock while a batch waits for
+    its ack (a stalled consumer), and collapses once the ack lands."""
+    led = AckLedger(slo_s=0.1)
+    led.deliver(step=0, arrivals=(1.0,), t=1.0, expected={0: 1})
+    lags = [led.lag(t, pending=0) for t in (1.0, 2.0, 3.5, 10.0)]
+    assert lags == sorted(lags)
+    assert lags[-1] == pytest.approx(10.0)  # frontier still at its origin
+    led.ack(0, 0, t=10.0)
+    assert led.n_viol == 1 and led.n_good == 0
+    # completed + idle: the frontier snaps to now, lag is zero again
+    assert led.lag(11.0, pending=0) == 0.0
+    with pytest.raises(ValueError, match="double"):
+        led.ack(0, 0, t=10.5)
+
+
+def test_eviction_forfeits_ack_and_completes_batch():
+    """A slow acking consumer whose buffer overflows forfeits the evicted
+    item's ack automatically — the batch still completes."""
+    wl = _closed_workload()
+    srv = _server()
+    rcfg = RuntimeConfig(ingress="lockstep", subscriber_depth=1)
+    rt = ServingRuntime(srv, rcfg, clock=VirtualClock())
+    sub = rt.subscribe(ack=True)
+    rt.serve(wl)  # consumer never drains mid-run: evictions forfeit
+    assert sub.n_evicted > 0
+    for item in sub.drain():
+        sub.ack(item)
+    assert rt.acks.outstanding == 0
+    assert rt.acks.n_acked == rt.acks.n_delivered
+
+
+# -- persistence --------------------------------------------------------------
+
+@pytest.mark.slow
+def test_controller_rides_engine_checkpoint(tmp_path):
+    """The controller's learner + knob state round-trips through
+    MatchServer.save/load next to the PEM agent."""
+    wl = _closed_workload()
+    ccfg = ControlConfig(mode="train", decide_every=2)
+    srv = _server()
+    rt = ServingRuntime(srv, RuntimeConfig(ingress="lockstep", control=ccfg),
+                        clock=VirtualClock())
+    rt.serve(wl)
+    ctl = rt.controller
+    assert ctl is not None and ctl.n_decisions > 0
+    assert srv.engine.control is ctl
+    srv.save(str(tmp_path))
+
+    srv2 = _server()
+    rt2 = ServingRuntime(srv2,
+                         RuntimeConfig(ingress="lockstep", control=ccfg),
+                         clock=VirtualClock())
+    ctl2 = rt2.controller
+    srv2.load(wl.graph, str(tmp_path))
+    assert ctl2.n_decisions == ctl.n_decisions
+    assert ctl2.n_episodes == ctl.n_episodes
+    assert ctl2.env.knob_state() == ctl.env.knob_state()
+    for k, a in ctl.agent.params.items():
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(ctl2.agent.params[k]),
+                                      err_msg=k)
+    np.testing.assert_array_equal(ctl.agent.replay.obs,
+                                  ctl2.agent.replay.obs)
+    assert ctl2.agent.replay.size == ctl.agent.replay.size
+
+
+def test_action_space_is_the_documented_ladder():
+    assert ACTION_NAMES[0] == "noop"
+    assert N_ACTIONS == len(ACTION_NAMES) == 7
+    assert OBS_DIM == 12

@@ -1,8 +1,10 @@
-"""DQN learns a trivial contextual bandit; replay buffer mechanics."""
+"""DQN learns a trivial contextual bandit; replay buffer mechanics;
+double-DQN / n-step upgrades (DESIGN.md §9) and checkpoint validation."""
 
 import numpy as np
+import pytest
 
-from repro.config.base import IGPMConfig
+from repro.config.base import DQNSpec, IGPMConfig
 from repro.core.dqn import DQNAgent, ReplayBuffer, Transition
 
 
@@ -12,9 +14,11 @@ def test_replay_ring_buffer():
         buf.push(Transition(np.array([i, i], np.float32), i % 2, float(i),
                             np.array([i + 1, i + 1], np.float32), False))
     assert buf.size == 4
-    obs, act, rew, nxt, done = buf.sample(8)
+    obs, act, rew, nxt, done, disc = buf.sample(8)
     assert obs.shape == (8, 2)
     assert rew.min() >= 2.0  # oldest two evicted
+    assert disc.shape == (8,)
+    np.testing.assert_allclose(disc, 0.9)  # default gamma rides every push
 
 
 def test_dqn_learns_bandit():
@@ -36,3 +40,107 @@ def test_epsilon_one_is_uniform():
     agent = DQNAgent(cfg, seed=0)
     acts = {agent.act(np.zeros(2, np.float32)) for _ in range(50)}
     assert acts == {0, 1}
+
+
+def test_igpm_config_maps_to_vanilla_spec():
+    """Constructing from IGPMConfig keeps the paper's 1-step vanilla DQN."""
+    agent = DQNAgent(IGPMConfig(), seed=0)
+    assert agent.spec.double is False
+    assert agent.spec.n_step == 1
+
+
+def test_double_dqn_learns_bandit():
+    spec = DQNSpec(obs_dim=2, n_actions=3, hidden=(8, 8), epsilon=0.3,
+                   gamma=0.0, lr=5e-2, replay_capacity=256, replay_batch=16,
+                   target_update_every=5, double=True, n_step=1)
+    agent = DQNAgent(spec, seed=1)
+    obs = np.array([0.5, -0.5], np.float32)
+    for _ in range(300):
+        a = agent.act(obs)
+        agent.observe(Transition(obs, a, 1.0 if a == 2 else 0.0, obs, True))
+    q = agent.q_values(obs[None])[0]
+    assert int(np.argmax(q)) == 2
+
+
+def test_nstep_aggregation_rewards_and_discounts():
+    """A 3-step window stores the γ-discounted 3-step reward with bootstrap
+    discount γ³, bootstrapping from the window tail's next_obs; a done
+    flushes the suffixes at their natural (shorter) horizons."""
+    gamma = 0.5
+    spec = DQNSpec(obs_dim=1, n_actions=2, hidden=(4,), epsilon=0.0,
+                   gamma=gamma, lr=1e-3, replay_capacity=64,
+                   replay_batch=64,  # > pushes: _learn never fires
+                   target_update_every=10, double=False, n_step=3)
+    agent = DQNAgent(spec, seed=0)
+    o = lambda v: np.array([v], np.float32)  # noqa: E731
+    # rewards 1, 2, 3, 4 over a 4-transition episode, then done
+    for i in range(4):
+        agent.observe(Transition(o(i), 0, float(i + 1), o(i + 1),
+                                 done=(i == 3)))
+    rb = agent.replay
+    assert rb.size == 4
+    # t=0 emitted at full horizon: 1 + .5*2 + .25*3, bootstrap γ³, tail obs 3
+    np.testing.assert_allclose(rb.rewards[0], 1 + 0.5 * 2 + 0.25 * 3)
+    np.testing.assert_allclose(rb.discounts[0], gamma ** 3)
+    np.testing.assert_allclose(rb.next_obs[0], [3.0])
+    assert not rb.dones[0]
+    # done at t=3 flushes the suffixes: [2,3,4], [3,4], [4] — all ending done
+    np.testing.assert_allclose(rb.rewards[1], 2 + 0.5 * 3 + 0.25 * 4)
+    np.testing.assert_allclose(rb.discounts[1], gamma ** 3)
+    np.testing.assert_allclose(rb.rewards[2], 3 + 0.5 * 4)
+    np.testing.assert_allclose(rb.discounts[2], gamma ** 2)
+    np.testing.assert_allclose(rb.rewards[3], 4.0)
+    np.testing.assert_allclose(rb.discounts[3], gamma)
+    assert rb.dones[1] and rb.dones[2] and rb.dones[3]
+    assert len(agent._pending) == 0
+
+
+def test_nstep_learns_delayed_reward_chain():
+    """3-step returns propagate a terminal-only reward back to the first
+    action of a 3-state chain (reward appears only at the end)."""
+    spec = DQNSpec(obs_dim=2, n_actions=2, hidden=(8, 8), epsilon=0.3,
+                   gamma=0.9, lr=2e-2, replay_capacity=512, replay_batch=32,
+                   target_update_every=10, double=True, n_step=3)
+    agent = DQNAgent(spec, seed=2)
+    states = [np.array([1.0, 0.0], np.float32),
+              np.array([0.0, 1.0], np.float32),
+              np.array([1.0, 1.0], np.float32)]
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        ok = True
+        for i, s in enumerate(states):
+            a = agent.act(s)
+            ok = ok and (a == 1)
+            nxt = states[i + 1] if i + 1 < len(states) else s
+            # only the terminal transition pays, and only for all-1 paths
+            r = (1.0 if ok else -1.0) if i == len(states) - 1 else 0.0
+            agent.observe(Transition(s, a, r, nxt, i == len(states) - 1))
+    q0 = agent.q_values(states[0][None])[0]
+    assert q0[1] > q0[0]  # credit reached the chain's first decision
+
+
+def test_load_state_dict_rejects_replay_ring_mismatch():
+    big = DQNAgent(DQNSpec(obs_dim=2, n_actions=2, replay_capacity=64),
+                   seed=0)
+    small = DQNAgent(DQNSpec(obs_dim=2, n_actions=2, replay_capacity=32),
+                     seed=0)
+    with pytest.raises(ValueError, match="replay ring mismatch"):
+        small.load_state_dict(big.state_dict())
+    wide = DQNAgent(DQNSpec(obs_dim=3, n_actions=2, replay_capacity=64),
+                    seed=0)
+    with pytest.raises(ValueError, match="replay ring mismatch"):
+        wide.load_state_dict(big.state_dict())
+
+
+def test_load_state_dict_restores_missing_discounts_as_gamma():
+    """Pre-discounts checkpoints (older layout) restore as 1-step rings."""
+    spec = DQNSpec(obs_dim=2, n_actions=2, gamma=0.7, replay_capacity=16)
+    a = DQNAgent(spec, seed=0)
+    a.replay.push(Transition(np.zeros(2, np.float32), 0, 1.0,
+                             np.ones(2, np.float32), False), discount=0.123)
+    sd = a.state_dict()
+    del sd["replay"]["discounts"]
+    b = DQNAgent(spec, seed=1)
+    b.load_state_dict(sd)
+    np.testing.assert_allclose(b.replay.discounts, 0.7)
+    assert b.replay.size == 1
