@@ -7,7 +7,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
     engine-smoke sweep-smoke runtime-smoke decomp-smoke trace-smoke \
-    control-smoke bench-collect
+    control-smoke partition-smoke bench-collect
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -52,7 +52,7 @@ sweep-smoke:
 # (timeout-bounded — a runtime deadlock must fail CI, not hang it), then
 # the threaded runtime end-to-end on a flash-crowd scenario via the CLI
 runtime-smoke:
-	timeout 900 $(PY) -m pytest tests/test_runtime.py -q
+	timeout 1500 $(PY) -m pytest tests/test_runtime.py -q
 	PYTHONPATH=src timeout 300 $(PY) -m repro.launch.serve \
 	    --arch igpm-pem --async --scenario flash_crowd \
 	    --rate 3000 --ticks 12 --bank 4
@@ -88,6 +88,15 @@ control-smoke:
 	PYTHONPATH=src timeout 300 $(PY) -m repro.launch.serve \
 	    --arch igpm-pem --async --scenario flash_crowd --rate 2000 \
 	    --ticks 10 --closed-loop --control frozen --control-episodes 1
+
+# edge-partitioned storage + multi-executor scale-out (DESIGN.md §10):
+# partitioned-vs-replicated bitwise pins (sweeps, router semantics, loud
+# overflow, served stores, cross-device-count checkpoint) and the
+# 2-executor runtime drain, all under 4 forced host devices
+partition-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    timeout 1800 $(PY) -m pytest tests/test_graph_sharding.py -q \
+	    -k "partition or executor or capacity"
 
 # merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
 bench-collect:

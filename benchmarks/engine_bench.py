@@ -14,6 +14,11 @@ in one process):
     full-graph path, so every step pays the sharded label-RWR + bank
     sweeps) at growing ``n_max`` with the vertices partitioned over
     ``("g",)`` (``ServingConfig(shard="off", graph_shard="auto")``).
+    Multi-device points run twice: replicated edge storage, then the
+    co-partitioned layout (``edge_partition="on"`` → ``gdev{N}/part``
+    rows), and every graph-axis row carries ``edge_dev_bytes``/
+    ``edge_repl_bytes``/``edge_frac`` so the ~1/g per-device memory drop
+    is a gated number, not a claim (DESIGN.md §10).
 
 Reported per row: median full serving-step latency, p50/p99, and the
 shard counts actually used.
@@ -94,9 +99,35 @@ def _worker(n_devices: int, smoke: bool) -> None:
     }))
 
 
-def _graph_worker(n_devices: int, n_max: int, smoke: bool) -> None:
+def _edge_bytes(engine) -> dict:
+    """Per-device edge-storage bytes for the engine's active layout, next
+    to what a fully replicated COO copy would cost — the memory number
+    the partitioned-storage rows gate on (DESIGN.md §10)."""
+    import jax
+    import numpy as np
+
+    from repro.core.graph import EdgePartition
+
+    repl = EdgePartition.replicated_nbytes(engine.cfg.e_max)
+    if engine.part_cache is not None:
+        dev = engine.part_cache.slice_nbytes()
+    elif engine.ell_cache is not None:
+        # block-sharded mirror: each device holds 1/g of the stacked rows
+        tot = sum(np.asarray(x).nbytes
+                  for x in jax.tree.leaves(engine.ell_cache.ell))
+        dev = tot // max(engine.g_shards, 1)
+    else:
+        dev = repl  # replicated COO: every device carries the full arrays
+    return {"edge_dev_bytes": int(dev), "edge_repl_bytes": int(repl),
+            "edge_frac": round(dev / repl, 4)}
+
+
+def _graph_worker(n_devices: int, n_max: int, smoke: bool,
+                  partition: bool = False) -> None:
     """Graph-axis worker: storm-forced serving at ``n_max`` with the
-    vertices sharded over ``("g",)``; prints one JSON line."""
+    vertices sharded over ``("g",)`` — and, under ``--partition``, the
+    edge storage co-partitioned with the receiver slices; prints one JSON
+    line."""
     import numpy as np
 
     import jax
@@ -122,6 +153,8 @@ def _graph_worker(n_devices: int, n_max: int, smoke: bool) -> None:
     server = MatchServer(cfg, query_zoo(4),
                          ServingConfig(microbatch_window=256, shard="off",
                                        graph_shard="auto",
+                                       edge_partition=("on" if partition
+                                                       else "off"),
                                        full_graph_frac=-1.0),
                          seed=0)
 
@@ -143,10 +176,12 @@ def _graph_worker(n_devices: int, n_max: int, smoke: bool) -> None:
         "devices": n_devices,
         "n_max": n_max,
         "g_shards": server.engine.g_shards,
+        "partitioned": server.engine.partitioned,
         "median_step_us": 1e6 * float(np.median(totals)),
         "p50_ms": snap["p50_step_ms"],
         "p99_ms": snap["p99_step_ms"],
         "updates_per_s": snap["updates_per_s"],
+        **_edge_bytes(server.engine),
     }))
 
 
@@ -184,15 +219,26 @@ def run(smoke: bool = False, query_axis: bool = True,
     if graph_axis:
         for n_max in (NMAX_SMOKE if smoke else NMAX_FULL):
             for nd in DEVICE_COUNTS:
-                r = _run_forced(
-                    nd, ["--graph-worker", "--nmax", str(n_max)]
-                    + (["--smoke"] if smoke else []))
-                rows.append(BenchRow(
-                    f"engine/nmax{n_max}/gdev{r['devices']}",
-                    r["median_step_us"],
-                    f"g_shards={r['g_shards']};p50_ms={r['p50_ms']:.1f};"
-                    f"p99_ms={r['p99_ms']:.1f};"
-                    f"updates_per_s={r['updates_per_s']:.0f}"))
+                # replicated edge storage, then (multi-device only) the
+                # co-partitioned layout — same stream, so the edge_frac
+                # columns are the ~1/g memory drop the partition buys
+                variants = [([], "")]
+                if nd > 1:
+                    variants.append((["--partition"], "/part"))
+                for extra, tag in variants:
+                    r = _run_forced(
+                        nd, ["--graph-worker", "--nmax", str(n_max)]
+                        + extra + (["--smoke"] if smoke else []))
+                    rows.append(BenchRow(
+                        f"engine/nmax{n_max}/gdev{r['devices']}{tag}",
+                        r["median_step_us"],
+                        f"g_shards={r['g_shards']};"
+                        f"p50_ms={r['p50_ms']:.1f};"
+                        f"p99_ms={r['p99_ms']:.1f};"
+                        f"updates_per_s={r['updates_per_s']:.0f};"
+                        f"edge_dev_bytes={r['edge_dev_bytes']};"
+                        f"edge_repl_bytes={r['edge_repl_bytes']};"
+                        f"edge_frac={r['edge_frac']}"))
     # partial runs (one axis only) get their own artifact name so the CI
     # engine-smoke/sweep-smoke pair cannot clobber each other's rows; only
     # a both-axes run refreshes the canonical (smoke) artifact
@@ -214,6 +260,8 @@ def main() -> None:
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--graph-worker", action="store_true",
                     help=argparse.SUPPRESS)
+    ap.add_argument("--partition", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--devices", type=int, default=1, help=argparse.SUPPRESS)
     ap.add_argument("--nmax", type=int, default=1024, help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -221,7 +269,8 @@ def main() -> None:
         _worker(args.devices, args.smoke)
         return
     if args.graph_worker:
-        _graph_worker(args.devices, args.nmax, args.smoke)
+        _graph_worker(args.devices, args.nmax, args.smoke,
+                      partition=args.partition)
         return
     for row in run(smoke=args.smoke, query_axis=not args.graph_only,
                    graph_axis=not args.query_only):

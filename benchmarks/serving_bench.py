@@ -231,9 +231,12 @@ def _control_rows(smoke: bool) -> List[BenchRow]:
     the profitable operating point moves with the phase. The gate in
     main(): learned > static_best on BOTH scenarios at default scale —
     adaptivity must beat every fixed corner configuration, not tie the
-    best one. ``rwr_tol`` stays at the engine baseline throughout (the
-    bench config runs exact sweeps, so the tol knob is disabled rather
-    than silently switching semantics mid-run; see ControllerEnv).
+    best one. The engine baseline runs residual-adaptive sweeps
+    (``rwr_tol=1e-4``, a ``tol_ladder`` rung): at ``rwr_tol=0`` the
+    ControllerEnv self-disables the tol knob (exact fixed-iteration
+    sweeps would silently change semantics mid-run), which used to
+    leave this bench's controller a 5-action space — the full 7-action
+    space needs a non-zero baseline tol.
     """
     from repro.config.base import ControlConfig
     from repro.control import ServingController
@@ -274,6 +277,9 @@ def _control_rows(smoke: bool) -> List[BenchRow]:
             n_max=wl.graph.n_max, e_max=wl.graph.e_max,
             ell_width=8 if smoke else 16,
             rwr_iters=8 if smoke else 15, rwr_iters_incremental=3,
+            # non-zero baseline tol (a tol_ladder rung) keeps the
+            # controller's rwr_tol actions live — see the docstring
+            rwr_tol=1e-4,
             top_k_patterns=6 if smoke else 10, init_community_size=32)
         serving = ServingConfig(microbatch_window=256, queue_depth=512,
                                 telemetry_window=4096, full_graph_frac=-1.0)

@@ -354,6 +354,22 @@ class EngineConfig:
     both axes are ``"auto"`` the device pool splits between them
     (graph axis ≤ √devices); with ``shard="off"`` the graph axis may take
     every device.
+
+    ``edge_partition="on"`` (with a live graph axis) co-partitions the
+    edge STORAGE with the receiver slices (DESIGN.md §10): the COO
+    backend maintains an :class:`~repro.core.graph.EdgePartition` whose
+    per-slice blocks feed the mesh instead of the replicated edge arrays
+    (per-device edge memory ~1/g, no receiver masking in the sweeps), and
+    the ELL backend shrinks the mirror's row blocks to the partitioned
+    slice capacity. Still bit-identical to the replicated path. Off by
+    default because the per-slice capacity is static
+    (``partition_slice_capacity`` — ``partition_headroom``x over a
+    balanced split): a stream whose receivers concentrate hard enough on
+    one slice raises :class:`~repro.core.graph.PartitionOverflowError`
+    instead of degrading silently. Skewed workloads (flash crowds pile
+    receivers onto one slice) trade memory for safety by raising
+    ``partition_headroom`` — at ``headroom >= g`` a slice can absorb
+    every live arc and overflow is impossible.
     """
 
     mode: str = "incremental"        # | 'batch'
@@ -369,6 +385,8 @@ class EngineConfig:
     qe_cap: int = 16
     shard: str = "auto"              # query axis: | 'off'
     graph_shard: str = "off"         # graph axis: | 'auto'
+    edge_partition: str = "off"      # edge storage on the graph axis: | 'on'
+    partition_headroom: float = 1.25  # slice capacity over a balanced split
     v_max: int = 4096                # updated-vertex buffer width
     # exact-duplicate dedup at register: a query whose tensors equal a
     # live one becomes an ALIAS of that row (zero device work; results
@@ -409,6 +427,8 @@ class ServingConfig:
     seed_cache_hamming: int = 0       # mask Hamming bound for seed reuse
     shard: str = "auto"               # query-axis bucket execution | 'off'
     graph_shard: str = "off"          # graph-axis sweep sharding | 'auto'
+    edge_partition: str = "off"       # edge storage on the graph axis | 'on'
+    partition_headroom: float = 1.25  # slice capacity over a balanced split
     # per-channel telemetry ring overrides, ((channel, window), ...) —
     # tuples keep the config hashable; e2e/queue_wait already default to
     # a p999-credible 4096 (telemetry.DEFAULT_CHANNEL_WINDOWS)
@@ -424,7 +444,9 @@ class ServingConfig:
             seed_cache_staleness=self.seed_cache_staleness,
             seed_cache_hamming=self.seed_cache_hamming,
             q_cap=self.q_max, qe_cap=self.qe_max, shard=self.shard,
-            graph_shard=self.graph_shard, obs=self.obs)
+            graph_shard=self.graph_shard,
+            edge_partition=self.edge_partition,
+            partition_headroom=self.partition_headroom, obs=self.obs)
 
 
 @dataclass(frozen=True)
@@ -470,9 +492,18 @@ class RuntimeConfig:
     ``checkpoint_dir`` (when set) makes the drain checkpoint the whole
     engine via ``Engine.save`` (``checkpoint_every`` > 0 adds a periodic
     cadence in steps).
+
+    ``n_executors > 1`` fans the per-bucket bank matches of each step
+    across that many executor threads (DESIGN.md §10): the staged handoff
+    and all host-side decisions (seed memo, PEM, merge) stay on the
+    single executor thread, only the independent per-bucket device
+    dispatches run on the pool, and a fan-in barrier joins them before
+    the merge/subscriber delivery — so results (and the lockstep
+    determinism contract) are exactly the single-executor ones.
     """
 
     handoff_depth: int = 1           # staged batches; 1 = double buffer
+    n_executors: int = 1             # per-bucket match fan-out threads
     ingress: str = "lockstep"        # | 'shed'
     drain_timeout_s: float = 60.0
     checkpoint_dir: str = ""

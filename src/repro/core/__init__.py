@@ -2,10 +2,14 @@
 # (Louvain clustering gated by a DQN) — see DESIGN.md §1.
 from repro.core.graph import (
     DynamicGraph,
+    EdgePartition,
+    PartitionOverflowError,
+    PartitionedEdges,
     UpdateBatch,
     add_edges,
     apply_update,
     new_graph,
+    partition_slice_capacity,
     remove_edges,
     set_labels,
 )

@@ -12,7 +12,8 @@ live on device; builders accept numpy.
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+import dataclasses
+from typing import List, NamedTuple, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,17 @@ import numpy as np
 
 from repro.sparse.ell import (EllGraph, build_ell, build_ell_sharded,
                               ell_block_capacity, ell_row_capacity)
+
+
+class PartitionOverflowError(RuntimeError):
+    """A receiver slice's static edge capacity was exceeded.
+
+    Raised by the partitioned-storage router (:class:`EdgePartition`) and
+    the partitioned ELL mirror when a slice's LIVE arcs outgrow its static
+    per-slice capacity — the deterministic compaction spill already ran,
+    so this is a real capacity breach, not cursor fragmentation. The
+    message names the slice and the overage; the fix is more headroom
+    (``partition_slice_capacity``) or a coarser partition."""
 
 
 class DynamicGraph(NamedTuple):
@@ -277,6 +289,264 @@ def transition_weights(g: DynamicGraph) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Edge-partitioned COO storage (receiver-sliced) + host update router
+# ---------------------------------------------------------------------------
+
+def partition_slice_capacity(e_max: int, n_shards: int,
+                             headroom: float = 1.25) -> int:
+    """Static per-slice arc capacity of the partitioned layout.
+
+    ``headroom > 1`` absorbs receiver skew: a perfectly balanced stream
+    needs ``e_max / n_shards`` slots per slice, real streams concentrate
+    some receivers. At the default 1.25x the per-device edge footprint is
+    0.3125x the replicated arrays for 4 slices.
+    """
+    return int(np.ceil(headroom * e_max / n_shards))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedEdges:
+    """Receiver-sliced COO edge arrays — device view of :class:`EdgePartition`.
+
+    Row ``d`` holds only the arcs whose receiver lives in vertex slice
+    ``[d*n_loc, (d+1)*n_loc)``, in global insertion order, with receivers
+    stored slice-LOCAL (``v - d*n_loc``). Under the graph mesh axis each
+    device sees its ``(1, e_cap_slice)`` block, so the RWR/reach sweeps
+    segment-reduce straight into local segments — no receiver masking —
+    and all_gather the slices back (DESIGN.md §10).
+    """
+
+    senders: jnp.ndarray        # int32[n_shards, e_cap_slice] — global ids
+    receivers_loc: jnp.ndarray  # int32[n_shards, e_cap_slice] — slice-local
+    mask: jnp.ndarray           # bool[n_shards, e_cap_slice]
+    n_loc: int                  # static vertex-slice width
+
+    @property
+    def n_shards(self) -> int:
+        return self.senders.shape[0]
+
+    @property
+    def e_cap_slice(self) -> int:
+        return self.senders.shape[1]
+
+    def tree_flatten(self):
+        return (self.senders, self.receivers_loc, self.mask), self.n_loc
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux)
+
+
+class EdgePartition:
+    """Host-maintained receiver-partitioned edge store for a
+    :class:`DynamicGraph`, plus the update router that keeps it fresh
+    (DESIGN.md §10).
+
+    ``rebuild`` splits the live COO arcs by receiver slice, preserving
+    global slot order inside each slice. ``refresh`` routes each
+    :class:`UpdateBatch` by destination slice on the host in O(|update|):
+
+    - additions mirror ``add_edges`` arc-for-arc — a global cursor tracks
+      ``g.n_edges`` so arcs the replicated path drops past ``e_max`` are
+      dropped here too — and append at the owning slice's fill cursor;
+    - removals kill the first live copy of (u, v) in slice slot order,
+      which IS global slot order because every copy of an arc lands in the
+      receiver owner's slice (matching ``remove_edges``/``EllCache``);
+    - when a slice's fill cursor hits ``e_cap_slice`` with dead slots
+      below it, the deterministic spill policy compacts that slice in
+      place (live arcs keep their relative order, so reduction orders are
+      unchanged); if the LIVE count itself would exceed the capacity the
+      router raises :class:`PartitionOverflowError` naming the slice and
+      the overage.
+
+    Because per-vertex slot multisets and their relative order match the
+    replicated arrays exactly, partitioned sweeps are bit-identical to
+    replicated ones: dead slots contribute exact zeros (+0.0 into
+    non-negative partial sums / 0.0 or -inf into the reach max, identical
+    in both layouts) and the all_gather concatenation does no arithmetic.
+    """
+
+    def __init__(self, n_max: int, e_max: int, n_shards: int,
+                 e_cap_slice: Optional[int] = None,
+                 headroom: float = 1.25):
+        if n_max % n_shards:
+            raise ValueError(
+                f"n_max {n_max} not divisible by n_shards {n_shards}")
+        self.n_max = n_max
+        self.e_max = e_max
+        self.n_shards = n_shards
+        self.n_loc = n_max // n_shards
+        self.e_cap_slice = (partition_slice_capacity(e_max, n_shards,
+                                                     headroom)
+                            if e_cap_slice is None else e_cap_slice)
+        self._last: Optional[DynamicGraph] = None
+        self.n_rebuilds = 0
+        self.n_compactions = 0
+
+    # -- capacity / introspection -------------------------------------------
+
+    def slice_nbytes(self) -> int:
+        """Per-device bytes of one slice's edge arrays (int32 senders +
+        int32 local receivers + bool mask)."""
+        return self.e_cap_slice * (4 + 4 + 1)
+
+    @staticmethod
+    def replicated_nbytes(e_max: int) -> int:
+        """Per-device bytes of the replicated COO edge arrays."""
+        return e_max * (4 + 4 + 1)
+
+    def _overflow(self, d: int, live: int) -> None:
+        raise PartitionOverflowError(
+            f"edge slice {d} (receivers [{d * self.n_loc}, "
+            f"{(d + 1) * self.n_loc})): {live} live arcs exceed the static "
+            f"slice capacity {self.e_cap_slice} by "
+            f"{live - self.e_cap_slice} — raise the partition headroom, "
+            f"e_max, or the slice count")
+
+    # -- full (re)build ------------------------------------------------------
+
+    def rebuild(self, g: DynamicGraph) -> None:
+        """Compact host+device slices from the live edge set of ``g``."""
+        em = np.asarray(g.edge_mask)
+        s = np.asarray(g.senders)
+        r = np.asarray(g.receivers)
+        cap = self.e_cap_slice
+        send = np.zeros((self.n_shards, cap), np.int32)
+        recv = np.zeros((self.n_shards, cap), np.int32)
+        mask = np.zeros((self.n_shards, cap), bool)
+        self._fill: List[int] = []
+        self._live: List[int] = []
+        owner = r // self.n_loc
+        for d in range(self.n_shards):
+            idx = np.nonzero(em & (owner == d))[0]  # ascending = slot order
+            if len(idx) > cap:
+                self._overflow(d, len(idx))
+            send[d, : len(idx)] = s[idx]
+            recv[d, : len(idx)] = r[idx] - d * self.n_loc
+            mask[d, : len(idx)] = True
+            self._fill.append(len(idx))
+            self._live.append(len(idx))
+        self._send_h, self._recv_h, self._mask_h = send, recv, mask
+        self._send_d = jnp.asarray(send)
+        self._recv_d = jnp.asarray(recv)
+        self._mask_d = jnp.asarray(mask)
+        self._cursor = int(np.asarray(g.n_edges))
+        self._last = g
+        self.n_rebuilds += 1
+
+    # -- incremental refresh -------------------------------------------------
+
+    def _compact(self, d: int) -> None:
+        """Deterministic spill policy: drop the dead slots of slice ``d``,
+        keeping live arcs in their existing (global-slot) order."""
+        fill = self._fill[d]
+        keep = np.nonzero(self._mask_h[d, :fill])[0]
+        nl = len(keep)
+        self._send_h[d, :nl] = self._send_h[d, keep]
+        self._recv_h[d, :nl] = self._recv_h[d, keep]
+        self._mask_h[d, :] = False
+        self._mask_h[d, :nl] = True
+        self._fill[d] = nl
+        self.n_compactions += 1
+
+    def refresh(self, g: DynamicGraph, g2: DynamicGraph,
+                upd: UpdateBatch) -> None:
+        """Route ``upd`` (which turned ``g`` into ``g2``) into the slices."""
+        if self._last is not g:
+            self.rebuild(g)
+        touched: Set[Tuple[int, int]] = set()
+        dirty: Set[int] = set()  # compacted slices → full-row upload
+        add_src = np.asarray(upd.add_src)
+        add_dst = np.asarray(upd.add_dst)
+        add_mask = np.asarray(upd.add_mask)
+        slot = self._cursor
+        for u, v, m in zip(add_src, add_dst, add_mask):
+            if not m:
+                continue
+            if slot < self.e_max and 0 <= v < self.n_max:
+                d = int(v) // self.n_loc
+                j = self._fill[d]
+                if j >= self.e_cap_slice:
+                    if self._live[d] >= self.e_cap_slice:
+                        self._overflow(d, self._live[d] + 1)
+                    self._compact(d)
+                    dirty.add(d)
+                    j = self._fill[d]
+                self._send_h[d, j] = u
+                self._recv_h[d, j] = int(v) - d * self.n_loc
+                self._mask_h[d, j] = True
+                self._fill[d] = j + 1
+                self._live[d] += 1
+                touched.add((d, j))
+            slot += 1
+        self._cursor += int(add_mask.sum())
+
+        rem_src = np.asarray(upd.rem_src)
+        rem_dst = np.asarray(upd.rem_dst)
+        rem_mask = np.asarray(upd.rem_mask)
+        for u, v, m in zip(rem_src, rem_dst, rem_mask):
+            if not (m and 0 <= v < self.n_max):
+                continue
+            d = int(v) // self.n_loc
+            vl = int(v) - d * self.n_loc
+            fill = self._fill[d]
+            hit = np.nonzero(self._mask_h[d, :fill]
+                             & (self._send_h[d, :fill] == u)
+                             & (self._recv_h[d, :fill] == vl))[0]
+            if len(hit):
+                j = int(hit[0])
+                self._mask_h[d, j] = False
+                self._live[d] -= 1
+                touched.add((d, j))
+        self._push(touched, dirty)
+        self._last = g2
+
+    def _push(self, touched: Set[Tuple[int, int]], dirty: Set[int]) -> None:
+        """Scatter the final host values of touched slots to device (pow-2
+        padded index vectors, as the ELL mirror does); compacted slices
+        upload as full rows."""
+        for d in sorted(dirty):
+            self._send_d = self._send_d.at[d].set(jnp.asarray(self._send_h[d]))
+            self._recv_d = self._recv_d.at[d].set(jnp.asarray(self._recv_h[d]))
+            self._mask_d = self._mask_d.at[d].set(jnp.asarray(self._mask_h[d]))
+        touched = {(d, j) for d, j in touched if d not in dirty}
+        if not touched:
+            return
+
+        def _pad(a: np.ndarray, fill) -> jnp.ndarray:
+            width = max(1, 1 << int(np.ceil(np.log2(max(len(a), 1)))))
+            return jnp.asarray(np.concatenate(
+                [a, np.full(width - len(a), fill, a.dtype)]))
+
+        dj = np.asarray(sorted(touched), np.int32)
+        dd = _pad(dj[:, 0], self.n_shards)  # pad rows → OOB, dropped
+        jj = _pad(dj[:, 1], 0)
+        sv = _pad(self._send_h[dj[:, 0], dj[:, 1]], 0)
+        rv = _pad(self._recv_h[dj[:, 0], dj[:, 1]], 0)
+        mv = _pad(self._mask_h[dj[:, 0], dj[:, 1]], False)
+        self._send_d = self._send_d.at[dd, jj].set(sv, mode="drop")
+        self._recv_d = self._recv_d.at[dd, jj].set(rv, mode="drop")
+        self._mask_d = self._mask_d.at[dd, jj].set(mv, mode="drop")
+
+    def update(self, g: DynamicGraph, upd: UpdateBatch) -> DynamicGraph:
+        """``apply_update`` + partition refresh; returns the updated graph."""
+        if self._last is not g:
+            self.rebuild(g)
+        g2 = apply_update(g, upd)
+        self.refresh(g, g2, upd)
+        return g2
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def part(self) -> PartitionedEdges:
+        """The store as a :class:`PartitionedEdges` device pytree."""
+        return PartitionedEdges(self._send_d, self._recv_d, self._mask_d,
+                                self.n_loc)
+
+
+# ---------------------------------------------------------------------------
 # ELL mirror of the live edge set (the matching hot path's layout)
 # ---------------------------------------------------------------------------
 
@@ -329,9 +599,17 @@ class EllCache:
     the row axis into ``n_shards`` parts hands each device exactly its
     block. The per-vertex entry layout (and therefore every reduction
     order) is identical to the unsharded mirror.
+
+    ``partitioned=True`` (with ``n_shards > 1``) sizes each row block for
+    ``partition_slice_capacity(e_max, n_shards)`` arcs instead of the full
+    ``e_max`` — the ELL expression of the edge-partitioned layout
+    (DESIGN.md §10): the per-device block shrinks ~1/g, and a slice whose
+    live in-degree outgrows its block raises
+    :class:`PartitionOverflowError` at rebuild instead of growing.
     """
 
-    def __init__(self, n_max: int, e_max: int, k: int, n_shards: int = 1):
+    def __init__(self, n_max: int, e_max: int, k: int, n_shards: int = 1,
+                 partitioned: bool = False, headroom: float = 1.25):
         if n_max % n_shards:
             raise ValueError(
                 f"n_max {n_max} not divisible by n_shards {n_shards}")
@@ -340,7 +618,10 @@ class EllCache:
         self.k = k
         self.n_shards = n_shards
         self.n_loc = n_max // n_shards
-        self.r_cap_block = ell_block_capacity(n_max, e_max, k, n_shards)
+        self.partitioned = partitioned and n_shards > 1
+        e_cap_block = (partition_slice_capacity(e_max, n_shards, headroom)
+                       if self.partitioned else e_max)
+        self.r_cap_block = ell_block_capacity(n_max, e_cap_block, k, n_shards)
         self.r_cap = n_shards * self.r_cap_block
         self._vals = jnp.ones((self.r_cap, k), jnp.float32)
         self._last: Optional[DynamicGraph] = None
@@ -364,6 +645,17 @@ class EllCache:
             lo, hi = d * self.n_loc, (d + 1) * self.n_loc
             cs = (d * self.r_cap_block
                   + np.concatenate([[0], np.cumsum(rows_per_v[lo:hi])]))
+            need = int(cs[-1]) - d * self.r_cap_block
+            if need > self.r_cap_block:
+                # only reachable in partitioned mode (the replicated block
+                # capacity covers any in-degree distribution) — a slice's
+                # live arcs outgrew its shrunken block
+                raise PartitionOverflowError(
+                    f"ELL slice {d} (receivers [{lo}, {hi})): "
+                    f"{int(deg_in[lo:hi].sum())} live arcs need {need} rows"
+                    f" > block capacity {self.r_cap_block} (over by "
+                    f"{need - self.r_cap_block} rows) — raise the partition"
+                    f" headroom, e_max, or the slice count")
             start_v[lo:hi] = cs[:-1]
             self._next_row.append(int(cs[-1]))
         self._rows: List[List[int]] = [

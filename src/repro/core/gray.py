@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import resolve_backend
-from repro.core.graph import DynamicGraph, ell_from_graph
+from repro.core.graph import DynamicGraph, PartitionedEdges, ell_from_graph
 from repro.core.rwr import (_owned_mask, label_rwr, label_rwr_adaptive, rwr,
                             rwr_adaptive)
 from repro.core.query import Query, QueryBank, stack_queries
@@ -92,7 +92,8 @@ def _find_seeds_arrays(g: DynamicGraph, r_lab: jnp.ndarray, k: int,
 
 def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
                     ell: Optional[EllGraph] = None,
-                    axis: Optional[str] = None) -> jnp.ndarray:
+                    axis: Optional[str] = None,
+                    part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
     """hops[k_idx, v] = min #edges from sources[k_idx] to v (≤ max_hops),
     else max_hops+1. Batched bounded BFS — the bridge function's path-length
     oracle. The frontier sweep is either an edge-gather/segment-max (COO) or
@@ -105,12 +106,30 @@ def _bfs_reach_hops(g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
     shard-local row block and ``all_gather``-s the slices. Max is
     idempotent over the indicator range [0, 1] and the non-owner shards
     contribute exact zeros absorbed by the ``maximum`` against the current
-    frontier, so the sharded sweep stays bit-identical too."""
+    frontier, so the sharded sweep stays bit-identical too.
+
+    ``part`` (partitioned storage, needs ``axis``) sweeps this shard's
+    receiver-sliced edge block instead of the replicated arrays: the
+    segment-max lands straight in local segments (no receiver masking)
+    and the slices ``all_gather`` back. Per-vertex slot sets match the
+    replicated arrays, and a vertex with no slots yields the segment-max
+    identity (absorbed by the ``maximum``) in both layouts, so this path
+    is bit-identical as well."""
     k = sources.shape[0]
     reached = jax.nn.one_hot(sources, g.n_max, dtype=jnp.float32).T  # (n,k)
     hops = jnp.where(reached.T > 0, 0, max_hops + 1).astype(jnp.int32)
 
-    if ell is None:
+    if part is not None:
+        assert axis is not None, "partitioned sweeps need a graph mesh axis"
+        p_s = part.senders[0]
+        p_r = part.receivers_loc[0]
+        p_live = part.mask[0].astype(jnp.float32)[:, None]
+
+        def sweep(reached):
+            msg = reached[p_s] * p_live                      # (E_slice, k)
+            agg = jax.ops.segment_max(msg, p_r, num_segments=part.n_loc)
+            return jax.lax.all_gather(agg, axis, axis=0, tiled=True)
+    elif ell is None:
         live = g.edge_mask.astype(jnp.float32)[:, None]
 
         def sweep(reached):
@@ -317,17 +336,18 @@ class BankGRayMatcher:
 
     def _rwr(self, g: DynamicGraph, e: jnp.ndarray,
              ell: Optional[EllGraph],
-             graph_axis: Optional[str]) -> jnp.ndarray:
+             graph_axis: Optional[str],
+             part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
         """One shared expansion sweep block — fixed-count or residual-
         adaptive per ``rwr_tol`` (the hard cap is ``rwr_iters`` either
         way)."""
         if self.rwr_tol > 0:
             r, _, _ = rwr_adaptive(g, e, max_iters=self.rwr_iters,
                                    tol=self.rwr_tol, c=self.restart,
-                                   ell=ell, axis=graph_axis)
+                                   ell=ell, axis=graph_axis, part=part)
             return r
         return rwr(g, e, iters=self.rwr_iters, c=self.restart, ell=ell,
-                   axis=graph_axis)
+                   axis=graph_axis, part=part)
 
     def _match_impl(self, g: DynamicGraph, r_lab: jnp.ndarray,
                     seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
@@ -336,6 +356,7 @@ class BankGRayMatcher:
                     order_src: jnp.ndarray, order_dst: jnp.ndarray,
                     order_tree: jnp.ndarray, order_mask: jnp.ndarray,
                     row_node: Optional[jnp.ndarray] = None,
+                    part: Optional[PartitionedEdges] = None,
                     graph_axis: Optional[str] = None) -> GRayResult:
         B, k = seed_ids.shape
         n = g.n_max
@@ -390,11 +411,11 @@ class BankGRayMatcher:
                     flat = srcs.reshape(p * k)
                     e = jax.nn.one_hot(flat, n,
                                        dtype=jnp.float32).T      # (n, P·k)
-                    r_new = self._rwr(g, e, ell, graph_axis)
+                    r_new = self._rwr(g, e, ell, graph_axis, part)
                     r_new = jnp.transpose(r_new.reshape(n, p, k), (1, 0, 2))
                     h_new = _bfs_reach_hops(g, flat, self.bridge_hops,
-                                            ell=ell,
-                                            axis=graph_axis).reshape(p, k, n)
+                                            ell=ell, axis=graph_axis,
+                                            part=part).reshape(p, k, n)
                     b_idx = jnp.asarray([b for b, _, _ in pairs])
                     t_idx = jnp.asarray([t for _, t, _ in pairs])
                     tables_r = tables_r.at[b_idx, t_idx].set(r_new)
@@ -437,12 +458,12 @@ class BankGRayMatcher:
                     flat = srcs.reshape(n_sweep * k)
                     e = jax.nn.one_hot(flat, n,
                                        dtype=jnp.float32).T  # (n, n_sweep·k)
-                    r_new = self._rwr(g, e, ell, graph_axis)
+                    r_new = self._rwr(g, e, ell, graph_axis, part)
                     r_new = jnp.transpose(r_new.reshape(n, n_sweep, k),
                                           (1, 0, 2))
                     h_new = _bfs_reach_hops(
                         g, flat, self.bridge_hops, ell=ell,
-                        axis=graph_axis).reshape(n_sweep, k, n)
+                        axis=graph_axis, part=part).reshape(n_sweep, k, n)
                     # packing fill (idx == n_slots) lands in the trash
                     # slot, which only masked reads ever see
                     return t_r.at[idx].set(r_new), t_h.at[idx].set(h_new)

@@ -50,6 +50,17 @@ class PartialExecutionManager:
 
     # -- clustering ----------------------------------------------------------
 
+    def reset_clustering(self) -> None:
+        """Drop the dendrogram so the next ``communities`` call rebuilds it.
+
+        The dendrogram is stale-TOLERANT (rebuilt only on 1+growth edge
+        increase), so unlike the engine's pure caches it is results-
+        affecting state; a restored checkpoint must drop it to behave like
+        a fresh process (which starts with no dendrogram).
+        """
+        self._dendro = None
+        self._cuts = {}
+
     def communities(self, g: DynamicGraph) -> Tuple[np.ndarray, int]:
         """Constrained-Louvain membership for the current threshold ``c``.
 

@@ -43,7 +43,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import DynamicGraph, transition_weights
+from repro.core.graph import (DynamicGraph, PartitionedEdges,
+                              transition_weights)
 from repro.kernels.spmv_ell.ops import ell_spmm_kernel
 from repro.sparse.ell import EllGraph
 
@@ -111,9 +112,37 @@ def _sweep_ell(ell: EllGraph, inv_deg: jnp.ndarray, r: jnp.ndarray,
     return _combine(e, agg, c)
 
 
+def _sweep_part(part: PartitionedEdges, g: DynamicGraph, r: jnp.ndarray,
+                e: jnp.ndarray, c: float, axis: str) -> jnp.ndarray:
+    """Partitioned-storage COO sweep: this shard's slice arrays only.
+
+    Each shard holds exactly its ``(1, e_cap_slice)`` block of the
+    receiver-sliced layout (DESIGN.md §10): receivers are stored
+    slice-local, so the segment-sum lands straight in local segments —
+    the replicated path's receiver masking disappears — and the vertex
+    slices concatenate back with an ``all_gather`` (no cross-shard
+    arithmetic). Per-vertex slot order matches the replicated arrays, and
+    dead slots add exact +0.0, so the result is bitwise the replicated
+    sweep's.
+    """
+    s = part.senders[0]
+    rl = part.receivers_loc[0]
+    m = part.mask[0]
+    safe = jnp.maximum(g.degree, 1.0)
+    w = jnp.where(m, 1.0 / safe[s], 0.0)
+    msg = r[s] * w[:, None]                              # (E_slice, S)
+    agg = jax.ops.segment_sum(msg, rl, num_segments=part.n_loc)
+    agg = jax.lax.all_gather(agg, axis, axis=0, tiled=True)
+    return _combine(e, agg, c)
+
+
 def _sweep_fn(g: DynamicGraph, e: jnp.ndarray, c: float,
-              ell: Optional[EllGraph], axis: Optional[str]):
+              ell: Optional[EllGraph], axis: Optional[str],
+              part: Optional[PartitionedEdges] = None):
     """The per-iteration sweep closure for either backend."""
+    if part is not None:
+        assert axis is not None, "partitioned sweeps need a graph mesh axis"
+        return lambda r: _sweep_part(part, g, r, e, c, axis)
     if ell is None:
         w = transition_weights(g)
         return lambda r: _sweep(g, w, r, e, c, axis=axis)
@@ -125,17 +154,20 @@ def _sweep_fn(g: DynamicGraph, e: jnp.ndarray, c: float,
 def rwr(g: DynamicGraph, e: jnp.ndarray, iters: int = 30, c: float = 0.15,
         r0: Optional[jnp.ndarray] = None,
         ell: Optional[EllGraph] = None,
-        axis: Optional[str] = None) -> jnp.ndarray:
+        axis: Optional[str] = None,
+        part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
     """Batched RWR. ``e``: (n_max, S) restart distributions (columns sum ≤ 1).
 
     ``r0`` warm-starts the iteration (incremental mode); defaults to ``e``.
     ``ell`` selects the Pallas ELL sweep backend (must mirror ``g``'s live
     arcs); ``None`` keeps the COO gather/segment-sum path. ``axis`` names
     the graph mesh axis when called inside a ``shard_map`` (module
-    docstring).
+    docstring). ``part`` is this shard's receiver-sliced edge block
+    (partitioned storage, needs ``axis``); it replaces the graph's edge
+    arrays entirely.
     """
     r = e if r0 is None else r0
-    sweep = _sweep_fn(g, e, c, ell, axis)
+    sweep = _sweep_fn(g, e, c, ell, axis, part)
 
     def body(r, _):
         return sweep(r), None
@@ -149,7 +181,8 @@ def rwr_adaptive(g: DynamicGraph, e: jnp.ndarray, max_iters: int = 30,
                  tol: float = 1e-4, c: float = 0.15,
                  r0: Optional[jnp.ndarray] = None,
                  ell: Optional[EllGraph] = None,
-                 axis: Optional[str] = None
+                 axis: Optional[str] = None,
+                 part: Optional[PartitionedEdges] = None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Residual-adaptive RWR → ``(r, n_sweeps, n_col_skipped)``.
 
@@ -174,7 +207,7 @@ def rwr_adaptive(g: DynamicGraph, e: jnp.ndarray, max_iters: int = 30,
     collective.
     """
     r = e if r0 is None else r0
-    sweep = _sweep_fn(g, e, c, ell, axis)
+    sweep = _sweep_fn(g, e, c, ell, axis, part)
     n_cols = r.shape[1]
 
     def cond(carry):
@@ -217,7 +250,8 @@ def label_restarts(g: DynamicGraph, n_labels: int) -> jnp.ndarray:
 def label_rwr(g: DynamicGraph, n_labels: int, iters: int = 30,
               c: float = 0.15, r0: Optional[jnp.ndarray] = None,
               ell: Optional[EllGraph] = None,
-              axis: Optional[str] = None) -> jnp.ndarray:
+              axis: Optional[str] = None,
+              part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
     """Label-conditioned RWR table r_lab: (n_max, L).
 
     Column ℓ is the RWR fixed point whose restart distribution is uniform
@@ -225,7 +259,7 @@ def label_rwr(g: DynamicGraph, n_labels: int, iters: int = 30,
     and the label-ℓ population — the seed-finder goodness input.
     """
     e = label_restarts(g, n_labels)
-    return rwr(g, e, iters=iters, c=c, r0=r0, ell=ell, axis=axis)
+    return rwr(g, e, iters=iters, c=c, r0=r0, ell=ell, axis=axis, part=part)
 
 
 @partial(jax.jit, static_argnames=("n_labels", "max_iters", "c", "tol",
@@ -234,7 +268,8 @@ def label_rwr_adaptive(g: DynamicGraph, n_labels: int, max_iters: int = 30,
                        tol: float = 1e-4, c: float = 0.15,
                        r0: Optional[jnp.ndarray] = None,
                        ell: Optional[EllGraph] = None,
-                       axis: Optional[str] = None
+                       axis: Optional[str] = None,
+                       part: Optional[PartitionedEdges] = None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Residual-adaptive :func:`label_rwr` →
     ``(r_lab, n_sweeps, n_col_skipped)`` — label columns converge at very
@@ -243,13 +278,14 @@ def label_rwr_adaptive(g: DynamicGraph, n_labels: int, max_iters: int = 30,
     well before the slowest column exits the loop."""
     e = label_restarts(g, n_labels)
     return rwr_adaptive(g, e, max_iters=max_iters, tol=tol, c=c, r0=r0,
-                        ell=ell, axis=axis)
+                        ell=ell, axis=axis, part=part)
 
 
 def rwr_residual(g: DynamicGraph, r: jnp.ndarray, e: jnp.ndarray,
                  c: float = 0.15,
                  ell: Optional[EllGraph] = None,
-                 axis: Optional[str] = None) -> jnp.ndarray:
+                 axis: Optional[str] = None,
+                 part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
     """‖r − (c·e + (1−c)·Pᵀr)‖∞ per column — convergence diagnostics."""
-    nxt = _sweep_fn(g, e, c, ell, axis)(r)
+    nxt = _sweep_fn(g, e, c, ell, axis, part)(r)
     return jnp.abs(nxt - r).max(axis=0)

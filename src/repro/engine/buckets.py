@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import EngineConfig, IGPMConfig
-from repro.core.graph import DynamicGraph
+from repro.core.graph import DynamicGraph, PartitionedEdges
 from repro.core.gray import BankGRayMatcher, GRayResult
 from repro.core.query import (PlanDAG, Query, QueryBank, SubPatternKey,
                               decompose, schedule_reads, stack_queries)
@@ -232,20 +232,24 @@ class QueryBucket:
               seed_filter: Optional[jnp.ndarray] = None,
               ell: Optional[EllGraph] = None,
               seeds: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-              graph_sharded: bool = False) -> GRayResult:
+              graph_sharded: bool = False,
+              part: Optional[PartitionedEdges] = None) -> GRayResult:
         """Match every row against ``g`` — vmap on one device, shard_map
         over the mesh otherwise. ``seeds`` short-circuits the top-k
         (the storm seed cache path). ``graph_sharded`` marks a full-graph
         call whose ``ell`` is the shard-local row-block mirror (the graph
         axis engages; only meaningful when the bucket has ``g_shards >
-        1``)."""
+        1``). ``part`` is the receiver-sliced COO edge store (partitioned
+        storage, DESIGN.md §10) — it replaces the graph's edge arrays on
+        the mesh and requires ``graph_sharded=True``."""
         if seeds is None:
             seeds = self.seeds(g, r_lab, seed_filter)
         seed_ids, seed_mask = seeds
         if self._sharded is not None:
             return self._sharded(g, r_lab, seed_ids, seed_mask, ell,
                                  self.bank, graph_sharded=graph_sharded,
-                                 row_node=self.row_node)
+                                 row_node=self.row_node, part=part)
+        assert part is None, "partitioned storage needs the graph mesh"
         return self.matcher.match_from_seeds(g, r_lab, seed_ids, seed_mask,
                                              ell=ell, bank=self.bank,
                                              row_node=self.row_node)

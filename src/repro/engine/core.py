@@ -25,7 +25,9 @@ functions of the state (ELL mirror, Louvain dendrogram, storm seed memo).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -34,8 +36,8 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.config.base import EngineConfig, IGPMConfig, resolve_backend
-from repro.core.graph import (DynamicGraph, EllCache, UpdateBatch,
-                              apply_update, updated_vertices)
+from repro.core.graph import (DynamicGraph, EdgePartition, EllCache,
+                              UpdateBatch, apply_update, updated_vertices)
 from repro.core.pem import PartialExecutionManager
 from repro.core.query import DagFull, Query, query_signature
 from repro.core.rwr import label_rwr, label_rwr_adaptive
@@ -72,9 +74,33 @@ class Engine:
             ecfg.shard, ecfg.graph_shard, cfg.n_max)
         self._sweeps = (ShardedSweep(self.g_shards)
                         if self.g_shards > 1 else None)
+        # edge-partitioned storage (DESIGN.md §10): co-partition the edge
+        # arrays with the receiver slices so each device holds ~1/g of the
+        # store. Host router (EdgePartition / partitioned EllCache) keeps
+        # the slices fresh; the mesh then never sees replicated edges.
+        if ecfg.edge_partition not in ("off", "on"):
+            raise ValueError(
+                f"unknown edge_partition policy {ecfg.edge_partition!r}")
+        self.partitioned = (ecfg.edge_partition == "on"
+                            and self.g_shards > 1)
         self.ell_cache = (EllCache(cfg.n_max, cfg.e_max, cfg.ell_width,
-                                   n_shards=self.g_shards)
+                                   n_shards=self.g_shards,
+                                   partitioned=self.partitioned,
+                                   headroom=ecfg.partition_headroom)
                           if cfg.backend == "ell" else None)
+        self.part_cache = (EdgePartition(cfg.n_max, cfg.e_max, self.g_shards,
+                                         headroom=ecfg.partition_headroom)
+                           if self.partitioned and cfg.backend == "coo"
+                           else None)
+        # per-bucket match fan-out pool (installed by the serving runtime
+        # when RuntimeConfig.n_executors > 1; None = serial dispatch)
+        self._exec_pool = None
+        # XLA collectives carry no cross-launch ordering: two threads
+        # launching shard_map programs over the same device set interleave
+        # their all_gather rendezvous and deadlock. When the graph mesh has
+        # collectives (g_shards > 1) pooled workers serialize device
+        # dispatch through this lock; single-device meshes skip it.
+        self._dispatch_lock = threading.Lock()
         self.buckets: Dict[Tuple[int, int], QueryBucket] = {}
         self.stores: Dict[str, PatternStore] = {}
         self._where: Dict[str, Tuple[int, int]] = {}  # qid → bucket (q, qe)
@@ -339,7 +365,14 @@ class Engine:
         if self.ell_cache is not None:
             self.ell_cache = EllCache(self.cfg.n_max, self.cfg.e_max,
                                       self.cfg.ell_width,
-                                      n_shards=self.g_shards)
+                                      n_shards=self.g_shards,
+                                      partitioned=self.partitioned,
+                                      headroom=self.ecfg.partition_headroom)
+        if self.part_cache is not None:
+            self.part_cache = EdgePartition(self.cfg.n_max, self.cfg.e_max,
+                                            self.g_shards,
+                                            headroom=self.ecfg
+                                            .partition_headroom)
 
     # -- the ONE step pipeline -------------------------------------------------
 
@@ -349,28 +382,68 @@ class Engine:
 
     def _apply(self, g: DynamicGraph,
                upd: UpdateBatch) -> Tuple[DynamicGraph, float]:
-        """Apply the update, refreshing the ELL mirror when one is carried.
+        """Apply the update, refreshing whichever mirror is carried (the
+        ELL cache and/or the edge-partition router — DESIGN.md §10).
 
         The returned refresh time covers only the mirror maintenance — the
-        COO ``apply_update`` is paid identically by both backends."""
-        if self.ell_cache is None:
+        COO ``apply_update`` is paid identically by all backends."""
+        mirrors = [m for m in (self.ell_cache, self.part_cache)
+                   if m is not None]
+        if not mirrors:
             return apply_update(g, upd), 0.0
-        if self.ell_cache._last is not g:
-            self.ell_cache.rebuild(g)
+        for m in mirrors:
+            if m._last is not g:
+                m.rebuild(g)
         g2 = apply_update(g, upd)
         t0 = time.perf_counter()
-        self.ell_cache.refresh(g, g2, upd)
-        jax.block_until_ready(self.ell_cache._cols_d)
+        for m in mirrors:
+            m.refresh(g, g2, upd)
+        jax.block_until_ready(self.ell_cache._cols_d
+                              if self.ell_cache is not None
+                              else self.part_cache._send_d)
         return g2, time.perf_counter() - t0
 
     @property
     def _full_ell(self):
         return None if self.ell_cache is None else self.ell_cache.ell
 
+    @property
+    def _full_part(self):
+        """The receiver-sliced edge partition to hand the graph mesh, or
+        None when edge partitioning is off / the ELL backend carries the
+        slices itself (its mirror is already built per receiver block)."""
+        return None if self.part_cache is None else self.part_cache.part
+
+    def _node_view(self, g: DynamicGraph) -> DynamicGraph:
+        """``g`` with the replicated COO edge arrays stubbed to width-1
+        placeholders. Partitioned mesh programs read only the node-level
+        fields (labels/node_mask/degree) plus the PartitionedEdges slices,
+        so shipping this view keeps replicated edge storage off the mesh
+        — the whole point of the partitioned layout."""
+        z = jnp.zeros((1,), jnp.int32)
+        return g._replace(senders=z, receivers=z,
+                          edge_mask=jnp.zeros((1,), bool))
+
+    def set_executor_pool(self, n_executors: int) -> None:
+        """Install (``n > 1``) or tear down (``n <= 1``) the per-bucket
+        match fan-out pool (DESIGN.md §10). Pool workers only launch the
+        independent per-bucket jit dispatches — on inputs identical to the
+        serial path — and the fan-in join happens in bucket order before
+        any merge, so pooled results are bit-identical to serial ones.
+        Host-side step decisions (seed memo, PEM, merge) never leave the
+        calling thread."""
+        if self._exec_pool is not None:
+            self._exec_pool.shutdown(wait=True)
+            self._exec_pool = None
+        if n_executors > 1:
+            self._exec_pool = ThreadPoolExecutor(
+                max_workers=n_executors,
+                thread_name_prefix="rt-bucket-exec")
+
     def _label_table(self, g: DynamicGraph,
                      r0: Optional[jnp.ndarray] = None,
                      iters: Optional[int] = None, ell=None,
-                     sharded: bool = False) -> jnp.ndarray:
+                     part=None, sharded: bool = False) -> jnp.ndarray:
         """The per-step label-RWR table — the single biggest sweep cost.
 
         ``sharded`` marks a FULL-graph call (storm/batch), which runs over
@@ -385,7 +458,7 @@ class Engine:
         if sharded and self._sweeps is not None:
             r, n, skipped = self._sweeps.label_table(
                 g, cfg.n_labels, iters, cfg.restart_prob, r0, ell,
-                tol=cfg.rwr_tol)
+                tol=cfg.rwr_tol, part=part)
             self._account_sweeps(int(n), int(skipped))
             # decommit from the sweep mesh: bucket meshes may span a
             # different device set, and multi-device-committed inputs do
@@ -539,6 +612,11 @@ class Engine:
         if self.control is not None and "control" in tree:
             self.control.load_state_dict(tree["control"])
         self._seed_memo.clear()
+        if self.pem is not None:
+            # the Louvain dendrogram is stale-tolerant (results-affecting)
+            # state, not a pure cache: drop it so an in-process load behaves
+            # exactly like a fresh process restoring the same checkpoint
+            self.pem.reset_clustering()
         # the ELL mirror resyncs on the next _apply (graph identity changed)
         return EngineState(
             graph=graph,
@@ -578,6 +656,57 @@ def engine_step(eng: Engine, state: EngineState,
             return _engine_step(eng, state, upd, obs, {})
         finally:
             obs.end_step(step_idx)
+
+
+def _run_matches(eng: Engine, jobs, obs: Obs, tracing: bool):
+    """Dispatch the per-bucket bank matches: serially without an executor
+    pool, fanned across the pool otherwise, with a fan-in join in bucket
+    submission order (the merge barrier) before returning. Each job is
+    ``(shape, bucket_key, thunk)``; buckets are independent jit dispatches
+    on identical inputs either way, so pooled results are bit-identical
+    to serial ones and ``results`` keeps bucket-insertion order. Pooled
+    ``t_gray`` sums per-worker seconds (may exceed wall time)."""
+    results = {}
+    t_gray = t_gwait = 0.0
+    pool = eng._exec_pool
+    if pool is None or len(jobs) <= 1:
+        for shape, bkey, thunk in jobs:
+            with obs.span("engine/gray", bucket=bkey) as sp:
+                results[shape] = thunk()
+            t_gray += sp.dur_s
+            if tracing:
+                with obs.span("engine/gray_wait", bucket=bkey) as spw:
+                    jax.block_until_ready(results[shape])
+                t_gwait += spw.dur_s
+        return results, t_gray, t_gwait
+
+    # collective-bearing programs (graph mesh sharded over >1 device) must
+    # not be launched concurrently: XLA orders collectives only within a
+    # launch, so two in-flight all_gathers over the same device set reach
+    # different rendezvous and deadlock. Serialize dispatch AND completion
+    # through the engine lock; a 1-device mesh has no collectives, and
+    # concurrent jit launches on one device are safe, so it runs lock-free.
+    lock = eng._dispatch_lock if eng.g_shards > 1 else None
+
+    def run(bkey, thunk):
+        with obs.span("engine/gray", bucket=bkey, pooled=True) as sp:
+            if lock is not None:
+                with lock:
+                    out = thunk()
+                    jax.block_until_ready(out)
+            else:
+                out = thunk()
+                if tracing:
+                    jax.block_until_ready(out)
+        return out, sp.dur_s
+
+    futs = [(shape, pool.submit(run, bkey, thunk))
+            for shape, bkey, thunk in jobs]
+    for shape, fut in futs:
+        out, dur = fut.result()
+        results[shape] = out
+        t_gray += dur
+    return results, t_gray, t_gwait
 
 
 def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
@@ -640,23 +769,23 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
         n_rec = n_live
         storm = True
         ell = eng._full_ell
+        part = eng._full_part
+        # partitioned storage: the mesh programs read edges from the
+        # PartitionedEdges slices, so ship a node-only view of g and keep
+        # the replicated COO arrays off the devices entirely
+        g_mesh = eng._node_view(g) if part is not None else g
         with obs.span("engine/rwr", mode="batch") as sp:
-            r_lab = eng._label_table(g, ell=ell, sharded=True)
+            r_lab = eng._label_table(g_mesh, ell=ell, part=part,
+                                     sharded=True)
             if tracing:
                 jax.block_until_ready(r_lab)
         if tracing:
             stage["rwr"] = sp.dur_s
-        results = {}
-        for shape, bucket in eng.buckets.items():
-            bkey = f"{shape[0]}x{shape[1]}"
-            with obs.span("engine/gray", bucket=bkey) as sp:
-                results[shape] = bucket.match(g, r_lab, ell=ell,
-                                              graph_sharded=True)
-            t_gray += sp.dur_s
-            if tracing:
-                with obs.span("engine/gray_wait", bucket=bkey) as spw:
-                    jax.block_until_ready(results[shape])
-                t_gwait += spw.dur_s
+        jobs = [(shape, f"{shape[0]}x{shape[1]}",
+                 (lambda b=bucket: b.match(g_mesh, r_lab, ell=ell,
+                                           graph_sharded=True, part=part)))
+                for shape, bucket in eng.buckets.items()]
+        results, t_gray, t_gwait = _run_matches(eng, jobs, obs, tracing)
         with obs.span("engine/device_wait") as sp:
             jax.block_until_ready(list(results.values()))
         elapsed = time.perf_counter() - t0
@@ -686,6 +815,8 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
             # many vertices updated to be re-computed" case), gated by the
             # staleness-keyed seed cache
             ell = eng._full_ell
+            part = eng._full_part
+            g_mesh = eng._node_view(g) if part is not None else g
             if (ecfg.seed_cache_staleness > 0 and state.r_lab is not None
                     and rlab_events <= ecfg.seed_cache_staleness):
                 r_lab = state.r_lab
@@ -700,11 +831,11 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                 with obs.span("engine/rwr", mode="storm",
                               warm=state.r_lab is not None) as sp:
                     r_lab = eng._label_table(
-                        g, r0=state.r_lab,
+                        g_mesh, r0=state.r_lab,
                         iters=(None if (state.r_lab is None
                                         or cfg.rwr_tol > 0)
                                else cfg.rwr_iters_incremental),
-                        ell=ell, sharded=True)
+                        ell=ell, part=part, sharded=True)
                     if tracing:
                         jax.block_until_ready(r_lab)
                 if tracing:
@@ -714,7 +845,7 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                 eng.rlab_misses += 1
             sf = jnp.asarray(rec_mask)
             mask_arr = np.asarray(rec_mask, bool)
-            results = {}
+            jobs = []
             bucket_hits = []
             for shape, bucket in eng.buckets.items():
                 bkey = f"{shape[0]}x{shape[1]}"
@@ -742,16 +873,13 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                     eng._seed_memo[shape] = (ver_key, mask_arr, seeds)
                     bucket_hits.append(False)
                     eng.seed_misses += 1
-                with obs.span("engine/gray", bucket=bkey) as sp:
-                    results[shape] = bucket.match(g, r_lab, seed_filter=sf,
-                                                  ell=ell, seeds=seeds,
-                                                  graph_sharded=True)
-                t_gray += sp.dur_s
-                if tracing:
-                    with obs.span("engine/gray_wait", bucket=bkey) as spw:
-                        jax.block_until_ready(results[shape])
-                    t_gwait += spw.dur_s
+                jobs.append((shape, bkey,
+                             (lambda b=bucket, s=seeds:
+                              b.match(g_mesh, r_lab, seed_filter=sf,
+                                      ell=ell, seeds=s,
+                                      graph_sharded=True, part=part))))
             seed_hit = bool(bucket_hits) and all(bucket_hits)
+            results, t_gray, t_gwait = _run_matches(eng, jobs, obs, tracing)
             with obs.span("engine/device_wait") as sp:
                 jax.block_until_ready(list(results.values()))
             elapsed = time.perf_counter() - t0
@@ -782,17 +910,11 @@ def _engine_step(eng: Engine, state: EngineState, upd: UpdateBatch,
                     jax.block_until_ready(r_sub)
             if tracing:
                 stage["rwr"] = sp.dur_s
-            results = {}
-            for shape, bucket in eng.buckets.items():
-                bkey = f"{shape[0]}x{shape[1]}"
-                with obs.span("engine/gray", bucket=bkey) as sp:
-                    results[shape] = bucket.match(sub.graph, r_sub,
-                                                  ell=sub.ell)
-                t_gray += sp.dur_s
-                if tracing:
-                    with obs.span("engine/gray_wait", bucket=bkey) as spw:
-                        jax.block_until_ready(results[shape])
-                    t_gwait += spw.dur_s
+            jobs = [(shape, f"{shape[0]}x{shape[1]}",
+                     (lambda b=bucket: b.match(sub.graph, r_sub,
+                                               ell=sub.ell)))
+                    for shape, bucket in eng.buckets.items()]
+            results, t_gray, t_gwait = _run_matches(eng, jobs, obs, tracing)
             with obs.span("engine/device_wait") as sp:
                 jax.block_until_ready(list(results.values()))
             elapsed = time.perf_counter() - t0

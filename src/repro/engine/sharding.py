@@ -42,7 +42,7 @@ try:  # jax ≥ 0.6 promoted shard_map out of experimental
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
-from repro.core.graph import DynamicGraph
+from repro.core.graph import DynamicGraph, PartitionedEdges
 from repro.core.gray import GRayResult, _bfs_reach_hops
 from repro.core.query import QueryBank
 from repro.core.rwr import label_rwr, label_rwr_adaptive, rwr, rwr_adaptive
@@ -123,10 +123,11 @@ class ShardedBankMatch:
         self.g_shards = g_shards
         devs = np.asarray(jax.devices()[:n_shards * g_shards])
         self.mesh = Mesh(devs.reshape(n_shards, g_shards), ("q", "g"))
-        self._fns = {}  # keyed (ell present, graph sharded)
+        self._fns = {}  # keyed (ell present, graph sharded, plan, part)
 
     def _build(self, g: DynamicGraph, ell: Optional[EllGraph],
-               graph_sharded: bool, has_plan: bool):
+               part: Optional[PartitionedEdges], graph_sharded: bool,
+               has_plan: bool):
         rep, q = _REP, P("q")
         axis = "g" if (graph_sharded and self.g_shards > 1) else None
         g_spec = jax.tree.map(lambda _: rep, g)
@@ -136,27 +137,30 @@ class ShardedBankMatch:
         # (node tables are replicated work, rows stay collective-free)
         plan_specs = (q,) if has_plan else ()
         out_specs = GRayResult(q, q, q, q, q)
+        # edge carriers (mutually exclusive): the ELL mirror replicates
+        # without a graph axis, the partitioned COO slices only exist ON
+        # the graph axis (each device receives its receiver slice)
+        extra_specs = ()
         if ell is not None:
-            ell_spec = jax.tree.map(
-                lambda _: P("g") if axis is not None else rep, ell)
+            extra_specs += (jax.tree.map(
+                lambda _: P("g") if axis is not None else rep, ell),)
+        if part is not None:
+            assert axis is not None and ell is None
+            extra_specs += (jax.tree.map(lambda _: P("g"), part),)
+        n_extra = len(extra_specs)
 
-            def f(g_, r_lab, seed_ids, seed_mask, ell_, labels, mask, anchor,
-                  osrc, odst, otree, omask, *plan):
-                return self.matcher._match_impl(
-                    g_, r_lab, seed_ids, seed_mask, ell_, labels, mask,
-                    anchor, osrc, odst, otree, omask,
-                    plan[0] if plan else None, graph_axis=axis)
+        def f(g_, r_lab, seed_ids, seed_mask, *rest):
+            ell_ = rest[0] if ell is not None else None
+            part_ = rest[n_extra - 1] if part is not None else None
+            labels, mask, anchor, osrc, odst, otree, omask = \
+                rest[n_extra:n_extra + 7]
+            plan = rest[n_extra + 7:]
+            return self.matcher._match_impl(
+                g_, r_lab, seed_ids, seed_mask, ell_, labels, mask,
+                anchor, osrc, odst, otree, omask,
+                plan[0] if plan else None, part_, graph_axis=axis)
 
-            in_specs = (g_spec, rep, q, q, ell_spec) + bank_specs + plan_specs
-        else:
-            def f(g_, r_lab, seed_ids, seed_mask, labels, mask, anchor,
-                  osrc, odst, otree, omask, *plan):
-                return self.matcher._match_impl(
-                    g_, r_lab, seed_ids, seed_mask, None, labels, mask,
-                    anchor, osrc, odst, otree, omask,
-                    plan[0] if plan else None, graph_axis=axis)
-
-            in_specs = (g_spec, rep, q, q) + bank_specs + plan_specs
+        in_specs = (g_spec, rep, q, q) + extra_specs + bank_specs + plan_specs
         return jax.jit(shard_map(f, mesh=self.mesh, in_specs=in_specs,
                                  out_specs=out_specs, check_rep=False))
 
@@ -164,17 +168,23 @@ class ShardedBankMatch:
                  seed_ids: jnp.ndarray, seed_mask: jnp.ndarray,
                  ell: Optional[EllGraph], bank: QueryBank,
                  graph_sharded: bool = False,
-                 row_node: Optional[jnp.ndarray] = None) -> GRayResult:
+                 row_node: Optional[jnp.ndarray] = None,
+                 part: Optional[PartitionedEdges] = None) -> GRayResult:
         # without a graph axis, graph_sharded compiles the identical
         # program — normalize so storm and induced calls share one trace
         graph_sharded = graph_sharded and self.g_shards > 1
-        key = (ell is not None, graph_sharded, row_node is not None)
+        if not graph_sharded:
+            part = None  # partitioned slices only exist on the graph axis
+        key = (ell is not None, graph_sharded, row_node is not None,
+               part is not None)
         if key not in self._fns:
-            self._fns[key] = self._build(g, ell, graph_sharded,
+            self._fns[key] = self._build(g, ell, part, graph_sharded,
                                          row_node is not None)
         args = (g, r_lab, seed_ids, seed_mask)
         if ell is not None:
             args = args + (ell,)
+        if part is not None:
+            args = args + (part,)
         args = args + (bank.labels, bank.mask, bank.anchor,
                        bank.order_src, bank.order_dst,
                        bank.order_tree, bank.order_mask)
@@ -207,13 +217,19 @@ class ShardedSweep:
         self._fns = {}
 
     def _specs(self, has_r0: bool, ell: Optional[EllGraph],
-               g: DynamicGraph, *extra):
+               g: DynamicGraph, *extra,
+               part: Optional[PartitionedEdges] = None):
         g_spec = jax.tree.map(lambda _: _REP, g)
         specs = (g_spec,) + tuple(_REP for _ in extra)
         if has_r0:
             specs = specs + (_REP,)
+        # edge carriers are mutually exclusive and always shard over "g"
+        # (the partitioned slices only exist on the graph axis)
         if ell is not None:
             specs = specs + (jax.tree.map(lambda _: P("g"), ell),)
+        if part is not None:
+            assert ell is None
+            specs = specs + (jax.tree.map(lambda _: P("g"), part),)
         return specs
 
     def _call(self, key, build, *args):
@@ -224,76 +240,94 @@ class ShardedSweep:
 
     def label_table(self, g: DynamicGraph, n_labels: int, iters: int,
                     c: float, r0: Optional[jnp.ndarray],
-                    ell: Optional[EllGraph], tol: float = 0.0
+                    ell: Optional[EllGraph], tol: float = 0.0,
+                    part: Optional[PartitionedEdges] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Sharded :func:`label_rwr` → ``(r_lab, n_sweeps, n_col_skipped)``
         (the sweep count is ``iters`` on the fixed path, measured when
         ``tol > 0``; the converged-column skip count is 0 on the fixed
         path)."""
         has_r0, has_ell = r0 is not None, ell is not None
-        key = ("lab", has_ell, has_r0, n_labels, iters, c, tol)
+        has_part = part is not None
+        key = ("lab", has_ell, has_part, has_r0, n_labels, iters, c, tol)
 
         def build():
             def f(g_, *rest):
                 r0_ = rest[0] if has_r0 else None
+                # edge carriers are mutually exclusive, both appended last
                 ell_ = rest[-1] if has_ell else None
+                part_ = rest[-1] if has_part else None
                 if tol > 0:
                     return label_rwr_adaptive(
                         g_, n_labels, max_iters=iters, tol=tol, c=c,
-                        r0=r0_, ell=ell_, axis="g")
+                        r0=r0_, ell=ell_, axis="g", part=part_)
                 return (label_rwr(g_, n_labels, iters=iters, c=c, r0=r0_,
-                                  ell=ell_, axis="g"), jnp.int32(iters),
-                        jnp.int32(0))
+                                  ell=ell_, axis="g", part=part_),
+                        jnp.int32(iters), jnp.int32(0))
 
             return jax.jit(shard_map(
-                f, mesh=self.mesh, in_specs=self._specs(has_r0, ell, g),
+                f, mesh=self.mesh,
+                in_specs=self._specs(has_r0, ell, g, part=part),
                 out_specs=(_REP, _REP, _REP), check_rep=False))
 
-        args = (g,) + ((r0,) if has_r0 else ()) + ((ell,) if has_ell else ())
+        args = ((g,) + ((r0,) if has_r0 else ())
+                + ((ell,) if has_ell else ())
+                + ((part,) if has_part else ()))
         return self._call(key, build, *args)
 
     def run_rwr(self, g: DynamicGraph, e: jnp.ndarray, iters: int,
                 c: float = 0.15, r0: Optional[jnp.ndarray] = None,
-                ell: Optional[EllGraph] = None, tol: float = 0.0
+                ell: Optional[EllGraph] = None, tol: float = 0.0,
+                part: Optional[PartitionedEdges] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Sharded :func:`rwr` / :func:`rwr_adaptive` →
         ``(r, n_sweeps, n_col_skipped)``."""
         has_r0, has_ell = r0 is not None, ell is not None
-        key = ("rwr", has_ell, has_r0, iters, c, tol)
+        has_part = part is not None
+        key = ("rwr", has_ell, has_part, has_r0, iters, c, tol)
 
         def build():
             def f(g_, e_, *rest):
                 r0_ = rest[0] if has_r0 else None
                 ell_ = rest[-1] if has_ell else None
+                part_ = rest[-1] if has_part else None
                 if tol > 0:
                     return rwr_adaptive(g_, e_, max_iters=iters, tol=tol,
-                                        c=c, r0=r0_, ell=ell_, axis="g")
+                                        c=c, r0=r0_, ell=ell_, axis="g",
+                                        part=part_)
                 return (rwr(g_, e_, iters=iters, c=c, r0=r0_, ell=ell_,
-                            axis="g"), jnp.int32(iters), jnp.int32(0))
+                            axis="g", part=part_), jnp.int32(iters),
+                        jnp.int32(0))
 
             return jax.jit(shard_map(
-                f, mesh=self.mesh, in_specs=self._specs(has_r0, ell, g, e),
+                f, mesh=self.mesh,
+                in_specs=self._specs(has_r0, ell, g, e, part=part),
                 out_specs=(_REP, _REP, _REP), check_rep=False))
 
-        args = (g, e) + ((r0,) if has_r0 else ()) + ((ell,) if has_ell else ())
+        args = ((g, e) + ((r0,) if has_r0 else ())
+                + ((ell,) if has_ell else ())
+                + ((part,) if has_part else ()))
         return self._call(key, build, *args)
 
     def reach(self, g: DynamicGraph, sources: jnp.ndarray, max_hops: int,
-              ell: Optional[EllGraph] = None) -> jnp.ndarray:
+              ell: Optional[EllGraph] = None,
+              part: Optional[PartitionedEdges] = None) -> jnp.ndarray:
         """Sharded :func:`~repro.core.gray._bfs_reach_hops`."""
-        has_ell = ell is not None
-        key = ("reach", has_ell, max_hops)
+        has_ell, has_part = ell is not None, part is not None
+        key = ("reach", has_ell, has_part, max_hops)
 
         def build():
             def f(g_, src_, *rest):
                 ell_ = rest[0] if has_ell else None
+                part_ = rest[-1] if has_part else None
                 return _bfs_reach_hops(g_, src_, max_hops, ell=ell_,
-                                       axis="g")
+                                       axis="g", part=part_)
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh,
-                in_specs=self._specs(False, ell, g, sources),
+                in_specs=self._specs(False, ell, g, sources, part=part),
                 out_specs=_REP, check_rep=False))
 
-        args = (g, sources) + ((ell,) if has_ell else ())
+        args = ((g, sources) + ((ell,) if has_ell else ())
+                + ((part,) if has_part else ()))
         return self._call(key, build, *args)

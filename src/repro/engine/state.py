@@ -64,7 +64,8 @@ class StepOutput(NamedTuple):
     storm: bool               # full-graph fallback taken this step
     subgraph_nodes: int
     subgraph_edges: int
-    ell_refresh_s: float      # ELL-mirror maintenance (outside ``elapsed``)
+    ell_refresh_s: float      # mirror maintenance (ELL cache and/or the
+                              # edge-partition router), outside ``elapsed``
     n_pruned: int
     n_events: int             # masked update entries applied this step
     rlab_cache_hit: bool      # storm step reused r_lab without refreshing

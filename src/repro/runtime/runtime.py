@@ -403,6 +403,9 @@ class ServingRuntime:
                 raise ValueError(
                     f"handoff_depth must be >= 1 (one staged batch is the "
                     f"double buffer), got {rcfg.handoff_depth}")
+            if rcfg.n_executors < 1:
+                raise ValueError(f"n_executors must be >= 1, "
+                                 f"got {rcfg.n_executors}")
         self.server = server
         self.rcfg = rcfg or RuntimeConfig()
         self.clock = clock or WallClock()
@@ -470,6 +473,12 @@ class ServingRuntime:
             self.acks.slo_s = workload.scenario.ack_slo_s
             self.acks.telemetry = self.telemetry
         self._graph = workload.graph
+        # multi-executor scale-out (DESIGN.md §10): the single rt-executor
+        # thread keeps the staged-handoff/step ordering, but fans each
+        # step's independent per-bucket matches across an engine-level
+        # pool — results join in bucket order before subscriber delivery,
+        # so the store stays bit-identical to n_executors=1
+        self.server.engine.set_executor_pool(self.rcfg.n_executors)
         t_in = threading.Thread(target=self._guard, name="rt-ingress",
                                 args=(self._ingress_main, workload))
         t_ex = threading.Thread(target=self._guard, name="rt-executor",
@@ -668,6 +677,7 @@ class ServingRuntime:
             # stores) via Engine.save — a restarted runtime resumes here
             srv.save(self.rcfg.checkpoint_dir)
             self.n_checkpoints += 1
+        srv.engine.set_executor_pool(1)  # drain the match fan-out pool
 
     def closed_summary(self, workload: Workload) -> Dict[str, float]:
         """Goodput / SLO-violation rollup of a closed-loop run (plus the

@@ -80,6 +80,35 @@ def test_async_store_bit_identical_to_sync(backend, kind):
 
 
 @pytest.mark.slow
+def test_multi_executor_store_identical_single_device():
+    """The per-bucket match fan-out pool (n_executors > 1) must be pure
+    plumbing: every bucket's match is the same jit call either way, and
+    the fan-in barrier joins futures in submission order, so a 2-executor
+    drain reproduces the single-executor stores bitwise — on one device,
+    with no graph axis in sight (DESIGN.md §10)."""
+    wl = _workload(flash_crowd, seed=7)
+    stores = {}
+    for n in (1, 2):
+        srv = _server(bank=4)  # 4 zoo shapes → >1 bucket → real fan-out
+        rt = ServingRuntime(srv, RuntimeConfig(ingress="lockstep",
+                                               n_executors=n,
+                                               # bank-4 cold compile blows
+                                               # the 60 s default on CPU
+                                               drain_timeout_s=600.0),
+                            clock=VirtualClock())
+        rt.serve(wl)
+        assert srv.engine._exec_pool is None  # torn down after drain
+        stores[n] = [dict(s._patterns) for s in srv.stores]
+    assert stores[1] == stores[2]
+
+
+def test_runtime_config_rejects_bad_executor_count():
+    with pytest.raises(ValueError, match="n_executors"):
+        ServingRuntime(_server(), RuntimeConfig(n_executors=0),
+                       clock=VirtualClock())
+
+
+@pytest.mark.slow
 def test_async_run_is_repeatable():
     """Two async runs of one seeded workload agree with each other —
     scheduling noise between the two threads never reaches the stores."""
