@@ -7,7 +7,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test fast bench-kernels bench-backends serve-smoke \
     engine-smoke sweep-smoke runtime-smoke decomp-smoke trace-smoke \
-    control-smoke partition-smoke bench-collect
+    control-smoke partition-smoke obs-watchdog-smoke bench-collect \
+    bench-regress
 
 # tier-1 command; testpaths covers tests/ including the backend-equivalence
 # suite (tests/test_backends.py) that pins the production ELL sweep path
@@ -98,6 +99,28 @@ partition-smoke:
 	    timeout 1800 $(PY) -m pytest tests/test_graph_sharding.py -q \
 	    -k "partition or executor or capacity"
 
+# health watchdog end-to-end (DESIGN.md §11): the freshness + watchdog
+# suites (per-query staleness oracle, burn windows, alias groups, ops
+# endpoints, regression sentinel), then stall injection against the live
+# threaded runtime — the injected executor stall must flip /health to
+# 503 "stalled" and trigger a flight-recorder dump within one monitor
+# period, with /metrics and /freshness staying up through the incident
+obs-watchdog-smoke:
+	timeout 600 $(PY) -m pytest tests/test_freshness.py \
+	    tests/test_health.py -q -m "not slow"
+	PYTHONPATH=src:. timeout 300 $(PY) benchmarks/watchdog_smoke.py
+
 # merge benchmarks/out/*.json into the top-level BENCH_SUMMARY.json
 bench-collect:
 	PYTHONPATH=src:. $(PY) benchmarks/collect.py
+
+# perf-regression sentinel: fresh rows vs benchmarks/baseline/. CI runs
+# the smoke serving bench and gates only the freshness/* rows — they are
+# VirtualClock + service-model runs, bit-deterministic across machines,
+# so a tight tolerance is safe on shared runners.
+bench-regress:
+	PYTHONPATH=src:. timeout 900 $(PY) benchmarks/serving_bench.py --smoke
+	PYTHONPATH=src:. $(PY) benchmarks/collect.py --out /tmp/fresh_summary.json
+	PYTHONPATH=src:. $(PY) benchmarks/regress.py \
+	    --fresh /tmp/fresh_summary.json \
+	    --suites serving_bench_smoke --rows freshness/ --rel-tol 0.1

@@ -6,10 +6,20 @@ machine-readable summary at the repo root so the perf trajectory is
 greppable across PRs without knowing which suite owns which row:
 
   {
-    "suites": {"<suite>": [{"name", "us_per_call", "derived"}, ...]},
-    "rows":   {"<suite>/<row name>": <us_per_call>, ...},   # flat index
+    "suites":    {"<suite>": [{"name", "us_per_call", "derived"}, ...]},
+    "rows":      {"<suite>/<row name>": <us_per_call>, ...},  # flat compat
+    "rows_meta": {"<suite>/<row name>":
+                      {"value", "unit", "direction"}, ...},
     "n_suites": ..., "n_rows": ...
   }
+
+``rows`` keeps the historical flat value map; ``rows_meta`` is what the
+regression sentinel (``benchmarks/regress.py``) consumes — the flat map
+alone is ambiguous, because ``control/*`` rows are *scores* (demand-
+accounted goodput events/s, higher is better, one even negative) living
+in the same namespace as µs latencies (lower is better). A comparator
+reading bare values would call an improved goodput score a latency
+regression, so every row carries its unit and direction explicitly.
 
   PYTHONPATH=src:. python benchmarks/collect.py [--out PATH]
 """
@@ -27,19 +37,36 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_SUMMARY.json")
 
 
+def row_meta(path: str, value: float) -> dict:
+    """Classify one flat row: ``control/*`` rows are higher-is-better
+    goodput scores in events/s (see ``serving_bench._control_rows``);
+    everything else — step/e2e latencies and the ``freshness/*``
+    staleness percentiles — is µs, lower is better."""
+    name = path.split("/", 1)[1] if "/" in path else path
+    if name.startswith("control/"):
+        unit, direction = "events_per_s", "higher"
+    else:
+        unit, direction = "us", "lower"
+    return {"value": value, "unit": unit, "direction": direction}
+
+
 def collect(out_path: str = DEFAULT_OUT) -> dict:
     suites = {}
     flat = {}
+    meta = {}
     for path in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
         suite = os.path.splitext(os.path.basename(path))[0]
         with open(path) as f:
             rows = json.load(f)
         suites[suite] = rows
         for r in rows:
-            flat[f"{suite}/{r['name']}"] = r["us_per_call"]
+            key = f"{suite}/{r['name']}"
+            flat[key] = r["us_per_call"]
+            meta[key] = row_meta(key, r["us_per_call"])
     summary = {
         "suites": suites,
         "rows": flat,
+        "rows_meta": meta,
         "n_suites": len(suites),
         "n_rows": len(flat),
     }

@@ -1,0 +1,157 @@
+"""Perf-regression sentinel: compare a fresh ``BENCH_SUMMARY.json``
+against the committed baseline.
+
+The bench trajectory had rows but no automated detection — a 2× step-
+latency regression would land silently unless a human diffed the JSON.
+This sentinel consumes the ``rows_meta`` schema (``benchmarks/collect.py``:
+``{value, unit, direction}`` per row) so it compares each row in its own
+direction — a µs latency regresses when it *grows*, a ``control/*``
+goodput score when it *drops* (scores can be negative: the flash-crowd
+static-best baseline is −124 events/s, so score deltas are measured
+against ``max(|old|, floor)``, never assumed positive).
+
+Noise tolerance: a row only counts as a regression when it moves past
+BOTH a relative threshold (``--rel-tol``, default 0.5 — smoke-scale
+suites on shared CI boxes jitter tens of percent; a genuine 2× always
+clears it) and an absolute floor (``--abs-floor-us`` for latencies,
+``--abs-floor-score`` for scores) that keeps sub-floor rows — e.g. a
+3 µs row doubling to 6 µs — from tripping the gate. Rows present on only
+one side are reported but never fatal (suites come and go across PRs);
+only the intersection gates.
+
+  PYTHONPATH=src:. python benchmarks/regress.py \\
+      [--baseline benchmarks/baseline/BENCH_SUMMARY.json] \\
+      [--fresh BENCH_SUMMARY.json] [--suites a,b] [--rel-tol 0.5]
+
+Exit status: 0 = no regressions, 1 = at least one, 2 = unusable input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "benchmarks", "baseline",
+                                "BENCH_SUMMARY.json")
+DEFAULT_FRESH = os.path.join(REPO_ROOT, "BENCH_SUMMARY.json")
+
+
+def load_rows_meta(path: str) -> Dict[str, dict]:
+    """``rows_meta`` from a summary file; legacy summaries (flat ``rows``
+    only) are upgraded through the collector's classifier so a new
+    sentinel can still gate against an old baseline."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc.get("rows_meta")
+    if meta is not None:
+        return meta
+    if REPO_ROOT not in sys.path:   # script-run: benchmarks/ is on the
+        sys.path.insert(0, REPO_ROOT)  # path, the repo root may not be
+    from benchmarks.collect import row_meta
+    return {key: row_meta(key, value)
+            for key, value in doc.get("rows", {}).items()}
+
+
+def compare_row(key: str, old: dict, new: dict, rel_tol: float,
+                abs_floor_us: float, abs_floor_score: float
+                ) -> Optional[Tuple[str, float]]:
+    """(verdict, severity) when the row moved adversely past the noise
+    thresholds, else None. Severity is the adverse relative move."""
+    ov, nv = float(old["value"]), float(new["value"])
+    if old.get("direction") != new.get("direction"):
+        return ("direction changed "
+                f"({old.get('direction')} -> {new.get('direction')})", 1e9)
+    if old.get("direction") == "higher":
+        drop = ov - nv
+        denom = max(abs(ov), abs_floor_score)
+        if drop > max(rel_tol * denom, abs_floor_score):
+            return (f"score dropped {ov:.2f} -> {nv:.2f}", drop / denom)
+    else:
+        growth = nv - ov
+        if growth > max(rel_tol * abs(ov), abs_floor_us):
+            return (f"latency grew {ov:.1f}us -> {nv:.1f}us",
+                    growth / max(abs(ov), 1e-9))
+    return None
+
+
+def run(baseline_path: str, fresh_path: str, suites: Optional[List[str]],
+        rel_tol: float, abs_floor_us: float, abs_floor_score: float,
+        rows: Optional[List[str]] = None) -> int:
+    try:
+        base = load_rows_meta(baseline_path)
+        fresh = load_rows_meta(fresh_path)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"[regress] unusable input: {e}")
+        return 2
+    if suites:
+        keep = tuple(s.strip() for s in suites if s.strip())
+        base = {k: v for k, v in base.items()
+                if k.split("/", 1)[0] in keep}
+        fresh = {k: v for k, v in fresh.items()
+                 if k.split("/", 1)[0] in keep}
+    if rows:
+        # name-prefix allowlist on the part after the suite — lets CI
+        # gate only the deterministic rows (VirtualClock + service-model
+        # runs) when the fresh summary comes from a differently-sized box
+        pfx = tuple(r.strip() for r in rows if r.strip())
+        base = {k: v for k, v in base.items()
+                if k.split("/", 1)[-1].startswith(pfx)}
+        fresh = {k: v for k, v in fresh.items()
+                 if k.split("/", 1)[-1].startswith(pfx)}
+    common = sorted(set(base) & set(fresh))
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+    if not common:
+        print(f"[regress] no overlapping rows between {baseline_path} "
+              f"and {fresh_path}")
+        return 2
+    regressions = []
+    for key in common:
+        hit = compare_row(key, base[key], fresh[key], rel_tol,
+                          abs_floor_us, abs_floor_score)
+        if hit is not None:
+            regressions.append((key, *hit))
+    for key in only_base:
+        print(f"[regress] note: row vanished: {key}")
+    for key in only_fresh:
+        print(f"[regress] note: new row (no baseline): {key}")
+    if regressions:
+        regressions.sort(key=lambda r: -r[2])
+        print(f"[regress] {len(regressions)} regression(s) over "
+              f"{len(common)} compared rows (rel_tol={rel_tol:g}):")
+        for key, verdict, sev in regressions:
+            print(f"[regress]   FAIL {key}: {verdict} (+{sev:.0%})")
+        return 1
+    print(f"[regress] ok: {len(common)} rows within tolerance "
+          f"(rel_tol={rel_tol:g}, baseline {baseline_path})")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--fresh", default=DEFAULT_FRESH)
+    ap.add_argument("--suites", default="",
+                    help="comma-separated suite allowlist ('' = all)")
+    ap.add_argument("--rows", default="",
+                    help="comma-separated row-name-prefix allowlist, "
+                         "matched after the suite segment ('' = all)")
+    ap.add_argument("--rel-tol", type=float, default=0.5,
+                    help="adverse relative move tolerated per row")
+    ap.add_argument("--abs-floor-us", type=float, default=50.0,
+                    help="latency growth below this many µs never gates")
+    ap.add_argument("--abs-floor-score", type=float, default=25.0,
+                    help="score drop below this many events/s never gates")
+    args = ap.parse_args()
+    suites = args.suites.split(",") if args.suites else None
+    rows = args.rows.split(",") if args.rows else None
+    sys.exit(run(args.baseline, args.fresh, suites, args.rel_tol,
+                 args.abs_floor_us, args.abs_floor_score, rows=rows))
+
+
+if __name__ == "__main__":
+    main()

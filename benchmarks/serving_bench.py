@@ -371,6 +371,67 @@ def _control_rows(smoke: bool) -> List[BenchRow]:
     return rows
 
 
+def _freshness_rows(smoke: bool) -> List[BenchRow]:
+    """Per-query staleness under the deterministic closed loop
+    (DESIGN.md §11).
+
+    One seeded flash-crowd workload replays through ``run_closed_loop``
+    under a ``VirtualClock`` + the calibrated ``sim_service_model`` with
+    a :class:`~repro.obs.freshness.FreshnessLedger` fed from the batch
+    fan-out, at bank64 and bank256. Every staleness sample is a pure
+    function of the seeds and the model — reproducible bit-for-bit
+    across machines — so these rows are the deterministic anchor the
+    regression sentinel (``benchmarks/regress.py``) gates hardest on.
+    Row value: p99 per-completion worst-query staleness in µs.
+    """
+    from repro.obs.freshness import FreshnessLedger
+    from repro.runtime import (VirtualClock, build_workload, flash_crowd,
+                               run_closed_loop, run_workload_sync,
+                               sim_service_model)
+
+    n = 256 if smoke else 512
+    ticks = 10 if smoke else 20
+    sc = flash_crowd(
+        rate=350.0, tick_s=0.3, n_ticks=ticks, n_vertices=n,
+        burst_amplitude=5.0, burst_period=10, burst_len=2,
+        seed=11, closed_loop=True, lag_ref_s=0.5, ack_slo_s=0.5)
+    wl = build_workload(sc, u_max=512)
+    model = sim_service_model()
+    rows: List[BenchRow] = []
+    for bank in (64, 256):
+        cfg = IGPMConfig(
+            n_max=wl.graph.n_max, e_max=wl.graph.e_max,
+            ell_width=8 if smoke else 16,
+            rwr_iters=8 if smoke else 15, rwr_iters_incremental=3,
+            top_k_patterns=6 if smoke else 10, init_community_size=32)
+        serving = ServingConfig(microbatch_window=256, queue_depth=512,
+                                telemetry_window=4096, full_graph_frac=-1.0)
+        server = MatchServer(cfg, query_zoo(bank), serving, seed=0)
+        run_workload_sync(server, wl, clock=VirtualClock())  # warm/compile
+        server.reset()
+        fresh = FreshnessLedger.from_engine(server.engine,
+                                            slo_s=sc.ack_slo_s)
+        clock = VirtualClock()
+        run_closed_loop(server, wl, clock=clock, service_model=model,
+                        freshness=fresh)
+        end = clock.now()
+        tel = server.telemetry
+        p50 = tel.latency_percentile(50, "freshness_staleness")
+        p99 = tel.latency_percentile(99, "freshness_staleness")
+        per_q = fresh.snapshot(end)
+        counters = fresh.counters()
+        rows.append(BenchRow(
+            f"freshness/bank{bank}/flash_crowd", 1e6 * p99,
+            f"p50_stal_ms={1e3 * p50:.1f};p99_stal_ms={1e3 * p99:.1f};"
+            f"queries={counters['freshness_queries']};"
+            f"groups={counters['freshness_groups']};"
+            f"breaches={counters['freshness_breaches']};"
+            f"completions={tel.channel_count('freshness_staleness')};"
+            f"worst_burn_slow={max((r.burn_slow for r in per_q), default=0.0):.3f};"
+            f"slo_ms={1e3 * sc.ack_slo_s:.0f}"))
+    return rows
+
+
 def run(smoke: bool = False, scale: float = 1.0,
         steps: Optional[int] = None) -> List[BenchRow]:
     spec = _spec(smoke, scale)
@@ -516,6 +577,7 @@ def run(smoke: bool = False, scale: float = 1.0,
     shrunk = smoke or scale != 1.0 or steps is not None
     rows.extend(_runtime_rows(shrunk))
     rows.extend(_control_rows(shrunk))
+    rows.extend(_freshness_rows(shrunk))
 
     # smoke/scaled runs must not clobber the committed default-scale artifact
     default_run = not smoke and scale == 1.0 and steps is None

@@ -10,6 +10,10 @@ Then validates everything tracing promises to produce:
   (``validate_jsonl``) and covers every engine pipeline stage;
 - the Chrome twin document is well-formed (``traceEvents`` list) so
   Perfetto/chrome://tracing load it;
+- the Prometheus artifact (exported file AND a live ``/metrics`` fetch
+  through :class:`~repro.obs.OpsServer`) passes the text-exposition
+  checks (``validate_exposition``: HELP/TYPE framing, name validity,
+  finite parseable samples);
 - a triggered flight-recorder dump is itself a valid JSONL trace;
 - a traced flash-crowd run through the threaded ``ServingRuntime``
   produces a cross-thread trace (ingress + executor tids) — committed
@@ -32,7 +36,7 @@ from repro.config.base import (IGPMConfig, ObsConfig, RuntimeConfig,
                                ServingConfig)
 from repro.core.query import query_zoo
 from repro.data.temporal import TemporalGraphSpec, generate_stream
-from repro.obs import Obs, read_jsonl, validate_jsonl
+from repro.obs import Obs, read_jsonl, validate_exposition, validate_jsonl
 from repro.serving import MatchServer
 
 TRACE_DIR = os.path.join(OUT_DIR, "traces")
@@ -83,7 +87,8 @@ def run() -> list:
     server.reset()
     server.engine.obs = Obs(ObsConfig(
         enabled=True, trace_path=prefix, flight_n=8,
-        flight_path=prefix + ".flight"))
+        flight_path=prefix + ".flight",
+        prometheus_path=prefix + ".prom"))
     t_on = _serve(server, stream)
     paths = server.engine.obs.export(server.telemetry.snapshot())
     server.engine.obs.close()
@@ -114,6 +119,36 @@ def run() -> list:
         doc = json.load(f)
     if not isinstance(doc.get("traceEvents"), list) or not doc["traceEvents"]:
         raise SystemExit("chrome trace twin has no traceEvents list")
+
+    # the Prometheus artifact must pass the text-exposition checks —
+    # both the exported file and what a live ``/metrics`` endpoint
+    # actually serves over HTTP (same renderer, but the round trip pins
+    # content-type and byte-level framing too)
+    with open(paths["prometheus"]) as f:
+        expo_errors = validate_exposition(f.read())
+    if expo_errors:
+        raise SystemExit(f"prometheus exposition violations: "
+                         f"{expo_errors[:5]}")
+    from urllib.request import urlopen
+
+    from repro.obs import OpsServer
+    ops = OpsServer(snapshot=server.telemetry.snapshot).start()
+    try:
+        with urlopen(f"{ops.url}/metrics", timeout=10) as resp:
+            ctype = resp.headers.get("Content-Type", "")
+            served = resp.read().decode("utf-8")
+    finally:
+        ops.close()
+    if not ctype.startswith("text/plain"):
+        raise SystemExit(f"/metrics content-type not text/plain: {ctype}")
+    expo_errors = validate_exposition(served)
+    if expo_errors:
+        raise SystemExit(f"served /metrics exposition violations: "
+                         f"{expo_errors[:5]}")
+    n_samples = sum(1 for ln in served.splitlines()
+                    if ln and not ln.startswith("#"))
+    print(f"# prometheus exposition ok: file + /metrics "
+          f"({n_samples} samples served)")
 
     # a triggered flight dump is itself a valid trace
     dump = server.engine.obs.flight_dump(reason="trace_smoke")

@@ -277,6 +277,10 @@ class ControlConfig:
     depth_ladder: Tuple[int, ...] = ()    # () → derived from serving config
     tol_ladder: Tuple[float, ...] = (1e-5, 1e-4, 1e-3, 1e-2)
     seed: int = 0
+    # append per-query freshness signals (worst staleness + fast burn,
+    # DESIGN.md §11) to the observation: 12 dims → 14. Off by default —
+    # the 12-dim layout is pinned unchanged in tests/test_control.py.
+    freshness_obs: bool = False
     dqn: DQNSpec = field(default_factory=lambda: DQNSpec(
         obs_dim=12, n_actions=7, hidden=(32, 32), epsilon=0.15, gamma=0.8,
         lr=2e-3, replay_capacity=4096, replay_batch=32,
@@ -303,6 +307,18 @@ class ObsConfig:
     when an e2e latency sample exceeds ``slo_e2e_ms``. ``profiler_dir``
     brackets steps ``[profile_start, profile_stop)`` in a
     ``jax.profiler`` trace session for device-level drill-down.
+
+    ``freshness=True`` attaches a per-standing-query
+    :class:`~repro.obs.freshness.FreshnessLedger` (DESIGN.md §11) to the
+    serving runtime: staleness/SLO-burn per query, ``freshness_*``
+    telemetry, and the ``/freshness`` ops route. ``watchdog=True`` runs
+    the :class:`~repro.obs.health.HealthMonitor` thread (heartbeats,
+    stall/saturation/partition-pressure/burn detectors, readiness).
+    ``metrics_port >= 0`` serves the live ops surface (``/metrics``
+    ``/health`` ``/freshness`` ``/flight``) on 127.0.0.1 — 0 binds an
+    ephemeral port, −1 (default) no server. All three are host-side
+    only: engine stores stay bitwise-identical with them enabled
+    (pinned in ``tests/test_freshness.py``).
     """
 
     enabled: bool = False
@@ -315,6 +331,21 @@ class ObsConfig:
     profiler_dir: str = ""     # jax.profiler trace dir ("" = off)
     profile_start: int = 0     # first step inside the profiler session
     profile_stop: int = 0      # first step outside it
+    # -- per-query freshness (DESIGN.md §11) --
+    freshness: bool = False        # per-standing-query staleness ledger
+    freshness_slo_s: float = 0.5   # staleness SLO the burn windows track
+    freshness_fast_s: float = 5.0  # fast burn window (acute breaches)
+    freshness_slow_s: float = 60.0  # slow burn window (smolder)
+    # -- health watchdog --
+    watchdog: bool = False         # monitor thread over runtime heartbeats
+    watchdog_period_s: float = 0.25   # check cadence
+    stall_after_s: float = 2.0     # heartbeat age ⇒ thread stalled
+    queue_high_frac: float = 0.9   # ingress-queue fill considered saturated
+    queue_dwell_periods: int = 3   # consecutive saturated checks ⇒ degraded
+    partition_near_frac: float = 0.9  # live-slice occupancy ⇒ degraded
+    burn_degraded: float = 0.5     # fast-window freshness burn ⇒ degraded
+    # -- live ops surface --
+    metrics_port: int = -1         # −1 off; 0 ephemeral; >0 fixed port
 
 
 @dataclass(frozen=True)

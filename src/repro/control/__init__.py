@@ -15,10 +15,10 @@ greedy inference (replayable); ``mode='off'`` builds nothing at all.
 """
 
 from repro.control.agent import ServingController
-from repro.control.env import (ACTION_NAMES, N_ACTIONS, OBS_DIM,
-                               ControllerEnv)
+from repro.control.env import (ACTION_NAMES, FRESHNESS_OBS_DIM, N_ACTIONS,
+                               OBS_DIM, ControllerEnv, obs_dim)
 
 __all__ = [
-    "ACTION_NAMES", "N_ACTIONS", "OBS_DIM",
+    "ACTION_NAMES", "N_ACTIONS", "OBS_DIM", "FRESHNESS_OBS_DIM", "obs_dim",
     "ControllerEnv", "ServingController",
 ]

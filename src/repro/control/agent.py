@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.config.base import ControlConfig
-from repro.control.env import N_ACTIONS, OBS_DIM, ControllerEnv
+from repro.control.env import N_ACTIONS, ControllerEnv, obs_dim
 from repro.core.dqn import DQNAgent, Transition
 from repro.runtime.runtime import AckLedger, RuntimeKnobs
 from repro.serving.server import MatchServer
@@ -38,16 +38,19 @@ class ServingController:
     """Decision loop + learner; see module docstring."""
 
     def __init__(self, server: MatchServer, knobs: RuntimeKnobs,
-                 ledger: AckLedger, ccfg: ControlConfig):
+                 ledger: AckLedger, ccfg: ControlConfig,
+                 freshness=None):
         if ccfg.mode not in ("train", "frozen"):
             raise ValueError(f"unknown control mode {ccfg.mode!r} "
                              "(off-mode builds no controller)")
         self.ccfg = ccfg
         self.mode = ccfg.mode
-        self.env = ControllerEnv(server, knobs, ledger, ccfg)
-        # the env fixes the interface shape; the spec's other fields
+        self.env = ControllerEnv(server, knobs, ledger, ccfg,
+                                 freshness=freshness)
+        # the env fixes the interface shape (12 dims, +2 when the
+        # freshness flag is on); the spec's other fields
         # (double/n_step/lr/...) stay caller-configurable
-        spec = dataclasses.replace(ccfg.dqn, obs_dim=OBS_DIM,
+        spec = dataclasses.replace(ccfg.dqn, obs_dim=obs_dim(ccfg),
                                    n_actions=N_ACTIONS)
         self.agent = DQNAgent(spec, seed=ccfg.seed)
         self._batches = 0

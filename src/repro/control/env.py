@@ -52,12 +52,22 @@ from repro.runtime.runtime import AckLedger, RuntimeKnobs
 from repro.serving.server import MatchServer
 
 OBS_DIM = 12
+# extra dims appended when ControlConfig.freshness_obs is on: worst
+# per-query staleness (in SLOs, clipped like lag) + worst fast-window
+# burn rate — the FreshnessLedger's pair (DESIGN.md §11)
+FRESHNESS_OBS_DIM = 2
 ACTION_NAMES: Tuple[str, ...] = (
     "noop", "window_up", "window_down", "depth_up", "depth_down",
     "tol_up", "tol_down")
 N_ACTIONS = len(ACTION_NAMES)
 
 _LAG_CLIP = 8.0  # lag is unbounded; clip at 8 SLOs
+
+
+def obs_dim(ccfg: ControlConfig) -> int:
+    """The observation width this config produces — 12 pinned dims, plus
+    the freshness pair behind the flag (tests pin 12 with it off)."""
+    return OBS_DIM + (FRESHNESS_OBS_DIM if ccfg.freshness_obs else 0)
 
 
 def _ladder_from(value: int, floor: int = 8) -> Tuple[int, ...]:
@@ -77,11 +87,16 @@ class ControllerEnv:
     """Observation/action surface between one server and its controller."""
 
     def __init__(self, server: MatchServer, knobs: RuntimeKnobs,
-                 ledger: AckLedger, ccfg: ControlConfig):
+                 ledger: AckLedger, ccfg: ControlConfig,
+                 freshness=None):
         self.server = server
         self.knobs = knobs
         self.ledger = ledger
         self.ccfg = ccfg
+        # per-query FreshnessLedger (None = feature off or no ledger in
+        # this runtime: the appended dims read as zeros, so the flagged
+        # layout is still well-defined without one)
+        self.freshness = freshness
         serving = server.serving
         self.window_ladder = (tuple(ccfg.window_ladder) or
                               _ladder_from(serving.microbatch_window))
@@ -184,6 +199,15 @@ class ControllerEnv:
             self.depth_idx / max(len(self.depth_ladder) - 1, 1),
             self.tol_idx / max(len(self.tol_ladder) - 1, 1),
         ], np.float32)
+        if self.ccfg.freshness_obs:
+            if self.freshness is not None:
+                stal, burn = self.freshness.worst(now)
+            else:
+                stal, burn = 0.0, 0.0
+            obs = np.concatenate([obs, np.array([
+                min(stal / slo, _LAG_CLIP) / _LAG_CLIP,
+                min(max(burn, 0.0), 1.0),
+            ], np.float32)])
         return obs
 
     # -- reward ---------------------------------------------------------------

@@ -396,6 +396,15 @@ class EdgePartition:
         """Per-device bytes of the replicated COO edge arrays."""
         return e_max * (4 + 4 + 1)
 
+    def occupancy(self) -> float:
+        """Worst live-arc fill fraction across slices ∈ [0, 1] — the
+        overflow-proximity signal the health watchdog degrades on before
+        :class:`PartitionOverflowError` fires (0.0 before any rebuild)."""
+        live = getattr(self, "_live", None)
+        if not live:
+            return 0.0
+        return max(live) / self.e_cap_slice
+
     def _overflow(self, d: int, live: int) -> None:
         raise PartitionOverflowError(
             f"edge slice {d} (receivers [{d * self.n_loc}, "
@@ -626,6 +635,17 @@ class EllCache:
         self._vals = jnp.ones((self.r_cap, k), jnp.float32)
         self._last: Optional[DynamicGraph] = None
         self.n_rebuilds = 0
+
+    def occupancy(self) -> float:
+        """Worst spill-cursor fill fraction across row blocks ∈ [0, 1] —
+        overflow proximity in partitioned mode, where a block that fills
+        raises :class:`PartitionOverflowError` at the next rebuild
+        instead of growing (0.0 before any rebuild)."""
+        next_row = getattr(self, "_next_row", None)
+        if not next_row:
+            return 0.0
+        return max((next_row[d] - d * self.r_cap_block) / self.r_cap_block
+                   for d in range(self.n_shards))
 
     # -- full (re)build ------------------------------------------------------
 

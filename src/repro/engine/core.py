@@ -308,6 +308,27 @@ class Engine:
     def qids(self) -> Tuple[str, ...]:
         return tuple(self._order)
 
+    def alias_groups(self) -> Dict[str, str]:
+        """qid → its frontier-group primary (itself unless an alias) for
+        every live standing query. Exact-duplicate group members share
+        one device row and receive identical result fan-out each step,
+        so any per-query delivery frontier is shared across the group —
+        the FreshnessLedger (DESIGN.md §11) consumes this map."""
+        return {qid: group[0]
+                for group in self._dups.values() for qid in group}
+
+    def partition_occupancy(self) -> Optional[float]:
+        """Worst live-slice fill fraction of the edge-partitioned storage
+        (DESIGN.md §10), or None when storage is not partitioned. This is
+        overflow *proximity*: 1.0 means the next uneven batch can raise
+        ``PartitionOverflowError`` — the health watchdog degrades before
+        that."""
+        if self.part_cache is not None:
+            return self.part_cache.occupancy()
+        if self.ell_cache is not None and self.partitioned:
+            return self.ell_cache.occupancy()
+        return None
+
     def occupancy(self) -> Dict[Tuple[int, int, int], Tuple[int, int]]:
         """bucket key (q_max, qe_max, B_pad) → (live rows, padded rows)."""
         return {b.key: (b.n_live, b.b_pad) for b in self.buckets.values()}

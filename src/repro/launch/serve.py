@@ -94,17 +94,23 @@ def _occupancy_str(server) -> str:
 
 
 def _obs_config(args):
-    """``--trace``/``--trace-out``/``--flight-n``/``--slo-ms`` →
-    :class:`ObsConfig` (DESIGN.md §8). Tracing stays off unless asked."""
+    """``--trace``/``--trace-out``/``--flight-n``/``--slo-ms``/
+    ``--metrics-port`` → :class:`ObsConfig` (DESIGN.md §8, §11). Tracing
+    stays off unless asked; ``--metrics-port`` turns on the live ops
+    surface and, with it, the per-query freshness ledger and the health
+    watchdog that feed its routes."""
     from repro.config.base import ObsConfig
 
+    port = getattr(args, "metrics_port", -1)
+    live = port >= 0
     if not (args.trace or args.trace_out):
-        return ObsConfig()
+        return ObsConfig(freshness=live, watchdog=live, metrics_port=port)
     out = args.trace_out or "benchmarks/out/traces/serve"
     return ObsConfig(enabled=True, trace_path=out,
                      flight_n=args.flight_n, flight_path=out + ".flight",
                      slo_e2e_ms=args.slo_ms,
-                     prometheus_path=out + ".prom")
+                     prometheus_path=out + ".prom",
+                     freshness=live, watchdog=live, metrics_port=port)
 
 
 def _report_obs(server) -> None:
@@ -300,7 +306,18 @@ def serve_igpm_async(arch, scenario: str, rate: float, ticks: int,
         rt.controller.freeze()
         rt.acks.reset()
     sub = rt.subscribe()
-    rt.serve(wl)
+    rt.start(wl)
+    if rt.ops is not None:
+        print(f"[serve] ops surface: {rt.ops.url}  "
+              f"(/metrics /health /freshness /flight)")
+    if not rt.join(timeout=rt.rcfg.drain_timeout_s + sc.duration_s):
+        rt.stop(drain=False)
+        raise TimeoutError("serving runtime did not finish the workload")
+    if rt.freshness is not None:
+        worst = rt.freshness.snapshot(rt.clock.now())[:3]
+        print("[serve] stalest queries: " + "  ".join(
+            f"{r.qid}={1e3 * r.staleness_s:.1f}ms(burn {r.burn_fast:.2f})"
+            for r in worst))
     _report("async", server)
     if closed_loop:
         cs = rt.closed_summary(wl)
@@ -390,6 +407,13 @@ def main() -> None:
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="igpm --trace: dump the flight ring when an e2e "
                          "latency sample exceeds this many ms (0 = off)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="igpm --async: serve the live ops surface "
+                         "(/metrics /health /freshness /flight) on "
+                         "127.0.0.1:PORT — 0 picks an ephemeral port, "
+                         "-1 (default) disables; also enables the "
+                         "per-query freshness ledger and the health "
+                         "watchdog (DESIGN.md §11)")
     args = ap.parse_args()
     arch = get_arch(args.arch, smoke=True)
     if arch.family == "lm":

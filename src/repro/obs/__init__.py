@@ -8,11 +8,19 @@ ingress → handoff → engine stages → merge → subscription fan-out.
 
 from repro.obs.trace import NULL_SPAN, NULL_TRACER, NullTracer, Obs, Tracer
 from repro.obs.flight import FlightRecorder
-from repro.obs.export import (read_jsonl, validate_events, validate_jsonl,
-                              write_chrome, write_jsonl, write_prometheus)
+from repro.obs.export import (prometheus_text, read_jsonl,
+                              validate_events, validate_exposition,
+                              validate_jsonl, write_chrome, write_jsonl,
+                              write_prometheus)
+from repro.obs.freshness import FreshnessLedger, QueryFreshness
+from repro.obs.health import HealthEvent, HealthMonitor
+from repro.obs.serve import OpsServer
 
 __all__ = [
     "Obs", "Tracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
     "FlightRecorder", "read_jsonl", "validate_events", "validate_jsonl",
-    "write_chrome", "write_jsonl", "write_prometheus",
+    "validate_exposition", "prometheus_text", "write_chrome", "write_jsonl",
+    "write_prometheus",
+    "FreshnessLedger", "QueryFreshness", "HealthMonitor", "HealthEvent",
+    "OpsServer",
 ]

@@ -7,13 +7,18 @@ Three formats, all plain text so post-mortems need no tooling:
 - **Chrome trace document** — the same events wrapped as
   ``{"traceEvents": [...]}``; chrome://tracing and Perfetto open it
   directly (they do not read bare JSONL).
-- **Prometheus text format** — one ``# TYPE`` + sample line per numeric
-  telemetry-snapshot key, for scrape-style collection.
+- **Prometheus text format** — ``# HELP`` + ``# TYPE`` + sample line per
+  numeric telemetry-snapshot key, for scrape-style collection (file via
+  :func:`write_prometheus`, string via :func:`prometheus_text` — the
+  ``/metrics`` ops endpoint serves the latter).
 
 ``validate_events``/``validate_jsonl`` check the span schema the tracer
 promises (``make trace-smoke`` gates on it): required fields present,
 phase is a known ``trace_event`` type, complete spans carry a
 non-negative microsecond duration, args is an object.
+:func:`validate_exposition` does the same for the Prometheus text:
+well-formed metric names, HELP/TYPE preceding each sample, parseable
+finite values.
 """
 
 from __future__ import annotations
@@ -29,7 +34,10 @@ REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
 # phases the tracer emits: X = complete span, i = instant, M = metadata
 KNOWN_PHASES = ("X", "i", "M")
 
+# characters folded to "_" when deriving a metric name from a snapshot key
 _METRIC_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+# a well-formed exposition metric name (no leading digit)
+VALID_METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 
 
 def _ensure_dir(path: str) -> None:
@@ -109,26 +117,100 @@ def validate_jsonl(path: str) -> List[str]:
     return validate_events(events)
 
 
-def write_prometheus(snapshot: Dict[str, Any], path: str,
-                     prefix: str = "repro") -> str:
-    """Render a telemetry snapshot as Prometheus text format (gauges).
+def metric_name(key: str, prefix: str = "repro") -> str:
+    """Derive a well-formed exposition metric name from a snapshot key:
+    fold characters outside ``[a-zA-Z0-9_:]`` to ``_`` and guard the
+    no-leading-digit rule. Raises if the result is still invalid
+    (empty key / empty prefix edge cases) — a malformed name must fail
+    at render time, not at the scraper."""
+    name = _METRIC_NAME_RE.sub("_", f"{prefix}_{key}" if prefix else key)
+    if name and name[0].isdigit():
+        name = "_" + name
+    if not VALID_METRIC_NAME_RE.match(name):
+        raise ValueError(f"cannot derive a valid metric name from "
+                         f"key={key!r} prefix={prefix!r}")
+    return name
 
-    Non-numeric and non-finite values are skipped; key characters
-    outside ``[a-zA-Z0-9_:]`` are folded to ``_``.
+
+def prometheus_text(snapshot: Dict[str, Any], prefix: str = "repro") -> str:
+    """Render a telemetry snapshot as Prometheus text exposition format
+    (all gauges, with ``# HELP`` / ``# TYPE`` per metric).
+
+    Non-numeric and non-finite values are skipped. Keys folding to the
+    same metric name keep the first (sorted) key — names are never
+    emitted twice, which the exposition format forbids.
     """
-    _ensure_dir(path)
     lines = []
+    seen = set()
     for key in sorted(snapshot):
         val = snapshot[key]
         if isinstance(val, bool) or not isinstance(val, (int, float)):
             continue
         if isinstance(val, float) and not math.isfinite(val):
             continue
-        name = _METRIC_NAME_RE.sub("_", f"{prefix}_{key}")
+        name = metric_name(key, prefix)
+        if name in seen:
+            continue
+        seen.add(name)
+        lines.append(f"# HELP {name} telemetry snapshot key {key!r}")
         lines.append(f"# TYPE {name} gauge")
         lines.append(f"{name} {float(val):.9g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(snapshot: Dict[str, Any], path: str,
+                     prefix: str = "repro") -> str:
+    """Write :func:`prometheus_text` to a file; returns the path."""
+    _ensure_dir(path)
     with open(path, "w") as f:
-        f.write("\n".join(lines))
-        if lines:
-            f.write("\n")
+        f.write(prometheus_text(snapshot, prefix=prefix))
     return path
+
+
+def validate_exposition(text: str) -> List[str]:
+    """Schema-check Prometheus text exposition; returns violations
+    (empty = valid). Checked: metric-name well-formedness on every
+    sample and comment line, each sample preceded by its own HELP and
+    TYPE, values parse to finite floats, no duplicate sample names."""
+    errors: List[str] = []
+    helped, typed, sampled = set(), set(), set()
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            parts = line.split(None, 3)
+            if len(parts) < 4:
+                errors.append(f"line {i}: truncated comment {line!r}")
+                continue
+            name = parts[2]
+            if not VALID_METRIC_NAME_RE.match(name):
+                errors.append(f"line {i}: bad metric name {name!r}")
+            (helped if parts[1] == "HELP" else typed).add(name)
+            continue
+        if line.startswith("#"):
+            continue   # free-form comment: legal, uncheckable
+        parts = line.split()
+        if len(parts) < 2:
+            errors.append(f"line {i}: malformed sample {line!r}")
+            continue
+        name = parts[0].split("{", 1)[0]
+        if not VALID_METRIC_NAME_RE.match(name):
+            errors.append(f"line {i}: bad metric name {name!r}")
+            continue
+        if name in sampled:
+            errors.append(f"line {i}: duplicate metric {name!r}")
+        sampled.add(name)
+        if name not in helped:
+            errors.append(f"line {i}: {name!r} sample without # HELP")
+        if name not in typed:
+            errors.append(f"line {i}: {name!r} sample without # TYPE")
+        try:
+            val = float(parts[-1])
+        except ValueError:
+            errors.append(f"line {i}: unparseable value {parts[-1]!r}")
+            continue
+        if not math.isfinite(val):
+            errors.append(f"line {i}: non-finite value {parts[-1]!r}")
+    if not sampled:
+        errors.append("no samples")
+    return errors

@@ -33,6 +33,10 @@ class FlightRecorder:
         self._ring: Deque[Tuple[int, List[Dict[str, Any]]]] = deque(maxlen=n)
         self.loose: Deque[Dict[str, Any]] = deque(maxlen=LOOSE_CAP)
         self._lock = threading.Lock()
+        # serialises whole dumps: the triggered de-dup check and the
+        # counters it guards must be atomic across concurrent triggers
+        # (SLO breach racing a crash dump from another thread)
+        self._dump_lock = threading.Lock()
         self.n_dumps = 0
         self.last_reason = ""
         self.last_path: Optional[str] = None
@@ -58,28 +62,31 @@ class FlightRecorder:
         ``triggered=True`` marks crash/SLO dumps: they are skipped when
         no step newer than the last triggered dump is in the ring, and
         when no ``path``/``path_prefix`` is configured. A manual dump
-        with an explicit ``path`` always writes.
+        with an explicit ``path`` always writes. Concurrent callers are
+        serialised, so two racing triggers over the same evidence yield
+        exactly one file.
         """
-        records, loose = self._snapshot()
-        newest = max((s for s, _ in records), default=-1)
-        if triggered and newest <= self._dumped_through:
-            return None
-        if path is None:
-            if not self.path_prefix:
+        with self._dump_lock:
+            records, loose = self._snapshot()
+            newest = max((s for s, _ in records), default=-1)
+            if triggered and newest <= self._dumped_through:
                 return None
-            path = f"{self.path_prefix}.{self.n_dumps:03d}.jsonl"
-        self.n_dumps += 1
-        self.last_reason = reason
-        if triggered:
-            self._dumped_through = newest
-        marker = {
-            "name": "flight_dump", "ph": "i", "s": "g", "ts": 0.0,
-            "pid": 1, "tid": 0,
-            "args": {"reason": reason, "steps": [s for s, _ in records],
-                     "n_loose": len(loose)},
-        }
-        events = [marker] + loose
-        for _, evs in records:
-            events.extend(evs)
-        self.last_path = _export.write_jsonl(events, path)
-        return self.last_path
+            if path is None:
+                if not self.path_prefix:
+                    return None
+                path = f"{self.path_prefix}.{self.n_dumps:03d}.jsonl"
+            self.n_dumps += 1
+            self.last_reason = reason
+            if triggered:
+                self._dumped_through = newest
+            marker = {
+                "name": "flight_dump", "ph": "i", "s": "g", "ts": 0.0,
+                "pid": 1, "tid": 0,
+                "args": {"reason": reason, "steps": [s for s, _ in records],
+                         "n_loose": len(loose)},
+            }
+            events = [marker] + loose
+            for _, evs in records:
+                events.extend(evs)
+            self.last_path = _export.write_jsonl(events, path)
+            return self.last_path

@@ -51,6 +51,8 @@ from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
 from repro.config.base import RuntimeConfig
 from repro.core.graph import DynamicGraph, UpdateBatch
 from repro.obs import Obs
+from repro.obs.freshness import FreshnessLedger
+from repro.obs.health import HealthMonitor
 from repro.runtime.clock import Clock, VirtualClock, WallClock
 from repro.runtime.scenarios import ClosedLoopSource, Workload
 from repro.serving.queue import UpdateQueue
@@ -208,6 +210,12 @@ class AckLedger:
     def __init__(self, slo_s: float = 0.25):
         self.slo_s = slo_s
         self.telemetry = None          # optional; set by the runtime
+        # batch-completion hook: called as (step, arrivals, t) after the
+        # frontier advances — the per-query FreshnessLedger rides here so
+        # its staleness semantics are definitionally the ack semantics
+        # (a batch is fresh for a query exactly when its events count
+        # toward the frontier, eviction forfeits included)
+        self.on_complete = None
         self._lock = threading.Lock()
         self._pending: Dict[int, Tuple[Tuple[float, ...], Dict[int, int]]] = {}
         self._frontier = 0.0
@@ -224,7 +232,7 @@ class AckLedger:
             if expected:
                 self._pending[step] = (arrivals, dict(expected))
             else:
-                self._complete(arrivals, t)
+                self._complete(step, arrivals, t)
 
     def ack(self, sub_id: int, step: int, t: float) -> None:
         with self._lock:
@@ -237,9 +245,10 @@ class AckLedger:
             self.n_acked += 1
             if all(v == 0 for v in left.values()):
                 del self._pending[step]
-                self._complete(arrivals, t)
+                self._complete(step, arrivals, t)
 
-    def _complete(self, arrivals: Tuple[float, ...], t: float) -> None:
+    def _complete(self, step: int, arrivals: Tuple[float, ...],
+                  t: float) -> None:
         for a in arrivals:
             if t - a <= self.slo_s:
                 self.n_good += 1
@@ -251,10 +260,13 @@ class AckLedger:
         if self.telemetry is not None and arrivals:
             self.telemetry.record_latency("ack_lag",
                                           *(t - a for a in arrivals))
+        if self.on_complete is not None:
+            self.on_complete(step, arrivals, t)
 
     def reset(self) -> None:
         """Clear all accounting (train-then-freeze runs reuse one ledger
-        across episodes and measure only the final frozen run)."""
+        across episodes and measure only the final frozen run); the
+        ``on_complete`` hook survives."""
         with self._lock:
             self._pending.clear()
             self._frontier = 0.0
@@ -434,10 +446,43 @@ class ServingRuntime:
         self._last_service_s = 0.0     # clock-time of the last device step
         self._n_batches = 0
         self.controller = None
+        # freshness / watchdog / ops surface (DESIGN.md §11) — all
+        # host-side, all off by default; ocfg is the runtime-level
+        # ObsConfig override when given, else the engine hub's
+        ocfg = self.rcfg.obs if self.rcfg.obs is not None else self.obs.cfg
+        self.obs_cfg = ocfg
+        self.freshness: Optional[FreshnessLedger] = None
+        if ocfg.freshness:
+            self.freshness = FreshnessLedger.from_engine(
+                server.engine, t0=self.clock.now(),
+                telemetry=self.telemetry, slo_s=ocfg.freshness_slo_s,
+                fast_window_s=ocfg.freshness_fast_s,
+                slow_window_s=ocfg.freshness_slow_s)
+            # completion (every expected ack or forfeit in) is the ONE
+            # moment per-query frontiers may advance — ride the ack path
+            self.acks.on_complete = self.freshness.complete
+        self.health: Optional[HealthMonitor] = None
+        if ocfg.watchdog:
+            self.health = HealthMonitor(
+                clock=self.clock, period_s=ocfg.watchdog_period_s,
+                stall_after_s=ocfg.stall_after_s,
+                queue_high_frac=ocfg.queue_high_frac,
+                queue_dwell_periods=ocfg.queue_dwell_periods,
+                partition_near_frac=ocfg.partition_near_frac,
+                burn_degraded=ocfg.burn_degraded,
+                obs=self.obs, freshness=self.freshness)
+            self.health.attach_queue(
+                lambda: min(len(self.server.queue)
+                            / max(self.knobs.queue_depth, 1), 1.0))
+            self.health.attach_partition(server.engine.partition_occupancy)
+            self.health.attach_pending(
+                lambda: len(self._ingress) + len(self._handoff))
+        self.ops = None                # OpsServer, bound at start()
         if self.rcfg.control.mode != "off":
             from repro.control import ServingController  # avoid cycle
             self.controller = ServingController(
-                server, self.knobs, self.acks, self.rcfg.control)
+                server, self.knobs, self.acks, self.rcfg.control,
+                freshness=self.freshness)
             server.engine.control = self.controller
 
     # -- subscriptions --------------------------------------------------------
@@ -466,7 +511,10 @@ class ServingRuntime:
         # would silently desync from the one step_packed reads)
         self._ingress = _StampedIngress(self.server.queue)
         self.telemetry = self.server.telemetry
+        if self.freshness is not None:
+            self.freshness.telemetry = self.telemetry
         self.knobs.apply()  # re-assert knob state on the (maybe new) queue
+        self._start_obs_services()
         if self.controller is not None:
             self.controller.begin_episode()
         if workload.scenario.closed_loop:
@@ -518,9 +566,48 @@ class ServingRuntime:
             t.join(None if deadline is None
                    else max(deadline - time.monotonic(), 0.0))
         alive = any(t.is_alive() for t in self._threads)
-        if not alive and self._exc:
-            raise self._exc[0]
+        if not alive:
+            # fully stopped: record freshness rollups, then take down the
+            # monitor/ops threads (a stalled runtime keeps both up — the
+            # ops surface is most valuable exactly then)
+            self._stop_obs_services()
+            if self._exc:
+                raise self._exc[0]
         return not alive
+
+    def _start_obs_services(self) -> None:
+        ocfg = self.obs_cfg
+        if self.health is not None and ocfg.watchdog_period_s > 0 \
+                and self.health._thread is None:
+            self.health.start()
+        if self.ops is None and ocfg.metrics_port >= 0:
+            from repro.obs.serve import OpsServer  # lazy: http only if used
+            self.ops = OpsServer(
+                snapshot=self.ops_snapshot,
+                health=(self.health.status
+                        if self.health is not None else None),
+                freshness=((lambda: self.freshness.snapshot(
+                    self.clock.now()))
+                    if self.freshness is not None else None),
+                flight=lambda: self.obs.flight_dump(reason="ops"),
+                port=ocfg.metrics_port).start()
+
+    def _stop_obs_services(self) -> None:
+        if self.freshness is not None and self.telemetry is not None:
+            self.telemetry.record_counters(self.freshness.counters())
+        if self.health is not None:
+            self.health.close()
+        if self.ops is not None:
+            self.ops.close()
+            self.ops = None
+
+    def ops_snapshot(self) -> Dict[str, float]:
+        """Telemetry snapshot + live ``freshness_*`` counters — what the
+        ``/metrics`` scrape renders."""
+        snap = dict(self.telemetry.snapshot())
+        if self.freshness is not None:
+            snap.update(self.freshness.counters())
+        return snap
 
     @property
     def graph(self) -> Optional[DynamicGraph]:
@@ -591,6 +678,8 @@ class ServingRuntime:
                 self.clock.wait_until(i * sc.tick_s, self._stop_ingest)
                 if self._stop_ingest.is_set():
                     break
+                if self.health is not None:
+                    self.health.beat("ingress", self.clock.now())
                 lag = self.acks.lag(
                     self.clock.now(),
                     pending=len(self._ingress) + len(self._handoff))
@@ -609,6 +698,8 @@ class ServingRuntime:
                 self.clock.wait_until(tick.t, self._stop_ingest)
                 if self._stop_ingest.is_set():
                     break
+                if self.health is not None:
+                    self.health.beat("ingress", self.clock.now())
                 with self.obs.span("ingress/offer",
                                    n_events=len(tick.events)):
                     for ev in tick.events:
@@ -625,6 +716,8 @@ class ServingRuntime:
         if self.controller is not None and not self._stop_now.is_set():
             self.controller.end_episode(self.clock.now())
         self._handoff.close()
+        if self.health is not None:   # clean exit: drained ≠ stalled
+            self.health.set_inactive("ingress")
 
     def _executor_main(self) -> None:
         srv = self.server
@@ -632,6 +725,8 @@ class ServingRuntime:
         g = self._graph
         every = self.rcfg.checkpoint_every
         while not self._stop_now.is_set():
+            if self.health is not None:
+                self.health.beat("executor", self.clock.now())
             item = self._handoff.pop(timeout=0.05)
             if item is None:
                 if self._handoff.closed and len(self._handoff) == 0:
@@ -661,6 +756,11 @@ class ServingRuntime:
                                     or sub.query == d.query)
                             if n:
                                 expected[sub.sub_id] = n
+                    if self.freshness is not None:
+                        # the per-query fan-out of this batch, recorded
+                        # BEFORE deliver: expected={} completes inside it
+                        self.freshness.deliver(
+                            st.step, [d.query for d in st.deltas])
                     self.acks.deliver(st.step, item.arrivals, t_done,
                                       expected)
                     for sub in self._subs:
@@ -678,6 +778,8 @@ class ServingRuntime:
             srv.save(self.rcfg.checkpoint_dir)
             self.n_checkpoints += 1
         srv.engine.set_executor_pool(1)  # drain the match fan-out pool
+        if self.health is not None:
+            self.health.set_inactive("executor")
 
     def closed_summary(self, workload: Workload) -> Dict[str, float]:
         """Goodput / SLO-violation rollup of a closed-loop run (plus the
@@ -770,7 +872,8 @@ def run_closed_loop(server: MatchServer, workload: Workload,
                     controller=None,
                     knobs: Optional[RuntimeKnobs] = None,
                     ledger: Optional[AckLedger] = None,
-                    service_model=None
+                    service_model=None,
+                    freshness: Optional[FreshnessLedger] = None
                     ) -> Tuple[DynamicGraph, List[ServingStepStats],
                                AckLedger]:
     """Single-threaded closed-loop reference driver (DESIGN.md §9).
@@ -798,6 +901,12 @@ def run_closed_loop(server: MatchServer, workload: Workload,
     a pure function of the seeds and the model, reproducible across
     runs and machines.
 
+    ``freshness`` (optional): a :class:`~repro.obs.freshness.
+    FreshnessLedger` to feed — per-batch query fan-out recorded before
+    delivery, completion via the ledger's ``on_complete`` hook — giving
+    deterministic per-query staleness traces under a ``VirtualClock``
+    (what ``serving_bench``'s freshness rows and the oracle tests use).
+
     Returns ``(graph, stats, ledger)``.
     """
     sc = workload.scenario
@@ -812,6 +921,9 @@ def run_closed_loop(server: MatchServer, workload: Workload,
     if ledger is None:
         ledger = AckLedger(slo_s=sc.ack_slo_s)
     ledger.telemetry = server.telemetry
+    if freshness is not None:
+        freshness.telemetry = server.telemetry
+        ledger.on_complete = freshness.complete
     src = ClosedLoopSource(workload)
     ledger.closed_src = src
     ingress = _StampedIngress(server.queue)
@@ -837,6 +949,8 @@ def run_closed_loop(server: MatchServer, workload: Workload,
             clock.advance_to(t0 + float(service_model(item.n_events)))
         t1 = clock.now()
         _record_batch_latencies(server.telemetry, item, t1)
+        if freshness is not None:
+            freshness.deliver(st.step, [d.query for d in st.deltas])
         ledger.deliver(st.step, item.arrivals, t1, expected={})
         stats.append(st)
         if controller is not None:

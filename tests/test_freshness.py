@@ -1,0 +1,341 @@
+"""Per-standing-query freshness tests (DESIGN.md §11).
+
+Pins the FreshnessLedger acceptance contract:
+  * oracle correctness — staleness and SLO-burn are hand-computable
+    functions of the (deliver, complete) event stream; the ledger's
+    event-driven burn integration matches the closed forms exactly;
+  * alias groups — an alias shares its primary's frontier object, so
+    the two can never drift; group bookkeeping is per-group, not
+    per-member;
+  * exactly-once — a batch completes at most once (late duplicate
+    completions are ignored; re-delivering a step id is an error);
+  * ack-path consistency — completion rides ``AckLedger.on_complete``,
+    so an eviction forfeit (``ack`` called by the subscriber's drop
+    path) advances per-query frontiers exactly like a real ack;
+  * closed-loop replay — under a ``VirtualClock`` + the deterministic
+    service model, the ledger's per-query frontiers equal the oracle
+    recomputed from the recorded completion stream;
+  * zero intrusion — engine stores are bitwise identical with the
+    ledger attached (it is pure host-side bookkeeping);
+  * controller observation — the 12-dim layout is pinned unchanged with
+    ``ControlConfig.freshness_obs`` off; on, exactly the documented
+    staleness/burn pair is appended.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.config.base import ControlConfig, IGPMConfig, ServingConfig
+from repro.core.query import query_zoo
+from repro.obs.freshness import FreshnessLedger
+from repro.runtime.runtime import AckLedger, RuntimeKnobs
+from repro.serving import MatchServer
+
+
+def _cfg(**kw):
+    base = dict(n_max=128, e_max=8192, ell_width=8, rwr_iters=6,
+                rwr_iters_incremental=2, top_k_patterns=4,
+                init_community_size=32)
+    base.update(kw)
+    return IGPMConfig(**base)
+
+
+def _server(bank=4, **serving_kw):
+    serving_kw.setdefault("microbatch_window", 64)
+    return MatchServer(_cfg(), query_zoo(bank),
+                       ServingConfig(**serving_kw), seed=0)
+
+
+def _led(**kw):
+    kw.setdefault("slo_s", 1.0)
+    kw.setdefault("fast_window_s", 10.0)
+    kw.setdefault("slow_window_s", 20.0)
+    return FreshnessLedger(**kw)
+
+
+# -- oracle correctness (direct drive) ----------------------------------------
+
+def test_staleness_and_burn_match_hand_computation():
+    led = _led()
+    led.register("a")
+    led.deliver(1, ["a"])
+    led.complete(1, (1.5, 2.0), t=3.0)
+    # frontier = newest arrival; staleness grows linearly from there
+    assert led.staleness("a", 3.0) == pytest.approx(1.0)
+    assert led.staleness("a", 4.5) == pytest.approx(2.5)
+    # burn over (0, 3]: staleness crossed the 1.0 SLO at t=1 (frontier
+    # was still t0=0), so 2s of the fast window were over-SLO
+    _, burn = led.worst(3.0)
+    assert burn == pytest.approx(2.0 / 10.0)
+
+    led.deliver(2, ["a"])
+    led.complete(2, (2.5,), t=4.0)
+    # (3, 4]: frontier 2.0 ⇒ over-SLO beyond t=3 ⇒ 1 more second
+    rows = led.snapshot(4.0)
+    assert len(rows) == 1
+    r = rows[0]
+    assert r.frontier == pytest.approx(2.5)
+    assert r.staleness_s == pytest.approx(1.5)
+    assert r.burn_fast == pytest.approx(3.0 / 10.0)
+    assert r.burn_slow == pytest.approx(3.0 / 20.0)
+    assert r.n_completed == 2
+    assert led.worst(4.0) == (pytest.approx(1.5), pytest.approx(0.3))
+    # breach counter: completion 1 landed AT the SLO (no breach),
+    # completion 2 landed 1.5s stale (breach)
+    assert led.counters()["freshness_breaches"] == 1
+
+
+def test_frontier_never_regresses():
+    led = _led()
+    led.register("a")
+    led.deliver(1, ["a"])
+    led.complete(1, (5.0,), t=6.0)
+    led.deliver(2, ["a"])
+    led.complete(2, (4.0,), t=7.0)   # older batch completes later
+    assert led.staleness("a", 8.0) == pytest.approx(3.0)  # frontier 5.0
+
+
+def test_telemetry_channel_and_counters():
+    from repro.serving.telemetry import Telemetry
+    tel = Telemetry()
+    led = _led(telemetry=tel)
+    led.register("a")
+    led.deliver(1, ["a"])
+    led.complete(1, (1.0,), t=1.25)
+    assert tel.channel_count("freshness_staleness") == 1
+    c = led.counters()
+    assert c == {"freshness_queries": 1, "freshness_groups": 1,
+                 "freshness_breaches": 0, "freshness_pending_batches": 0}
+
+
+# -- alias groups -------------------------------------------------------------
+
+def test_alias_shares_primary_frontier():
+    led = _led()
+    led.register("p")
+    led.register("alias", primary="p")
+    assert led.n_groups == 1
+    led.deliver(1, ["p", "alias"])      # one group, deduped inside
+    led.complete(1, (5.0,), t=6.0)
+    assert led.staleness("p", 8.0) == led.staleness("alias", 8.0) \
+        == pytest.approx(3.0)
+    rows = {r.qid: r for r in led.snapshot(8.0)}
+    assert rows["alias"].primary == "p"
+    # group-level accounting: ONE completion, visible through both rows
+    assert rows["p"].n_completed == rows["alias"].n_completed == 1
+
+
+def test_duplicate_registration_rejected():
+    led = _led()
+    led.register("p")
+    with pytest.raises(ValueError, match="already registered"):
+        led.register("p")
+
+
+def test_lazy_registration_via_resolver():
+    led = _led(resolver=lambda: {"x": "p"})
+    led.register("p")
+    led.deliver(1, ["p"])
+    led.complete(1, (2.0,), t=3.0)
+    # "x" first appears mid-stream: the resolver routes it into p's
+    # group, inheriting the already-advanced frontier
+    led.deliver(2, ["x"])
+    assert "x" in led.qids and led.n_groups == 1
+    assert led.staleness("x", 4.0) == pytest.approx(2.0)
+
+
+def test_lazy_registration_without_resolver_owns_group():
+    led = _led()
+    led.deliver(1, ["solo"])
+    assert led.qids == ("solo",) and led.n_groups == 1
+    led.complete(1, (1.0,), t=2.0)
+    assert led.staleness("solo", 3.0) == pytest.approx(2.0)
+
+
+def test_retire_and_reset_keep_membership_semantics():
+    led = _led()
+    led.register("a")
+    led.register("b", primary="a")
+    led.retire("b")
+    assert led.qids == ("a",) and led.n_groups == 1
+    led.retire("a")
+    assert led.qids == () and led.n_groups == 0
+    with pytest.raises(KeyError):
+        led.staleness("a", 1.0)
+    # reset clears accounting but keeps registrations
+    led.register("c")
+    led.deliver(1, ["c"])
+    led.complete(1, (4.0,), t=5.0)
+    led.reset(0.0)
+    assert led.qids == ("c",)
+    assert led.staleness("c", 2.0) == pytest.approx(2.0)
+    assert led.counters()["freshness_breaches"] == 0
+
+
+# -- exactly-once completion --------------------------------------------------
+
+def test_completion_is_exactly_once():
+    led = _led()
+    led.register("a")
+    led.deliver(1, ["a"])
+    led.complete(1, (2.0,), t=3.0)
+    led.complete(1, (9.0,), t=4.0)     # duplicate: silently ignored
+    assert led.staleness("a", 5.0) == pytest.approx(3.0)   # frontier 2.0
+    led.deliver(2, ["a"])
+    with pytest.raises(ValueError, match="already delivered"):
+        led.deliver(2, ["a"])
+
+
+def test_unknown_batch_completion_ignored():
+    led = _led()
+    led.register("a")
+    led.complete(77, (9.0,), t=10.0)   # predates the ledger: no-op
+    assert led.staleness("a", 10.0) == pytest.approx(10.0)
+
+
+def test_idle_snap_requires_truly_idle():
+    led = _led()
+    led.register("a")
+    led.deliver(1, ["a"])
+    led.idle_snap(5.0, pending=0)      # batch in flight: no snap
+    assert led.staleness("a", 5.0) == pytest.approx(5.0)
+    led.complete(1, (1.0,), t=5.5)
+    led.idle_snap(6.0, pending=3)      # queued work: no snap
+    assert led.staleness("a", 6.0) == pytest.approx(5.0)
+    led.idle_snap(6.0, pending=0)      # idle: caught up by definition
+    assert led.staleness("a", 6.0) == pytest.approx(0.0)
+
+
+# -- ack-path consistency (forfeits included) ---------------------------------
+
+def test_eviction_forfeit_advances_frontier():
+    fresh = _led(slo_s=0.5)
+    fresh.register("q")
+    acks = AckLedger(slo_s=0.5)
+    acks.on_complete = fresh.complete
+    fresh.deliver(7, ["q"])
+    acks.deliver(7, (1.0, 2.0), t=2.5, expected={0: 2})
+    # incomplete: the frontier must NOT move on delivery
+    assert fresh.staleness("q", 3.0) == pytest.approx(3.0)
+    acks.ack(0, 7, 3.0)
+    assert fresh.staleness("q", 3.0) == pytest.approx(3.0)  # 1 ack left
+    # the subscriber's eviction path forfeits by calling ack() — the
+    # freshness ledger cannot tell and must not care
+    acks.ack(0, 7, 3.5)
+    assert fresh.staleness("q", 4.0) == pytest.approx(2.0)  # frontier 2.0
+    assert fresh.counters()["freshness_pending_batches"] == 0
+
+
+# -- closed-loop replay vs oracle ---------------------------------------------
+
+class _Recording(FreshnessLedger):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.completions = []
+
+    def complete(self, step, arrivals, t):
+        self.completions.append((step, tuple(arrivals), t))
+        super().complete(step, arrivals, t)
+
+
+@pytest.mark.slow
+def test_closed_loop_replay_matches_oracle():
+    from repro.runtime import (VirtualClock, build_workload, flash_crowd,
+                               run_closed_loop, sim_service_model)
+    sc = flash_crowd(rate=300.0, tick_s=0.1, n_ticks=6, n_vertices=128,
+                     seed=3, closed_loop=True, lag_ref_s=0.5, ack_slo_s=0.5)
+    wl = build_workload(sc, u_max=256)
+    # bank 20 over the 16-signature zoo ⇒ 4 alias pairs share frontiers
+    server = _server(bank=20)
+    fresh = _Recording.from_engine(server.engine, slo_s=sc.ack_slo_s)
+    clock = VirtualClock()
+    run_closed_loop(server, wl, clock=clock,
+                    service_model=sim_service_model(), freshness=fresh)
+    end = clock.now()
+
+    steps = [s for s, _, _ in fresh.completions]
+    assert steps and len(set(steps)) == len(steps)      # exactly-once
+    c = fresh.counters()
+    assert c["freshness_pending_batches"] == 0          # fully drained
+    assert c["freshness_queries"] == 20
+    assert c["freshness_groups"] == 16                  # dedup collapse
+
+    # oracle: every batch fans out to every standing query (the engine
+    # emits one delta per registered query per step), so each group's
+    # frontier is the max arrival over ALL completed batches
+    oracle_frontier = max(max(arr) for _, arr, _ in fresh.completions
+                          if arr)
+    groups = server.engine.alias_groups()
+    for row in fresh.snapshot(end):
+        assert row.frontier == pytest.approx(oracle_frontier)
+        assert row.staleness_s == pytest.approx(end - oracle_frontier)
+        assert row.n_completed == len(fresh.completions)
+        assert row.primary == groups.get(row.qid, row.qid)
+    worst_stal, _ = fresh.worst(end)
+    assert worst_stal == pytest.approx(end - oracle_frontier)
+
+
+@pytest.mark.slow
+def test_stores_bitwise_with_freshness_enabled():
+    from repro.runtime import (VirtualClock, build_workload, flash_crowd,
+                               run_closed_loop, sim_service_model)
+    sc = flash_crowd(rate=300.0, tick_s=0.1, n_ticks=5, n_vertices=128,
+                     seed=7, closed_loop=True, lag_ref_s=0.5, ack_slo_s=0.5)
+    wl = build_workload(sc, u_max=256)
+    model = sim_service_model()
+
+    plain = _server()
+    _, stats_plain, _ = run_closed_loop(plain, wl, clock=VirtualClock(),
+                                        service_model=model)
+    fresh_srv = _server()
+    led = FreshnessLedger.from_engine(fresh_srv.engine, slo_s=sc.ack_slo_s)
+    _, stats_fresh, _ = run_closed_loop(fresh_srv, wl, clock=VirtualClock(),
+                                        service_model=model, freshness=led)
+    assert led.counters()["freshness_queries"] == 4
+    # the ledger is host-side bookkeeping: what the engine computed —
+    # deltas and stores — is bitwise what it computed without it
+    assert len(stats_plain) == len(stats_fresh)
+    for a, b in zip(stats_plain, stats_fresh):
+        assert a.deltas == b.deltas
+        assert a.n_events == b.n_events
+    for i in range(len(plain.stores)):
+        assert plain.stores[i]._patterns == fresh_srv.stores[i]._patterns
+
+
+# -- controller observation extension -----------------------------------------
+
+def test_obs_layout_pinned_with_flag_off():
+    from repro.control import OBS_DIM, ControllerEnv, obs_dim
+    ccfg = ControlConfig()
+    assert ccfg.freshness_obs is False
+    assert obs_dim(ccfg) == OBS_DIM == 12
+    server = _server(bank=2)
+    env = ControllerEnv(server, RuntimeKnobs(server),
+                        AckLedger(slo_s=0.5), ccfg)
+    assert env.observation(0.0).shape == (12,)
+
+
+def test_obs_freshness_extension_appends_staleness_burn():
+    from repro.control import FRESHNESS_OBS_DIM, ControllerEnv, obs_dim
+    ccfg_on = dataclasses.replace(ControlConfig(), freshness_obs=True)
+    assert obs_dim(ccfg_on) == 12 + FRESHNESS_OBS_DIM == 14
+    server = _server(bank=2)
+    knobs = RuntimeKnobs(server)
+    acks = AckLedger(slo_s=0.5)
+    led = _led(slo_s=0.5)
+    led.register("q")                   # frontier 0 ⇒ staleness = now
+    env_on = ControllerEnv(server, knobs, acks, ccfg_on, freshness=led)
+    obs = env_on.observation(4.0)
+    assert obs.shape == (14,)
+    # staleness 4.0s = 8 SLOs ⇒ clipped to 1.0; no burn accounted yet
+    assert obs[12] == pytest.approx(1.0)
+    assert obs[13] == pytest.approx(0.0)
+    # the first 12 dims are exactly the unflagged layout
+    env_off = ControllerEnv(server, knobs, acks, ControlConfig())
+    assert obs[:12] == pytest.approx(env_off.observation(4.0))
+    # flag on but no ledger wired: the pair reads zeros, layout intact
+    env_none = ControllerEnv(server, knobs, acks, ccfg_on)
+    obs_none = env_none.observation(4.0)
+    assert obs_none.shape == (14,)
+    assert obs_none[12] == obs_none[13] == 0.0

@@ -1,0 +1,433 @@
+"""Health watchdog, ops surface, and perf-sentinel tests (DESIGN.md §11).
+
+Pins the live-operability contract:
+  * detectors — executor/ingress stall (heartbeat age, active threads
+    only), queue-saturation dwell (sustained, not instantaneous),
+    partition-overflow proximity, freshness-SLO burn; composite
+    readiness is ``stalled`` > ``degraded`` > ``ok``;
+  * edge-triggered events — the event ring records transitions, one per
+    rising edge, plus ``recovered`` on the way back to ok;
+  * incident dumps — stall / burn rising edges trigger exactly one
+    flight-recorder dump (de-duplicated while the alarm persists);
+  * ops HTTP surface — ``/metrics`` (valid exposition text), ``/health``
+    (503 iff stalled), ``/freshness``, ``/flight``, 404s with a route
+    list, 500 on supplier failure; all over a real loopback socket;
+  * perf-regression sentinel — ``benchmarks/regress.py`` exit codes:
+    0 baseline-vs-itself, 1 on a genuine 2× latency regression or a
+    score drop (negative baselines included), 2 on unusable input;
+    direction metadata prevents "improved goodput read as regressed
+    latency"; sub-floor noise never gates.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from urllib.error import HTTPError
+from urllib.request import urlopen
+
+from repro.obs.freshness import QueryFreshness
+from repro.obs.health import DEGRADED, OK, STALLED, HealthMonitor
+from repro.obs.serve import OpsServer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+class _StubObs:
+    def __init__(self, path="/tmp/flight.000.jsonl"):
+        self.calls = []
+        self.path = path
+
+    def flight_dump(self, reason, triggered=False):
+        self.calls.append((reason, triggered))
+        return self.path
+
+
+class _StubFresh:
+    def __init__(self, staleness=0.0, burn=0.0, slo_s=0.5):
+        self.staleness = staleness
+        self.burn = burn
+        self.slo_s = slo_s
+        self.snaps = []
+
+    def worst(self, now):
+        return self.staleness, self.burn
+
+    def idle_snap(self, now, pending):
+        self.snaps.append((now, pending))
+
+
+def _mon(**kw):
+    kw.setdefault("clock", _Clock())
+    kw.setdefault("stall_after_s", 2.0)
+    return HealthMonitor(**kw)
+
+
+# -- detectors ----------------------------------------------------------------
+
+def test_stall_detector_and_recovery():
+    mon = _mon()
+    mon.beat("executor", 0.0)
+    assert mon.check(1.0) == OK
+    assert mon.check(2.5) == STALLED
+    alarm = mon.status(2.5)["alarms"]["stall"]
+    assert alarm["thread"] == "executor"
+    assert alarm["age_s"] == pytest.approx(2.5)
+    mon.beat("executor", 3.0)           # heartbeat resumes
+    assert mon.check(3.5) == OK
+    assert [e.kind for e in mon.events] == ["stall", "recovered"]
+
+
+def test_inactive_thread_is_not_stalled():
+    mon = _mon()
+    mon.beat("ingress", 0.0)
+    mon.set_inactive("ingress")         # clean exit: drained ≠ stalled
+    assert mon.check(100.0) == OK
+    assert not mon.events
+
+
+def test_stall_event_is_edge_triggered():
+    mon = _mon()
+    mon.beat("executor", 0.0)
+    for t in (3.0, 4.0, 5.0, 6.0):
+        assert mon.check(t) == STALLED
+    assert [e.kind for e in mon.events] == ["stall"]
+
+
+def test_queue_saturation_requires_dwell():
+    fill = {"v": 1.0}
+    mon = _mon(queue_high_frac=0.9, queue_dwell_periods=3)
+    mon.attach_queue(lambda: fill["v"])
+    assert mon.check(1.0) == OK          # 1 saturated period
+    assert mon.check(2.0) == OK          # 2
+    assert mon.check(3.0) == DEGRADED    # 3: sustained
+    fill["v"] = 0.2                      # drains: dwell resets
+    assert mon.check(4.0) == OK
+    fill["v"] = 1.0
+    assert mon.check(5.0) == OK          # counting starts over
+    assert [e.kind for e in mon.events] == ["queue_saturation", "recovered"]
+
+
+def test_partition_pressure():
+    occ = {"v": None}
+    mon = _mon(partition_near_frac=0.9)
+    mon.attach_partition(lambda: occ["v"])
+    assert mon.check(1.0) == OK          # unpartitioned storage: None
+    occ["v"] = 0.95
+    assert mon.check(2.0) == DEGRADED
+    detail = mon.status(2.0)["alarms"]["partition_pressure"]
+    assert detail["occupancy"] == pytest.approx(0.95)
+
+
+def test_freshness_burn_detector_drives_idle_snap():
+    fresh = _StubFresh(staleness=2.0, burn=0.9)
+    mon = _mon(freshness=fresh, burn_degraded=0.5)
+    mon.attach_pending(lambda: 0)
+    assert mon.check(1.0) == DEGRADED
+    assert mon.status(1.0)["alarms"]["freshness_burn"]["burn_fast"] \
+        == pytest.approx(0.9)
+    assert fresh.snaps == [(1.0, 0)]    # the monitor feeds the idle rule
+
+
+def test_composite_readiness_stalled_beats_degraded():
+    fresh = _StubFresh(burn=0.9)
+    mon = _mon(freshness=fresh)
+    mon.beat("executor", 0.0)
+    assert mon.check(5.0) == STALLED
+    assert set(mon.status(5.0)["alarms"]) == {"stall", "freshness_burn"}
+
+
+# -- incident dumps -----------------------------------------------------------
+
+def test_stall_triggers_one_flight_dump():
+    obs = _StubObs()
+    mon = _mon(obs=obs)
+    mon.beat("executor", 0.0)
+    mon.check(3.0)
+    mon.check(4.0)                       # alarm persists: no second dump
+    assert len(obs.calls) == 1
+    reason, triggered = obs.calls[0]
+    assert reason == "watchdog:stall" and triggered
+    assert mon.n_dumps_triggered == 1
+    # recovery then a NEW stall: a fresh incident dumps again
+    mon.beat("executor", 5.0)
+    mon.check(5.5)
+    mon.check(9.0)
+    assert len(obs.calls) == 2
+
+
+def test_burn_triggers_dump_saturation_does_not():
+    obs = _StubObs()
+    fresh = _StubFresh(burn=0.9)
+    mon = _mon(obs=obs, freshness=fresh, queue_dwell_periods=1)
+    mon.attach_queue(lambda: 1.0)
+    assert mon.check(1.0) == DEGRADED    # burn + saturation fire together
+    assert [r for r, _ in obs.calls] == ["watchdog:freshness_burn"]
+
+
+def test_status_document_shape():
+    mon = _mon()
+    mon.beat("executor", 0.0)
+    mon.check(1.0)
+    doc = mon.status(1.0)
+    assert set(doc) == {"state", "alarms", "heartbeats", "n_checks",
+                        "n_dumps_triggered", "events"}
+    assert doc["heartbeats"]["executor"] == {
+        "age_s": pytest.approx(1.0), "active": True}
+    json.dumps(doc)                      # must be JSON-serializable as-is
+
+
+def test_monitor_thread_runs_and_closes():
+    import time
+    mon = _mon(clock=_Clock(), period_s=0.01)
+    mon.start()
+    with pytest.raises(RuntimeError, match="already started"):
+        mon.start()
+    time.sleep(0.1)
+    mon.close()
+    assert mon.n_checks > 0
+    n = mon.n_checks
+    time.sleep(0.05)
+    assert mon.n_checks == n             # really stopped
+
+
+# -- ops HTTP surface ---------------------------------------------------------
+
+def _get(url):
+    try:
+        with urlopen(url, timeout=5) as resp:
+            return (resp.status, resp.read().decode("utf-8"),
+                    resp.headers.get("Content-Type", ""))
+    except HTTPError as e:
+        return e.code, e.read().decode("utf-8"), ""
+
+
+def test_ops_server_routes():
+    from repro.obs import validate_exposition
+    rows = [QueryFreshness("q1", "q0", 1.0, 0.5, 0.1, 0.05, 3)]
+    flights = []
+
+    def flight():
+        flights.append(1)
+        return "/tmp/fl.000.jsonl"
+
+    ops = OpsServer(snapshot=lambda: {"p50_step_ms": 1.5, "steps": 4},
+                    health=lambda: {"state": "ok", "alarms": {}},
+                    freshness=lambda: rows, flight=flight, port=0).start()
+    try:
+        status, text, ctype = _get(ops.url + "/metrics")
+        assert status == 200 and ctype.startswith("text/plain")
+        assert "igpm_p50_step_ms 1.5" in text
+        assert "# HELP igpm_steps" in text and "# TYPE igpm_steps gauge" in text
+        assert validate_exposition(text) == []
+
+        status, body, _ = _get(ops.url + "/health")
+        assert status == 200 and json.loads(body)["state"] == "ok"
+
+        status, body, _ = _get(ops.url + "/freshness/")   # trailing slash ok
+        doc = json.loads(body)
+        assert status == 200
+        assert doc["queries"] == [rows[0]._asdict()]
+
+        status, body, _ = _get(ops.url + "/flight")
+        assert status == 200
+        assert json.loads(body) == {"dumped": True,
+                                    "path": "/tmp/fl.000.jsonl"}
+        assert flights == [1]
+
+        status, body, _ = _get(ops.url + "/nope")
+        assert status == 404
+        assert "/metrics" in json.loads(body)["routes"]
+    finally:
+        ops.close()
+
+
+def test_ops_server_503_when_stalled_and_missing_suppliers_404():
+    state = {"state": "stalled", "alarms": {"stall": {}}}
+    ops = OpsServer(health=lambda: state, port=0).start()
+    try:
+        status, body, _ = _get(ops.url + "/health")
+        assert status == 503 and json.loads(body)["state"] == "stalled"
+        # no snapshot supplier wired: the route is absent, not broken
+        status, _, _ = _get(ops.url + "/metrics")
+        assert status == 404
+    finally:
+        ops.close()
+
+
+def test_ops_server_supplier_failure_is_500():
+    def boom():
+        raise RuntimeError("supplier exploded")
+
+    ops = OpsServer(snapshot=boom, port=0).start()
+    try:
+        status, body, _ = _get(ops.url + "/metrics")
+        assert status == 500
+        assert "supplier exploded" in json.loads(body)["error"]
+    finally:
+        ops.close()
+
+
+# -- perf-regression sentinel -------------------------------------------------
+
+def _summary(tmp_path, name, rows_meta=None, rows=None):
+    path = str(tmp_path / name)
+    doc = {}
+    if rows_meta is not None:
+        doc["rows_meta"] = rows_meta
+    if rows is not None:
+        doc["rows"] = rows
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def _regress(*args):
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "regress.py"),
+         *args],
+        capture_output=True, text=True, cwd=REPO)
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def _lat(v):
+    return {"value": v, "unit": "us", "direction": "lower"}
+
+
+def _score(v):
+    return {"value": v, "unit": "events_per_s", "direction": "higher"}
+
+
+def test_regress_baseline_vs_itself_is_clean(tmp_path):
+    base = _summary(tmp_path, "base.json",
+                    {"s/lat": _lat(1000.0), "s/control/x": _score(-124.0)})
+    code, out = _regress("--baseline", base, "--fresh", base)
+    assert code == 0, out
+    assert "2 rows within tolerance" in out
+
+
+def test_regress_catches_2x_latency_regression(tmp_path):
+    base = _summary(tmp_path, "base.json", {"s/lat": _lat(1000.0)})
+    fresh = _summary(tmp_path, "fresh.json", {"s/lat": _lat(2000.0)})
+    code, out = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 1
+    assert "FAIL s/lat" in out and "grew" in out
+
+
+def test_regress_direction_aware(tmp_path):
+    # goodput DOUBLED and latency HALVED: both are improvements — a
+    # bare-value comparator would call the score move a regression
+    base = _summary(tmp_path, "base.json",
+                    {"s/lat": _lat(2000.0), "s/control/x": _score(100.0)})
+    fresh = _summary(tmp_path, "fresh.json",
+                     {"s/lat": _lat(1000.0), "s/control/x": _score(200.0)})
+    code, out = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 0, out
+
+
+def test_regress_negative_score_drop(tmp_path):
+    # the flash-crowd static_best case: a NEGATIVE higher-is-better score
+    base = _summary(tmp_path, "base.json", {"s/control/x": _score(-124.0)})
+    bad = _summary(tmp_path, "bad.json", {"s/control/x": _score(-300.0)})
+    code, out = _regress("--baseline", base, "--fresh", bad)
+    assert code == 1 and "score dropped" in out
+    ok = _summary(tmp_path, "ok.json", {"s/control/x": _score(-130.0)})
+    code, out = _regress("--baseline", base, "--fresh", ok)
+    assert code == 0, out                # sub-floor wiggle never gates
+
+
+def test_regress_noise_floors(tmp_path):
+    # a 3µs row doubling is noise, not a regression
+    base = _summary(tmp_path, "base.json", {"s/tiny": _lat(3.0)})
+    fresh = _summary(tmp_path, "fresh.json", {"s/tiny": _lat(6.0)})
+    code, _ = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 0
+
+
+def test_regress_direction_change_is_fatal(tmp_path):
+    base = _summary(tmp_path, "base.json", {"s/r": _lat(100.0)})
+    fresh = _summary(tmp_path, "fresh.json", {"s/r": _score(100.0)})
+    code, out = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 1 and "direction changed" in out
+
+
+def test_regress_filters_and_notes(tmp_path):
+    base = _summary(tmp_path, "base.json",
+                    {"a/freshness/x": _lat(100.0), "b/lat": _lat(100.0),
+                     "a/gone": _lat(5.0)})
+    fresh = _summary(tmp_path, "fresh.json",
+                     {"a/freshness/x": _lat(110.0), "b/lat": _lat(9000.0),
+                      "a/new": _lat(5.0)})
+    # the failing row lives in suite b / name lat — both filters dodge it
+    code, out = _regress("--baseline", base, "--fresh", fresh,
+                         "--suites", "a")
+    assert code == 0 and "row vanished: a/gone" in out \
+        and "new row (no baseline): a/new" in out
+    code, _ = _regress("--baseline", base, "--fresh", fresh,
+                       "--rows", "freshness/")
+    assert code == 0
+    code, _ = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 1
+
+
+def test_regress_unusable_input_exit_2(tmp_path):
+    good = _summary(tmp_path, "good.json", {"s/lat": _lat(1.0)})
+    code, out = _regress("--baseline", str(tmp_path / "missing.json"),
+                         "--fresh", good)
+    assert code == 2 and "unusable input" in out
+    other = _summary(tmp_path, "other.json", {"t/other": _lat(1.0)})
+    code, out = _regress("--baseline", good, "--fresh", other)
+    assert code == 2 and "no overlapping rows" in out
+
+
+def test_regress_upgrades_legacy_flat_baseline(tmp_path):
+    # an old summary with only the flat rows map still gates: the
+    # sentinel classifies through the collector's rules
+    base = _summary(tmp_path, "base.json",
+                    rows={"s/serving/bank16": 1000.0,
+                          "s/control/learned/x": 50.0})
+    fresh = _summary(tmp_path, "fresh.json",
+                     {"s/serving/bank16": _lat(5000.0),
+                      "s/control/learned/x": _score(55.0)})
+    code, out = _regress("--baseline", base, "--fresh", fresh)
+    assert code == 1 and "FAIL s/serving/bank16" in out \
+        and "control" not in out.split("FAIL", 1)[1]
+
+
+def test_collect_rows_meta_classifier():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks.collect import row_meta
+    assert row_meta("serving_bench/control/learned/diurnal", -5.0) == {
+        "value": -5.0, "unit": "events_per_s", "direction": "higher"}
+    assert row_meta("serving_bench/serving/bank16", 42.0) == {
+        "value": 42.0, "unit": "us", "direction": "lower"}
+    assert row_meta("serving_bench/freshness/bank64/flash_crowd", 9.0)[
+        "direction"] == "lower"
+
+
+def test_collect_summary_schema(tmp_path):
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks.collect import collect
+    out = str(tmp_path / "S.json")
+    summary = collect(out)
+    assert set(summary) == {"suites", "rows", "rows_meta", "n_suites",
+                            "n_rows"}
+    assert summary["n_rows"] == len(summary["rows"]) \
+        == len(summary["rows_meta"])
+    for key, meta in summary["rows_meta"].items():
+        assert set(meta) == {"value", "unit", "direction"}
+        assert meta["value"] == summary["rows"][key]    # compat view
+        assert (meta["direction"] == "higher") == (
+            key.split("/", 1)[1].startswith("control/"))

@@ -33,8 +33,9 @@ from repro.config.base import (IGPMConfig, ObsConfig, RuntimeConfig,
 from repro.core.query import (decompose, prefix_zoo, query_signature,
                               query_zoo)
 from repro.obs import (NULL_SPAN, NULL_TRACER, FlightRecorder, Obs,
-                       read_jsonl, validate_events, validate_jsonl,
-                       write_chrome, write_jsonl, write_prometheus)
+                       read_jsonl, validate_events, validate_exposition,
+                       validate_jsonl, write_chrome, write_jsonl,
+                       write_prometheus)
 from repro.serving import MatchServer
 from repro.serving.telemetry import (Telemetry, _Ring, percentile_min_count)
 
@@ -223,6 +224,33 @@ def test_flight_triggered_dumps_deduplicate(tmp_path):
     assert fr.dump(reason="manual") is not None
 
 
+def test_flight_concurrent_triggered_dumps_deduplicate(tmp_path):
+    # two triggers race over the SAME evidence (e.g. the watchdog and an
+    # SLO breach in the same instant): exactly one file may be written.
+    # The dump body is serialized under a lock, so the snapshot/dedup/
+    # write sequence cannot interleave.
+    import threading
+    fr = FlightRecorder(4, str(tmp_path / "fl"))
+    fr.push(0, _fake_step_events(0))
+    barrier = threading.Barrier(2)
+    results = []
+
+    def trigger():
+        barrier.wait()
+        results.append(fr.dump(reason="race", triggered=True))
+
+    threads = [threading.Thread(target=trigger) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    paths = [r for r in results if r is not None]
+    assert len(paths) == 1, f"racing triggers wrote {results}"
+    assert fr.n_dumps == 1
+    files = [f for f in os.listdir(tmp_path) if f.startswith("fl.")]
+    assert files == [os.path.basename(paths[0])]
+
+
 def test_slo_trigger_dumps_flight(tmp_path):
     obs = Obs(ObsConfig(enabled=True, flight_n=4, slo_e2e_ms=100.0,
                         flight_path=str(tmp_path / "slo")))
@@ -357,6 +385,39 @@ def test_prometheus_export(tmp_path):
     assert "repro_steps 4" in text
     assert "note" not in text and "nan" not in text
     assert "repro_weird_key_ 2" in text
+    # exposition framing: every sample is announced by HELP + TYPE, and
+    # the whole document passes the format checks
+    assert "# HELP repro_p50_step_ms" in text
+    assert "# TYPE repro_p50_step_ms gauge" in text
+    assert validate_exposition(text) == []
+
+
+def test_metric_name_folding():
+    from repro.obs.export import metric_name
+    assert metric_name("p50_step_ms") == "repro_p50_step_ms"
+    assert metric_name("weird key!", prefix="x") == "x_weird_key_"
+    assert metric_name("9starts_numeric", prefix="") == "_9starts_numeric"
+    assert metric_name("a:b", prefix="ns") == "ns_a:b"  # colons are legal
+
+
+def test_validate_exposition_catches_violations():
+    ok = ("# HELP m_a help\n# TYPE m_a gauge\nm_a 1.5\n")
+    assert validate_exposition(ok) == []
+    assert validate_exposition("") == ["no samples"]
+    # sample with no HELP/TYPE announcement
+    assert validate_exposition("m_a 1.5\n")
+    # malformed value
+    assert validate_exposition(
+        "# HELP m_a h\n# TYPE m_a gauge\nm_a banana\n")
+    # non-finite value
+    assert validate_exposition(
+        "# HELP m_a h\n# TYPE m_a gauge\nm_a nan\n")
+    # duplicate sample for one name
+    assert validate_exposition(
+        "# HELP m_a h\n# TYPE m_a gauge\nm_a 1\nm_a 2\n")
+    # invalid metric name
+    assert validate_exposition(
+        "# HELP 9bad h\n# TYPE 9bad gauge\n9bad 1\n")
 
 
 # -- prefix-sharing population (satellite) ------------------------------------
